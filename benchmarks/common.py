@@ -1,0 +1,27 @@
+"""Shared benchmark utilities. All benchmarks print ``name,us_per_call,derived``
+CSV rows (harness contract) and run at CPU smoke scale unless they read
+dry-run artifacts (full scale, analytic)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            **kwargs) -> float:
+    """Mean wall-time per call in microseconds (block_until_ready fenced)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        ts.append(time.perf_counter() - t0)
+    return float(np.mean(ts)) * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

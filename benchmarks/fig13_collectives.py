@@ -1,0 +1,53 @@
+"""Paper Figs. 13-15 + Tables XIV-XVI: collective and memory-copy
+microbenchmarks.
+
+Full-scale latency/throughput comes from the analytic link model (the
+box has one CPU device); what IS measured here is the per-collective
+*byte volume* each ZeRO stage emits on the production mesh — parsed from
+dry-run HLO — which is the paper's Table XV/XVI quantity. Plus H2D/D2H
+memcpy timing (Fig. 12 analogue) on this host."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.config import TPU_V5E
+
+
+def run():
+    # Fig 12: memcpy (offload path) host<->device on this machine
+    for mb in (1, 16, 64):
+        x = np.ones((mb * 1024 * 1024 // 4,), np.float32)
+        us = time_fn(lambda a: jax.device_put(a), x, warmup=1, iters=3)
+        emit(f"fig12/h2d_{mb}MB", us,
+             f"gbps={mb / 1024 / (us / 1e6):.2f}")
+    # Fig 13-15 analytic: ring all-gather/reduce-scatter/all-reduce time on
+    # the v5e ICI for representative sizes
+    for mb in (16, 256, 1024):
+        bytes_ = mb * 1e6
+        n = 16
+        ag = bytes_ * (n - 1) / n / (4 * TPU_V5E.ici_link_bw)
+        ar = 2 * ag
+        emit(f"fig13/allgather_{mb}MB_ring16", ag * 1e6,
+             f"model=v5e_4links")
+        emit(f"fig13/allreduce_{mb}MB_ring16", ar * 1e6, "2x_ag")
+    # Tables XV/XVI: collective volume per stage from dry-run artifacts
+    d = "results/dryrun"
+    if os.path.isdir(d):
+        for fname in sorted(os.listdir(d)):
+            if "train_4k__single" not in fname:
+                continue
+            r = json.load(open(os.path.join(d, fname)))
+            if r.get("status") != "ok":
+                continue
+            cb = r["cost"]["collective_bytes"]
+            total = r["cost"]["total_collective_bytes"]
+            comp_s = r["roofline"]["compute_s"]
+            coll_s = r["roofline"]["collective_s"]
+            pct = 100 * coll_s / max(comp_s + coll_s, 1e-12)
+            emit(f"tableXVI/{r['arch']}", coll_s * 1e6,
+                 f"coll_GB={total/1e9:.1f};pct_of_step={pct:.0f};"
+                 + ";".join(f"{k}={v/1e9:.1f}GB" for k, v in cb.items()))

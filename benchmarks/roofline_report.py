@@ -1,0 +1,67 @@
+"""Aggregate the dry-run artifacts into the §Roofline table (markdown) and
+choose hillclimb candidates. Run after `python -m repro.launch.dryrun`.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+"""
+import argparse
+import json
+import os
+from collections import defaultdict
+
+
+def load(d):
+    rows = []
+    for fname in sorted(os.listdir(d)):
+        if not fname.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(d, fname)))
+        r["_file"] = fname
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    rf = r["roofline"]
+    c = r["cost"]
+    return (f"| {r['arch']} | {r['shape']} | "
+            f"{'2x16x16' if r['multi_pod'] else '16x16'} | "
+            f"{rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.2f} | "
+            f"{rf['collective_s']*1e3:.1f} | {rf['bottleneck']} | "
+            f"{rf['useful_ratio']*100:.0f}% | {rf['mfu_bound']*100:.1f}% | "
+            f"{r['memory']['peak_bytes_per_device']/1e9:.1f} |")
+
+
+HEADER = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+          "collective (ms) | bound | useful | MFU bound | peak GB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    args = ap.parse_args()
+    rows = [r for r in load(args.dir) if r.get("status") == "ok"]
+    if args.mesh != "both":
+        rows = [r for r in rows if r["multi_pod"] == (args.mesh == "multi")]
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r))
+    skips = [r for r in load(args.dir) if r.get("status") == "skipped"]
+    if skips:
+        print(f"\nskipped (documented): "
+              f"{sorted(set((s['_file'].split('__')[0]) for s in skips))}")
+    # hillclimb candidate selection
+    trains = [r for r in rows if r["shape"] == "train_4k"]
+    if trains:
+        worst = min(trains, key=lambda r: r["roofline"]["mfu_bound"])
+        coll = max(rows, key=lambda r: r["roofline"]["collective_s"])
+        print(f"\nworst train MFU bound: {worst['arch']} "
+              f"({worst['roofline']['mfu_bound']*100:.1f}%)")
+        print(f"most collective-bound: {coll['arch']}/{coll['shape']} "
+              f"({coll['roofline']['collective_s']*1e3:.0f} ms)")
+
+
+if __name__ == "__main__":
+    main()

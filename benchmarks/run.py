@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Wall-clock numbers are CPU
+smoke-scale (trend validation, like the paper's 10-step averages);
+full-scale rows are analytic from the dry-run artifacts (results/dryrun).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table3]
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig6_serving, fig11_gemm, fig13_collectives,
+                        table2_frameworks, table3_techniques,
+                        table5_modulewise, table8_flashattention,
+                        table9_finetuning)
+
+SUITES = {
+    "table2": table2_frameworks.run,      # Megatron vs DeepSpeed
+    "table3": table3_techniques.run,      # optimization matrix
+    "table5": table5_modulewise.run,      # phase + module breakdown
+    "table8": table8_flashattention.run,  # flash vs naive attention
+    "table9": table9_finetuning.run,      # LoRA/QLoRA fine-tuning
+    "fig6": fig6_serving.run,             # serving throughput/latency
+    "fig11": fig11_gemm.run,              # GEMM alignment sweep
+    "fig13": fig13_collectives.run,       # collectives + memcpy
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in SUITES.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0,{traceback.format_exc(limit=1)!r}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Tables V-VII + Fig. 5: phase split (forward/backward/optimizer)
+and module-wise breakdown, wall-clock at smoke scale + the Table VII
+batch-scaling comparison (optimizer share shrinks as batch grows)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core.config import Technique
+from repro.models.lm import LM
+from repro.train.optimizer import AdamWConfig, adamw_apply, init_opt_state
+
+
+def run():
+    cfg = get_config("llama2-7b", reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig()
+    opt = init_opt_state(opt_cfg, params)
+
+    def batch_of(b):
+        return {
+            "tokens": jax.random.randint(jax.random.PRNGKey(0), (b, 128), 0,
+                                         cfg.vocab_size),
+            "labels": jax.random.randint(jax.random.PRNGKey(1), (b, 128), 0,
+                                         cfg.vocab_size),
+        }
+
+    fwd = jax.jit(lambda p, bb: model.loss(p, bb)[0])
+    grad = jax.jit(jax.grad(lambda p, bb: model.loss(p, bb)[0]))
+    optstep = jax.jit(lambda g, o, p: adamw_apply(opt_cfg, g, o, p))
+
+    for b in (2, 16):   # Table V (small) vs Table VII (recompute/large)
+        bb = batch_of(b)
+        us_f = time_fn(fwd, params, bb, warmup=1, iters=3)
+        g = grad(params, bb)
+        us_b = time_fn(grad, params, bb, warmup=1, iters=3) - us_f
+        us_o = time_fn(optstep, g, opt, params, warmup=1, iters=3)
+        total = us_f + max(us_b, 0) + us_o
+        emit(f"table5/forward_bs{b}", us_f, f"pct={100*us_f/total:.1f}")
+        emit(f"table5/backward_bs{b}", max(us_b, 0),
+             f"pct={100*max(us_b,0)/total:.1f}")
+        emit(f"table5/optimizer_bs{b}", us_o, f"pct={100*us_o/total:.1f}")
+    # Table VII claim: optimizer share shrinks with batch size
+    emit("table5/claim_optimizer_share_shrinks", 0, "see pct columns")
+
+    # module-wise (Table VI analogue): time the isolated modules
+    from repro.models import blocks as B
+    from repro.models.params import materialize
+    p_attn = jax.tree_util.tree_map(
+        lambda x: x[0], materialize(B.attn_specs(cfg, 1),
+                                    jax.random.PRNGKey(2)))
+    p_ffn = jax.tree_util.tree_map(
+        lambda x: x[0], materialize(B.ffn_specs(cfg, 1),
+                                    jax.random.PRNGKey(3)))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 128, cfg.d_model),
+                          jnp.bfloat16)
+    pos = jnp.arange(128)[None]
+    attn_fn = jax.jit(lambda xx: B.attn_apply(
+        xx, p_attn, cfg, None, attn_impl="naive", positions=pos)[0])
+    ffn_fn = jax.jit(lambda xx: B.ffn_apply(xx, p_ffn, cfg, None))
+    from repro.models.layers import rmsnorm
+    norm_fn = jax.jit(lambda xx: rmsnorm(xx, p_attn["ln"]))
+    us_a = time_fn(attn_fn, x, warmup=1, iters=5)
+    us_m = time_fn(ffn_fn, x, warmup=1, iters=5)
+    us_n = time_fn(norm_fn, x, warmup=1, iters=5)
+    tot = us_a + us_m + us_n
+    emit("table6/attention", us_a, f"pct={100*us_a/tot:.1f}")
+    emit("table6/mlp", us_m, f"pct={100*us_m/tot:.1f}")
+    emit("table6/rmsnorm", us_n, f"pct={100*us_n/tot:.1f}")

@@ -1,0 +1,44 @@
+"""Paper Table VIII: naive vs FlashAttention module time (fwd + bwd).
+
+On CPU the Pallas kernel runs interpreted (not wall-clock meaningful), so
+the headline numbers compare naive vs the XLA flash-equivalent chunked
+path; the derived column also reports the HBM-traffic ratio from shapes
+(the quantity flash actually improves: no (T,S) materialization)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.models import layers as L
+
+
+def run():
+    b, t, h, d = 2, 512, 8, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, t, h, d), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, h, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, h, d), jnp.bfloat16)
+
+    naive_f = jax.jit(lambda *a: L.attention(*a, mode="naive"))
+    chunk_f = jax.jit(lambda *a: L.attention(*a, mode="chunked"))
+
+    def loss_naive(q, k, v):
+        return jnp.sum(L.attention(q, k, v, mode="naive") ** 2)
+
+    def loss_chunk(q, k, v):
+        return jnp.sum(L.attention(q, k, v, mode="chunked") ** 2)
+
+    g_naive = jax.jit(jax.grad(loss_naive, argnums=(0, 1, 2)))
+    g_chunk = jax.jit(jax.grad(loss_chunk, argnums=(0, 1, 2)))
+
+    us_nf = time_fn(naive_f, q, k, v)
+    us_cf = time_fn(chunk_f, q, k, v)
+    us_nb = time_fn(g_naive, q, k, v)
+    us_cb = time_fn(g_chunk, q, k, v)
+    # HBM-traffic model: naive writes+reads the (B,H,T,S) f32 score matrix
+    score_bytes = b * h * t * t * 4 * 2
+    io_naive = (3 * b * t * h * d * 2) + score_bytes
+    io_flash = (3 * b * t * h * d * 2)
+    emit("table8/naive_fwd", us_nf, f"hbm_bytes={io_naive}")
+    emit("table8/flash_fwd", us_cf, f"hbm_bytes={io_flash}")
+    emit("table8/naive_bwd", us_nb, "")
+    emit("table8/flash_bwd", us_cb, "")
+    emit("table8/traffic_ratio", 0, f"{io_naive/io_flash:.1f}x")

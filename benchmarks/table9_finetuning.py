@@ -1,0 +1,53 @@
+"""Paper Table IX: fine-tuning — Full-FT vs LoRA vs QLoRA (x Z2/Z3/F/R),
+throughput + state bytes; asserts LoRA's optimizer-state collapse and
+QLoRA's weight-memory halving vs LoRA."""
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core.config import technique_from_label
+from repro.models.lm import LM
+from repro.parallel.sharding import make_shard_ctx
+from repro.train.step import init_train_state, build_train_step
+
+ROWS = ["Naive", "L", "QL", "L+F", "L+R", "QL+F"]
+
+
+def run():
+    cfg = get_config("llama2-7b", reduced=True)
+    b, t = 4, 128
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(0), (b, t), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (b, t), 0,
+                                     cfg.vocab_size),
+    }
+    stats = {}
+    for label in ROWS:
+        tech = technique_from_label(label, lora_rank=8)
+        model = LM(cfg, attn_impl="chunked" if tech.flash else "naive",
+                   remat=tech.remat)
+        ctx = make_shard_ctx(cfg, tech, None)
+        state, opt_cfg = init_train_state(model, tech, jax.random.PRNGKey(0))
+        step = jax.jit(build_train_step(model, tech, ctx, opt_cfg))
+        us = time_fn(step, state, batch, warmup=1, iters=3)
+        opt_b = sum(x.size * x.dtype.itemsize for x in
+                    jax.tree_util.tree_leaves(state["opt"]))
+        par_b = 0
+        for l in jax.tree_util.tree_leaves(
+                state["params"],
+                is_leaf=lambda x: hasattr(x, "nbytes") and callable(
+                    getattr(x, "nbytes", None))):
+            par_b += l.nbytes() if callable(getattr(l, "nbytes", None)) \
+                else l.size * l.dtype.itemsize
+        stats[label] = (us, opt_b, par_b)
+        emit(f"table9/{label}", us,
+             f"tokens_per_s={b*t/(us/1e6):.0f};opt_bytes={opt_b};"
+             f"weight_bytes={par_b}")
+    assert stats["L"][1] < 0.2 * stats["Naive"][1], \
+        "LoRA optimizer state must be a small fraction of Full-FT"
+    assert stats["QL"][2] < 0.75 * stats["L"][2], \
+        "QLoRA weights must be well below LoRA's bf16 weights"
+    emit("table9/claims", 0,
+         f"lora_opt_ratio={stats['L'][1]/stats['Naive'][1]:.3f};"
+         f"qlora_weight_ratio={stats['QL'][2]/stats['L'][2]:.3f}")

@@ -1,0 +1,51 @@
+"""Serving example (paper §VI): continuous batching with a paged KV cache
+under a burst of requests — the paper's benchmark protocol (Figs. 6-7) at
+smoke scale, with per-request latency lines and the aggregate CDF summary.
+
+    PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import serving_requests
+from repro.models.lm import LM
+from repro.serving.engine import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--int8-kv", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=4, n_blocks=128, block_size=8,
+                 kv_quant="int8" if args.int8_kv else "none")
+    prompts = serving_requests(args.requests, cfg.vocab_size,
+                               prompt_len=args.prompt_len)
+    for i, p in enumerate(prompts):   # burst arrival, as in the paper
+        eng.submit(Request(rid=i, tokens=p, max_new_tokens=args.max_new))
+    done = eng.run()
+    st = eng.stats()
+    print(f"{'rid':>4s} {'prompt':>7s} {'new':>4s} {'ttft_s':>8s} "
+          f"{'latency_s':>10s}")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"{r.rid:>4d} {len(r.tokens):>7d} {len(r.output):>4d} "
+              f"{r.first_token_time - r.arrival:>8.3f} "
+              f"{r.finish_time - r.arrival:>10.3f}")
+    print(f"\nthroughput {st['throughput_tok_s']:.1f} tok/s   "
+          f"p50 {st['p50_latency_s']:.3f}s  p99 {st['p99_latency_s']:.3f}s  "
+          f"kv_util peak-free {st['kv_utilization']:.2f}")
+    assert len(done) == args.requests
+
+
+if __name__ == "__main__":
+    main()

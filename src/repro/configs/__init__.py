@@ -1,0 +1,56 @@
+"""Architecture registry: 10 assigned archs + the paper's own Llama2 family.
+
+``get_config(name)`` returns the full :class:`ArchConfig`;
+``get_config(name, reduced=True)`` returns the CPU-runnable smoke config.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.core.config import ArchConfig
+
+_ARCH_MODULES = [
+    "qwen3_moe_30b_a3b",
+    "dbrx_132b",
+    "chatglm3_6b",
+    "qwen2_5_14b",
+    "qwen1_5_0_5b",
+    "granite_3_2b",
+    "seamless_m4t_large_v2",
+    "mamba2_130m",
+    "jamba_v0_1_52b",
+    "internvl2_26b",
+    # paper's own models
+    "llama2_7b",
+    "llama2_13b",
+    "llama2_70b",
+]
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def _load() -> None:
+    if _REGISTRY:
+        return
+    for mod_name in _ARCH_MODULES:
+        mod = importlib.import_module(f"repro.configs.{mod_name}")
+        cfg: ArchConfig = mod.CONFIG
+        _REGISTRY[cfg.name] = cfg
+
+
+def list_archs(assigned_only: bool = False) -> List[str]:
+    _load()
+    names = list(_REGISTRY)
+    if assigned_only:
+        names = [n for n in names if not n.startswith("llama2")]
+    return names
+
+
+def get_config(name: str, reduced: bool = False) -> ArchConfig:
+    _load()
+    name = name.replace("_", "-")
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]
+    return cfg.reduced() if reduced else cfg

@@ -1,0 +1,8 @@
+"""Llama2-70B — paper benchmark model (GQA kv=8)."""
+from repro.core.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama2-70b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab_size=32000,
+)

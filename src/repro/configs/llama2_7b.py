@@ -1,0 +1,8 @@
+"""Llama2-7B — the paper's primary benchmark model [arXiv:2307.09288]."""
+from repro.core.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama2-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, vocab_size=32000,
+)

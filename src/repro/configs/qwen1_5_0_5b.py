@@ -1,0 +1,21 @@
+"""Qwen1.5-0.5B [hf:Qwen/Qwen1.5-0.5B].
+
+24L d_model=1024 16H (MHA kv=16) d_ff=2816, vocab 151936, QKV bias.
+Tiny model: exercises the paper's 'communication dominates small models'
+regime (Table XVI).
+"""
+from repro.core.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=2816,
+    vocab_size=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+)

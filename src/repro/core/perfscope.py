@@ -1,0 +1,134 @@
+"""perfscope — the paper's measurement apparatus (§III-B, Tables V-VII, X-XI).
+
+Module-wise and phase-wise wall-clock timing for *real* (CPU smoke-scale)
+runs, plus an HLO-derived breakdown for full-scale dry-runs where wall-clock
+is unavailable.
+
+Wall-clock mode: functions are wrapped so each call region is timed with
+``block_until_ready`` fences (the torch.profiler analogue — adds sync
+overhead, so use on micro runs only, exactly as the paper does with 10-step
+averages).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+class Timer:
+    def __init__(self):
+        self.records: Dict[str, List[float]] = defaultdict(list)
+
+    @contextlib.contextmanager
+    def region(self, name: str):
+        t0 = time.perf_counter()
+        yield
+        self.records[name].append(time.perf_counter() - t0)
+
+    def timed(self, name: str, fn: Callable) -> Callable:
+        def wrapper(*a, **kw):
+            t0 = time.perf_counter()
+            out = fn(*a, **kw)
+            jax.block_until_ready(out)
+            self.records[name].append(time.perf_counter() - t0)
+            return out
+        return wrapper
+
+    def summary(self, drop_warmup: int = 1) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for name, ts in self.records.items():
+            ts = ts[drop_warmup:] if len(ts) > drop_warmup else ts
+            out[name] = {
+                "mean_ms": float(np.mean(ts)) * 1e3,
+                "std_ms": float(np.std(ts)) * 1e3,
+                "calls": len(ts),
+            }
+        return out
+
+    def table(self) -> str:
+        s = self.summary()
+        total = sum(v["mean_ms"] for v in s.values()) or 1.0
+        lines = [f"{'region':<28s}{'mean_ms':>10s}{'pct':>7s}{'calls':>7s}"]
+        for name, v in sorted(s.items(), key=lambda kv: -kv[1]["mean_ms"]):
+            lines.append(f"{name:<28s}{v['mean_ms']:>10.3f}"
+                         f"{100*v['mean_ms']/total:>6.1f}%{v['calls']:>7d}")
+        return "\n".join(lines)
+
+
+def phase_split(model, train_step_parts: Dict[str, Callable],
+                *args) -> Dict[str, float]:
+    """Time forward / backward / optimizer phases separately (Table V/VII).
+    train_step_parts: {'forward': fn, 'backward': fn, 'optimizer': fn}."""
+    timer = Timer()
+    for name, fn in train_step_parts.items():
+        timed = timer.timed(name, fn)
+        for _ in range(3):
+            timed(*args)
+    return {k: v["mean_ms"] for k, v in timer.summary().items()}
+
+
+# ---- HLO-derived module breakdown (full-scale, no wall clock) ----
+
+_MODULE_PATTERNS = {
+    "Embedding": ("take", "embed"),
+    "QKV": ("wq", "wk", "wv", "qkv"),
+    "RoPE": ("rope", "apply_rope"),
+    "Attention(core)": ("attention", "flash", "bkgts", "softmax"),
+    "Output(wo)": ("wo",),
+    "MLP": ("w_gate", "w_up", "w_down", "swiglu", "ffn"),
+    "MoE": ("moe", "expert", "router", "all_to_all"),
+    "SSD": ("ssd", "mamba", "conv"),
+    "RMSNorm": ("rmsnorm", "rsqrt"),
+    "Head/Loss": ("logsumexp", "head", "block_ce"),
+    "Optimizer": ("adamw", "opt"),
+}
+
+
+def hlo_module_breakdown(hlo_text: str) -> Dict[str, float]:
+    """Attribute trip-count-weighted FLOPs to model modules using op_name
+    metadata (jax traces carry python function names through to HLO)."""
+    from repro.core.hloanalysis import HLOModule, _SHAPE_RE
+    import re
+    mod = HLOModule(hlo_text)
+    mult = mod._multipliers()
+    out: Dict[str, float] = defaultdict(float)
+    for comp, insts in mod.computations.items():
+        m = mult.get(comp, 0.0)
+        if m <= 0:
+            continue
+        shapes = {i.name: i.result_shape for i in insts}
+        for inst in insts:
+            if inst.op != "dot":
+                continue
+            mm = re.search(r'op_name="([^"]*)"', inst.line)
+            opname = (mm.group(1) if mm else "").lower()
+            res = _SHAPE_RE.search(inst.result_shape)
+            n = 1
+            if res:
+                for d in res.group(2).split(","):
+                    if d:
+                        n *= int(d)
+            lhs_c = re.search(r"lhs_contracting_dims={([0-9,]*)}", inst.line)
+            args = re.findall(r"%([\w\.\-]+)", inst.line.split("(", 1)[1])
+            k = 1
+            if lhs_c and args and args[0] in shapes:
+                sm = _SHAPE_RE.search(shapes[args[0]])
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for ci in lhs_c.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+            flops = 2.0 * n * k * m
+            bucket = "Other"
+            for name, pats in _MODULE_PATTERNS.items():
+                if any(p in opname for p in pats):
+                    bucket = name
+                    break
+            out[bucket] += flops
+    return dict(out)

@@ -1,0 +1,117 @@
+"""End-to-end Trainer: data pipeline -> jit train_step -> metrics ->
+checkpoint/restart. Fault tolerance: SIGTERM triggers an emergency
+checkpoint; ``resume='auto'`` restores the latest committed step (on any
+mesh shape — elastic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ArchConfig, ShapeSpec, Technique
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.perfscope import Timer
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.launch.build import build_train
+from repro.models.lm import padded_vocab
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_train_state
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    resume: str = "none"           # none | auto
+    seed: int = 0
+    async_checkpoint: bool = True
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec,
+                 technique: Technique, tcfg: TrainerConfig,
+                 mesh=None, opt_cfg: Optional[AdamWConfig] = None):
+        self.cfg, self.shape, self.tcfg = cfg, shape, tcfg
+        step_fn, (state_abs, batch_abs), ctx, model = build_train(
+            cfg, shape, technique, mesh, opt_cfg)
+        self.ctx, self.model = ctx, model
+        self.technique = ctx.technique
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+        self.state_abs = state_abs
+        self.state = init_train_state(model, self.technique,
+                                      jax.random.PRNGKey(tcfg.seed),
+                                      self.opt_cfg)[0]
+        if ctx.mesh is not None:
+            from repro.train.step import train_state_shardings
+            sh = train_state_shardings(self.state, model, ctx)
+            self.state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s) if s is not None else x,
+                self.state, sh)
+        data_cfg = DataConfig(vocab_size=cfg.vocab_size,
+                              seq_len=shape.seq_len,
+                              global_batch=shape.global_batch,
+                              seed=tcfg.seed)
+        self.data = SyntheticLM(data_cfg)
+        self.ckpt = (CheckpointManager(tcfg.checkpoint_dir)
+                     if tcfg.checkpoint_dir else None)
+        self.timer = Timer()
+        self.start_step = 0
+        self._interrupted = False
+        if tcfg.resume == "auto" and self.ckpt and \
+                self.ckpt.latest_step() is not None:
+            self.state, self.start_step = self.ckpt.restore(self.state)
+        # SIGTERM (preemption) -> emergency checkpoint at the step boundary
+        try:
+            signal.signal(signal.SIGTERM, self._on_sigterm)
+        except ValueError:
+            pass  # not in main thread (tests)
+
+    def _on_sigterm(self, *_):
+        self._interrupted = True
+
+    def _batch_for(self, step: int):
+        b = self.data.batch_at(step)
+        if self.ctx.mesh is not None:
+            sh = self.ctx.batch_sharding(2)
+            b = {k: jax.device_put(v, sh) for k, v in b.items()}
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    def run(self) -> Dict[str, Any]:
+        history = []
+        step = self.start_step
+        while step < self.tcfg.steps and not self._interrupted:
+            batch = self._batch_for(step)
+            with self.timer.region("step"):
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+            step += 1
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                history.append(m)
+            if self.ckpt and (step % self.tcfg.checkpoint_every == 0):
+                self.ckpt.save(step, self.state,
+                               blocking=not self.tcfg.async_checkpoint)
+        if self._interrupted and self.ckpt:
+            self.ckpt.save(step, self.state, blocking=True)
+        if self.ckpt:
+            self.ckpt.wait()
+        tokens_per_step = self.shape.global_batch * self.shape.seq_len
+        times = self.timer.summary()
+        step_ms = times.get("step", {}).get("mean_ms", 0.0)
+        return {
+            "history": history,
+            "final_step": step,
+            "tokens_per_s": (tokens_per_step / (step_ms / 1e3)
+                             if step_ms else 0.0),
+            "step_ms": step_ms,
+        }

@@ -1,0 +1,259 @@
+"""FlashAttention for TPU in Pallas (paper §II-E, Table VIII).
+
+TPU adaptation of the IO-aware insight: tile Q/K/V into VMEM blocks sized
+for the 128x128 MXU, run online softmax across KV blocks carried in VMEM
+scratch (f32), and never materialize the (T, S) score matrix in HBM.
+The backward pass recomputes P from the saved LSE (two kernels: dKV with Q
+innermost; dQ with KV innermost) — the standard flash bwd decomposition.
+
+Layout contract (ops.py handles transposes/GQA/padding):
+  q: (B, H, T, D);  k, v: (B, K, S, D) with H = K * G
+Block sizes default to the 128-aligned MXU tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# Forward
+# ==========================================================================
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                *, bq, bk, causal, scale, n_kv_blocks):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (j * bk <= i * bq + bq - 1) if causal else True
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_ref[...] + jnp.log(l))
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, bq: int = 128,
+                        bk: int = 128, interpret: bool = True,
+                        sm_scale: float = None):
+    b, h, t, d = q.shape
+    n_kv, s = k.shape[1], k.shape[2]
+    g = h // n_kv
+    bq, bk = min(bq, t), min(bk, s)
+    assert t % bq == 0 and s % bk == 0, (t, bq, s, bk)
+    grid = (b, h, t // bq, s // bk)
+    kernel = functools.partial(_fwd_kernel, bq=bq, bk=bk, causal=causal,
+                               scale=sm_scale or 1.0 / np.sqrt(d),
+                               n_kv_blocks=s // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, t, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ==========================================================================
+# Backward: dKV kernel (grid over KV blocks, Q innermost) and
+#           dQ kernel  (grid over Q blocks, KV innermost)
+# ==========================================================================
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc,
+                    *, bq, bk, causal, scale, n_q_blocks):
+    j = pl.program_id(2)     # kv block
+    i = pl.program_id(3)     # q block (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    run = (i * bq + bq - 1 >= j * bk) if causal else True
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)                    # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)                  # (bq, D)
+        lse = lse_ref[0, 0]                                    # (bq, 1)
+        delta = delta_ref[0, 0]                                # (bq, 1)
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        p = jnp.exp(s - lse)                                   # (bq, bk)
+        # dv += p^T do
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale                          # (bq, bk)
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_q_blocks - 1)
+    def _finish():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, dq_acc, *, bq, bk, causal, scale, n_kv_blocks):
+    i = pl.program_id(2)     # q block
+    j = pl.program_id(3)     # kv block (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    run = (j * bk <= i * bq + bq - 1) if causal else True
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        p = jnp.exp(s - lse)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finish():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, out, lse, do, *, causal: bool = True,
+                        bq: int = 128, bk: int = 128, interpret: bool = True,
+                        sm_scale: float = None):
+    b, h, t, d = q.shape
+    n_kv, s = k.shape[1], k.shape[2]
+    g = h // n_kv
+    bq, bk = min(bq, t), min(bk, s)
+    delta = jnp.sum(out.astype(jnp.float32) * do.astype(jnp.float32),
+                    axis=-1, keepdims=True)                     # (B,H,T,1)
+    scale = sm_scale or 1.0 / np.sqrt(d)
+    common_in = [
+        pl.BlockSpec((1, 1, bq, d), lambda b_, h_, j, i: (b_, h_, i, 0)),
+        pl.BlockSpec((1, 1, bk, d), lambda b_, h_, j, i: (b_, h_ // g, j, 0)),
+        pl.BlockSpec((1, 1, bk, d), lambda b_, h_, j, i: (b_, h_ // g, j, 0)),
+        pl.BlockSpec((1, 1, bq, d), lambda b_, h_, j, i: (b_, h_, i, 0)),
+        pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, j, i: (b_, h_, i, 0)),
+        pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, j, i: (b_, h_, i, 0)),
+    ]
+    # dKV: per-(kv-head) accumulation — grid over KV heads, sum over the G
+    # query heads of the group happens outside (cheap reshape-sum).
+    dkq, dvq = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, bq=bq, bk=bk, causal=causal,
+                          scale=scale, n_q_blocks=t // bq),
+        grid=(b, h, s // bk, t // bq),
+        in_specs=common_in,
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, j, i: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, j, i: (b_, h_, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, d), jnp.float32),
+                        pltpu.VMEM((bk, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    dk = dkq.reshape(b, n_kv, g, s, d).sum(axis=2).astype(k.dtype)
+    dv = dvq.reshape(b, n_kv, g, s, d).sum(axis=2).astype(v.dtype)
+
+    def dq_index(b_, h_, i, j):
+        return (b_, h_, i, 0)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, bq=bq, bk=bk, causal=causal,
+                          scale=scale, n_kv_blocks=s // bk),
+        grid=(b, h, t // bq, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), dq_index),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

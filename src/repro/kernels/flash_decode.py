@@ -1,0 +1,119 @@
+"""Flash-decoding for TPU: single-token attention against a long KV cache,
+split over KV blocks with online softmax, emitting (o, m, l) partials so a
+sequence-sharded cache (model-axis, see DESIGN §4) can LSE-merge across
+shards with one tiny collective.
+
+q: (B, H, D); k, v: (B, K, S, D); lengths: (B,) valid prefix lengths.
+Supports int8 KV cache (LightLLM 'Int8KV' analogue): pass per-(position)
+scales and the kernel dequantizes block-wise in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, mm_ref, ll_ref, *, bk, scale, n_blocks, g):
+    jb = pl.program_id(2)
+
+    @pl.when(jb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mm_ref[...] = jnp.full_like(mm_ref, NEG_INF)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    length = len_ref[0]
+    run = jb * bk < length
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bk)
+        kpos = jb * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = mm_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        ll_ref[...] = ll_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        mm_ref[...] = m_new
+
+    @pl.when(jb == n_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)   # unnormalized
+        m_ref[0, 0] = mm_ref[...]
+        l_ref[0, 0] = ll_ref[...]
+
+
+def flash_decode_partial(q, k, v, lengths, *, bk: int = 256,
+                         interpret: bool = True, sm_scale: float = None):
+    """Returns unnormalized (o (B,H,D) f32, m (B,H,1), l (B,H,1)); caller
+    merges across shards then normalizes: out = o_merged / l_merged."""
+    b, h, d = q.shape
+    n_kv, s = k.shape[1], k.shape[2]
+    g = h // n_kv
+    bk = min(bk, s)
+    assert s % bk == 0
+    qg = q.reshape(b, n_kv, g, d)
+    kernel = functools.partial(_decode_kernel, bk=bk,
+                               scale=(sm_scale or 1.0 / np.sqrt(d)),
+                               n_blocks=s // bk, g=g)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, n_kv, s // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, k_, j: (b_,)),
+            pl.BlockSpec((1, 1, g, d), lambda b_, k_, j: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, k_, j: (b_, k_, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, k_, j: (b_, k_, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, k_, j: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda b_, k_, j: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda b_, k_, j: (b_, k_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_kv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return (o.reshape(b, h, d), m.reshape(b, h, 1), l.reshape(b, h, 1))
+
+
+def flash_decode(q, k, v, lengths, *, bk: int = 256, interpret: bool = True,
+                 sm_scale: float = None):
+    o, m, l = flash_decode_partial(q, k, v, lengths, bk=bk,
+                                   interpret=interpret, sm_scale=sm_scale)
+    return (o / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def merge_partials(parts):
+    """LSE-merge a list of (o, m, l) partials (e.g. gathered across the
+    model axis for a sequence-sharded cache)."""
+    os_, ms, ls = zip(*parts)
+    m_glob = functools.reduce(jnp.maximum, ms)
+    o = sum(o_ * jnp.exp(m_ - m_glob) for o_, m_ in zip(os_, ms))
+    l = sum(l_ * jnp.exp(m_ - m_glob) for l_, m_ in zip(ls, ms))
+    return o / jnp.maximum(l, 1e-30)

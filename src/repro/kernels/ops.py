@@ -1,0 +1,161 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Contracts match models/layers.py ('pallas' attention mode) and models/ssd.py
+('pallas' SSD impl). On non-TPU backends the kernels execute in interpret
+mode (Python interpretation of the kernel body — correct but slow), so
+tests/smoke runs validate the real kernel logic on CPU while the dry-run
+uses the XLA flash-equivalent path (see DESIGN §8).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import flash_decode as fd
+from repro.kernels import rmsnorm as rn
+from repro.kernels import ssd as ssdk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult: int, axis: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+# --------------------------------------------------------------------------
+# flash attention (training/prefill) with custom VJP
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal: bool, bq: int, bk: int, sm_scale: float):
+    out, _ = fa.flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
+                                    interpret=_interpret(), sm_scale=sm_scale)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, bq, bk, sm_scale):
+    out, lse = fa.flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
+                                      interpret=_interpret(), sm_scale=sm_scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, bq, bk, sm_scale, res, do):
+    q, k, v, out, lse = res
+    dq, dk, dv = fa.flash_attention_bwd(q, k, v, out, lse, do, causal=causal,
+                                        bq=bq, bk=bk, interpret=_interpret(),
+                                        sm_scale=sm_scale)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    kv_len=None, bq: int = 128, bk: int = 128) -> jax.Array:
+    """q (B,T,H,D); k,v (B,S,K,D) — models/layers.py layout. q_offset/kv_len
+    are unsupported here (use flash_decode for cached decode)."""
+    del q_offset, kv_len
+    b, t, h, d = q.shape
+    qt = jnp.swapaxes(q, 1, 2)            # (B,H,T,D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    dpad = (-d) % 128
+    if dpad:  # pad head_dim to the 128-lane boundary
+        qt, _ = _pad_to(qt, 128, 3)
+        kt, _ = _pad_to(kt, 128, 3)
+        vt, _ = _pad_to(vt, 128, 3)
+    bq_eff = min(bq, t)
+    bk_eff = min(bk, kt.shape[2])
+    out = _flash(qt, kt, vt, causal, bq_eff, bk_eff, 1.0 / float(np.sqrt(d)))
+    if dpad:
+        out = out[..., :d]
+    return jnp.swapaxes(out, 1, 2)
+
+
+# --------------------------------------------------------------------------
+# flash decode
+# --------------------------------------------------------------------------
+
+
+def flash_decode(q, k, v, lengths, *, bk: int = 256) -> jax.Array:
+    """q (B,1,H,D) or (B,H,D); k,v (B,S,K,D) cache; lengths (B,)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    b, h, d = q.shape
+    kt = jnp.swapaxes(k, 1, 2)            # (B,K,S,D)
+    vt = jnp.swapaxes(v, 1, 2)
+    dpad = (-d) % 128
+    if dpad:
+        q, _ = _pad_to(q, 128, 2)
+        kt, _ = _pad_to(kt, 128, 3)
+        vt, _ = _pad_to(vt, 128, 3)
+    out = fd.flash_decode(q, kt, vt, lengths, bk=min(bk, kt.shape[2]),
+                          interpret=_interpret(),
+                          sm_scale=1.0 / float(np.sqrt(d)))
+    if dpad:
+        out = out[..., :d]
+    return out[:, None] if squeeze else out
+
+
+# --------------------------------------------------------------------------
+# SSD
+# --------------------------------------------------------------------------
+
+
+def ssd(x, B, C, dt, A, D, chunk: int = 128) -> Tuple[jax.Array, jax.Array]:
+    """Same contract as models/ssd.ssd_chunked_ref: x (B,T,H,P),
+    B/C (B,T,G,N), dt (B,T,H) f32, A (H,), D (H,)."""
+    bsz, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    xdt = (x.astype(jnp.float32) * dt[..., None])
+    xk = jnp.swapaxes(xdt, 1, 2)                           # (B,H,T,P)
+    bk_ = jnp.swapaxes(B.astype(jnp.float32), 1, 2)        # (B,G,T,N)
+    ck_ = jnp.swapaxes(C.astype(jnp.float32), 1, 2)
+    a = jnp.swapaxes(dt * A[None, None, :], 1, 2)          # (B,H,T)
+    ppad = (-p) % 128
+    npad = (-n) % 128
+    if ppad:
+        xk, _ = _pad_to(xk, 128, 3)
+    if npad:
+        bk_, _ = _pad_to(bk_, 128, 3)
+        ck_, _ = _pad_to(ck_, 128, 3)
+    tpad = (-t) % chunk
+    if tpad:
+        xk = jnp.pad(xk, ((0, 0), (0, 0), (0, tpad), (0, 0)))
+        bk_ = jnp.pad(bk_, ((0, 0), (0, 0), (0, tpad), (0, 0)))
+        ck_ = jnp.pad(ck_, ((0, 0), (0, 0), (0, tpad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, tpad)))
+    y, state = ssdk.ssd_chunked_kernel(xk, bk_, ck_, a, chunk=chunk,
+                                       interpret=_interpret())
+    y = y[:, :, :t, : p]
+    state = state[:, :, :n, :p]                            # (B,H,N,P)
+    y = jnp.swapaxes(y, 1, 2) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), jnp.swapaxes(state, 2, 3)    # state (B,H,P,N)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm / int8 matmul
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-5) -> jax.Array:
+    return rn.rmsnorm(x, w, eps, interpret=_interpret())
+
+
+def int8_matmul(x, w_q, scale) -> jax.Array:
+    from repro.kernels.quant_matmul import int8_matmul as k
+    return k(x, w_q, scale, interpret=_interpret())

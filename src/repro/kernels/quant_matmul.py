@@ -1,0 +1,63 @@
+"""Dequant-fused int8 matmul (paper §II-E quantization; ZeroQuant-style
+weight-only int8). The weight stays int8 in HBM; each (bk, bn) tile is
+dequantized in VMEM right before the MXU dot — halving weight HBM traffic
+versus dequantize-then-matmul.
+
+x (M, K) bf16 @ w_q (K, N) int8 with row scales (K, 1) -> (M, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k_blocks):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                 # (bm, bk)
+    w = q_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kb == n_k_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def int8_matmul(x, w_q, scale, *, bm: int = 256, bn: int = 256,
+                bk: int = 512, interpret: bool = True):
+    orig_lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w_q.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    while m % bm:
+        bm //= 2
+    while n % bn:
+        bn //= 2
+    while k % bk:
+        bk //= 2
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k_blocks=k // bk),
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((bk, bn), lambda i, j, kb: (kb, j)),
+            pl.BlockSpec((bk, 1), lambda i, j, kb: (kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x2, w_q, scale)
+    return out.reshape(orig_lead + (n,))

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+These are *definitional* implementations — no tiling, no online softmax —
+so kernel bugs cannot hide in shared code.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                        kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B,T,H,D); k,v: (B,S,K,D), H = K*G. Softmax in f32."""
+    b, t, h, d = q.shape
+    s, n_kv = k.shape[1], k.shape[2]
+    qg = q.reshape(b, t, n_kv, h // n_kv, d)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask = (jnp.arange(t)[:, None] + q_offset) >= jnp.arange(s)[None, :]
+    mask = mask[None, None, None]
+    if kv_len is not None:
+        mask = jnp.logical_and(
+            mask, (jnp.arange(s)[None, :] < kv_len[:, None])
+            [:, None, None, None, :])
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, lengths) -> jax.Array:
+    """Decode: q (B,1,H,D) against cache k/v (B,S,K,D) masked by lengths."""
+    return flash_attention_ref(q, k, v, causal=False, kv_len=lengths)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def ssd_ref(x, B, C, dt, A, D, chunk: int = 64):
+    """Sequential (definitional) SSD recurrence — O(T) scan, no chunking.
+    Shapes as models/ssd.py. Returns (y, final_state)."""
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+
+    def step(state, inp):
+        xt, Bt, Ct, dtt = inp                        # (B,H,P),(B,G,N),...,(B,H)
+        da = jnp.exp(dtt * A[None, :])               # (B,H)
+        xg = (xt * dtt[..., None]).reshape(b, g, hg, p)
+        upd = jnp.einsum("bghp,bgn->bghpn", xg, Bt)
+        s = state * da.reshape(b, g, hg)[..., None, None] + upd
+        y = jnp.einsum("bgn,bghpn->bghp", Ct, s)
+        return s, y.reshape(b, h, p)
+
+    s0 = jnp.zeros((b, g, hg, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), s_final.reshape(b, h, p, n)
+
+
+def int8_matmul_ref(x, q, scale) -> jax.Array:
+    """x (..., K) @ dequant(q (K, N), scale (K, 1) rowwise-over-K)."""
+    w = q.astype(jnp.float32) * scale.astype(jnp.float32)
+    return jnp.einsum("...k,kn->...n", x.astype(jnp.float32), w
+                      ).astype(x.dtype)

@@ -1,0 +1,103 @@
+"""Mamba-2 SSD chunked kernel for TPU (models/ssd.py is the oracle).
+
+TPU adaptation of the SSD insight: each chunk is an MXU-friendly block —
+(C Bᵀ ∘ L) x is three (Q,N)/(Q,Q)/(Q,P) matmuls — while the inter-chunk
+state (N, P per head, f32) is carried in VMEM scratch across the sequential
+chunk grid dimension, exactly like flash attention's softmax state. This
+replaces the CUDA scan kernels of the original with systolic-array matmuls.
+
+Layout contract (ops.py prepares): per (batch, head) streams
+  x:  (B, H, T, P)  — already dt-scaled (xdt = x * dt)
+  b/c:(B, G, T, N)
+  a:  (B, H, T)     — dt * A (negative decay log)
+Grid (B, H, T/Q): chunk axis innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, a_ref, y_ref, state_out_ref, state_ref,
+                *, q, n, p, n_chunks):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xc = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    bc = b_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    cc = c_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    ac = a_ref[0, 0, 0].astype(jnp.float32)       # (1, Q) row vector
+    cums = jnp.cumsum(ac, axis=-1)                # (1, Q)
+    total = cums[0, q - 1]
+
+    # --- intra-chunk: (C Bᵀ ∘ L) x ---
+    seg = cums.reshape(q, 1) - cums.reshape(1, q)              # (Q, Q)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    lmat = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(cc, bc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * lmat, xc, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # --- inter-chunk: y += (C exp(cums)) @ S_prev ---
+    s_prev = state_ref[...]                                    # (N, P)
+    c_dec = cc * jnp.exp(cums.reshape(q, 1))
+    y += jax.lax.dot_general(c_dec, s_prev, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # --- state update: S = exp(total) S_prev + (B ∘ decay)ᵀ x ---
+    b_dec = bc * jnp.exp(total - cums.reshape(q, 1))
+    s_new = s_prev * jnp.exp(total) + jax.lax.dot_general(
+        b_dec, xc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    state_ref[...] = s_new
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _emit():
+        state_out_ref[0, 0] = s_new
+
+
+def ssd_chunked_kernel(xdt, b, c, a, *, chunk: int = 128,
+                       interpret: bool = True):
+    """xdt (B,H,T,P) f32/bf16, b/c (B,G,T,N), a (B,H,T) f32.
+    Returns (y (B,H,T,P) f32, final_state (B,H,N,P) f32)."""
+    bsz, h, t, p = xdt.shape
+    g, n = b.shape[1], b.shape[3]
+    gsz = h // g
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    n_chunks = t // q
+    a3 = a.reshape(bsz, h, n_chunks, q).reshape(bsz, h, n_chunks, 1, q)
+    kernel = functools.partial(_ssd_kernel, q=q, n=n, p=p, n_chunks=n_chunks)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda b_, h_, cix: (b_, h_, cix, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda b_, h_, cix: (b_, h_ // gsz, cix, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda b_, h_, cix: (b_, h_ // gsz, cix, 0)),
+            pl.BlockSpec((1, 1, 1, 1, q), lambda b_, h_, cix: (b_, h_, cix, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda b_, h_, cix: (b_, h_, cix, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_, cix: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, t, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xdt, b, c, a3)
+    return y, state

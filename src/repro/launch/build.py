@@ -1,0 +1,221 @@
+"""Builders: (arch x shape x technique x mesh) -> jit-able fn + abstract args.
+
+Used by the dry-run (ShapeDtypeStruct stand-ins, zero allocation), the
+benchmarks, and the real train/serve launchers (which materialize the same
+trees instead of abstracting them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.config import ArchConfig, ShapeSpec, Technique
+from repro.models.lm import LM
+from repro.parallel.sharding import ShardCtx, make_shard_ctx, state_shardings, \
+    logical_by_path_of
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_train_state, build_train_step, \
+    train_state_shardings
+
+
+def make_model(cfg: ArchConfig, technique: Technique, ctx) -> LM:
+    attn_impl = "chunked" if technique.flash else "naive"
+    return LM(cfg, attn_impl=attn_impl, ctx=ctx, remat=technique.remat)
+
+
+def _sds(shape, dtype, sharding=None):
+    if sharding is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _attach(abstract_tree, sharding_tree):
+    return jax.tree_util.tree_map(
+        lambda a, s: _sds(a.shape, a.dtype, s), abstract_tree, sharding_tree)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, ctx: ShardCtx,
+                with_labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training / prefill batch stand-ins ({tokens, labels, frontend...})."""
+    b, t = shape.global_batch, shape.seq_len
+    mesh = ctx.mesh
+    dp = ctx.dp_spec_entry if mesh is not None else None
+
+    def sh(*spec):
+        return NamedSharding(mesh, P(*spec)) if mesh is not None else None
+
+    def dp_of(dim):
+        return ctx._dp(dim) if mesh is not None else None
+
+    n_tok = t
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        n_tok = t - cfg.frontend_len
+        out["frontend_embeds"] = _sds((b, cfg.frontend_len, cfg.d_model),
+                                      jnp.bfloat16, sh(dp_of(b), None, None))
+    if cfg.family == "encdec":
+        out["frontend_embeds"] = _sds((b, cfg.frontend_len, cfg.d_model),
+                                      jnp.bfloat16, sh(dp_of(b), None, None))
+    out["tokens"] = _sds((b, n_tok), jnp.int32, sh(dp_of(b), None))
+    if with_labels:
+        out["labels"] = _sds((b, n_tok), jnp.int32, sh(dp_of(b), None))
+    return out
+
+
+def cache_shardings(ctx: ShardCtx, cache_abs):
+    """NamedShardings for a stacked decode cache."""
+    mesh = ctx.mesh
+
+    def f(path, leaf):
+        name = jax.tree_util.keystr(path)
+        shp = leaf.shape
+        if name.endswith("['k']") or name.endswith("['v']"):
+            spec = ctx.spec_for("kv_cache_stack", shp)
+        elif name.endswith("['conv']"):
+            spec = P(None, ctx._dp(shp[1]), None, ctx._mdl(shp[3]))
+        elif name.endswith("['state']"):
+            spec = P(None, ctx._dp(shp[1]), ctx._mdl(shp[2]), None, None)
+        else:
+            spec = P(*([None] * len(shp)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, cache_abs)
+
+
+# --------------------------------------------------------------------------
+# Train
+# --------------------------------------------------------------------------
+
+
+def pick_grad_accum(cfg: ArchConfig, shape: ShapeSpec, ctx: ShardCtx,
+                    target_tokens_per_chip: int = 16384) -> int:
+    """Microbatch count so live activations per chip stay bounded
+    (production default — matches the paper's Table IV 'maximize batch via
+    accumulation/recomputation' regime)."""
+    if ctx.mesh is None:
+        return 1
+    dp = max(ctx.dp_size, 1)
+    b = shape.global_batch
+    tokens_per_chip = b * shape.seq_len // min(dp, b)
+    accum = 1
+    for cand in (8, 4, 2):
+        if b % cand:
+            continue
+        mb = b // cand
+        if mb % dp and mb < dp:
+            continue
+        if tokens_per_chip // cand <= target_tokens_per_chip:
+            accum = cand
+            break
+    # ensure the microbatch still shards over dp
+    while accum > 1 and (b // accum) % dp and (b // accum) < dp:
+        accum //= 2
+    return accum
+
+
+def build_train(cfg: ArchConfig, shape: ShapeSpec, technique: Technique,
+                mesh, opt_cfg: Optional[AdamWConfig] = None):
+    ctx = make_shard_ctx(cfg, technique, mesh)
+    if technique.grad_accum == 0:   # 0 = auto
+        technique = dataclasses.replace(
+            technique, grad_accum=pick_grad_accum(cfg, shape, ctx))
+        ctx = make_shard_ctx(cfg, technique, mesh)
+    model = make_model(cfg, technique, ctx)
+    opt_cfg = opt_cfg or AdamWConfig(
+        state_bits=8 if technique.quant != "none" and technique.peft == "none"
+        else 32)
+    state_abs = jax.eval_shape(
+        lambda r: init_train_state(model, technique, r, opt_cfg)[0],
+        jax.random.PRNGKey(0))
+
+    if mesh is not None:
+        sh = train_state_shardings(state_abs, model, ctx)
+        state_abs = _attach(state_abs, sh)
+    batch = batch_specs(cfg, shape, ctx, with_labels=True)
+    step = build_train_step(model, technique, ctx, opt_cfg)
+    return step, (state_abs, batch), ctx, model
+
+
+# --------------------------------------------------------------------------
+# Serving (prefill / decode)
+# --------------------------------------------------------------------------
+
+
+def serving_param_shardings(model: LM, ctx: ShardCtx, params_abs):
+    logical = logical_by_path_of(model.param_specs())
+    return state_shardings(ctx, params_abs, logical, component="params")
+
+
+def serving_abstract_params(model: LM, technique: Technique):
+    """Serving-side weight transform: optional int8/nf4 quantization
+    (weight-resident serving — paper §II-E quantization applied to
+    inference). Abstract (eval_shape) so the dry-run allocates nothing."""
+    if technique.quant == "none":
+        return model.abstract_params()
+    from repro.quant.qtensor import quantize_tree
+    return jax.eval_shape(
+        lambda r: quantize_tree(model.init(r), technique.quant),
+        jax.random.PRNGKey(0))
+
+
+def build_prefill(cfg: ArchConfig, shape: ShapeSpec, technique: Technique,
+                  mesh):
+    ctx = make_shard_ctx(cfg, technique, mesh)
+    model = make_model(cfg, technique, ctx)
+    params_abs = serving_abstract_params(model, technique)
+    if mesh is not None:
+        params_abs = _attach(params_abs,
+                             serving_param_shardings(model, ctx, params_abs))
+    batch = batch_specs(cfg, shape, ctx, with_labels=False)
+
+    def prefill_fn(params, batch):
+        logits, cache, lengths = model.prefill(params, batch,
+                                               max_len=shape.seq_len)
+        return logits, cache, lengths
+
+    return prefill_fn, (params_abs, batch), ctx, model
+
+
+def build_decode(cfg: ArchConfig, shape: ShapeSpec, technique: Technique,
+                 mesh):
+    """serve_step: one new token against a KV cache of `seq_len`."""
+    ctx = make_shard_ctx(cfg, technique, mesh)
+    model = make_model(cfg, technique, ctx)
+    params_abs = serving_abstract_params(model, technique)
+    b, s = shape.global_batch, shape.seq_len
+    src = cfg.frontend_len if cfg.n_enc_layers else 0
+    kv_dtype = jnp.int8 if technique.kv_quant == "int8" else jnp.bfloat16
+    cache_abs = jax.eval_shape(
+        functools.partial(model.init_cache, b, s, src_len=src,
+                          dtype=kv_dtype))
+    if mesh is not None:
+        params_abs = _attach(params_abs,
+                             serving_param_shardings(model, ctx, params_abs))
+        cache_abs = _attach(cache_abs, cache_shardings(ctx, cache_abs))
+        tok_sh = NamedSharding(mesh, P(ctx._dp(b), None))
+        len_sh = NamedSharding(mesh, P(ctx._dp(b)))
+    else:
+        tok_sh = len_sh = None
+    tokens = _sds((b, 1), jnp.int32, tok_sh)
+    lengths = _sds((b,), jnp.int32, len_sh)
+
+    def serve_step(params, cache, tokens, lengths):
+        logits, new_cache = model.decode_step(params, cache, tokens, lengths)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, new_cache
+
+    return serve_step, (params_abs, cache_abs, tokens, lengths), ctx, model
+
+
+def build_for_shape(cfg: ArchConfig, shape: ShapeSpec, technique: Technique,
+                    mesh):
+    if shape.kind == "train":
+        return build_train(cfg, shape, technique, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, technique, mesh)
+    return build_decode(cfg, shape, technique, mesh)

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any other import (including
+# `from repro...`): jax locks the device count on first initialization.
+
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import Counter, defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.core.config import SHAPES, Technique, technique_from_label, TPU_V5E
+from repro.launch.build import build_for_shape
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind from compiled (SPMD, per-device)
+    HLO. `-done` ops are skipped so async pairs count once."""
+    by_kind = Counter()
+    counts = Counter()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        kind = m.group(4)
+        if m.group(1) is not None:  # tuple result
+            nbytes = sum(_shape_bytes(t, d)
+                         for t, d in _SHAPE_RE.findall(m.group(1)))
+        else:
+            nbytes = _shape_bytes(m.group(2), m.group(3))
+        by_kind[kind] += nbytes
+        counts[kind] += 1
+    return {"bytes_by_kind": dict(by_kind), "count_by_kind": dict(counts),
+            "total_bytes": int(sum(by_kind.values()))}
+
+
+def long_ctx_skip(cfg) -> bool:
+    return not cfg.sub_quadratic
+
+
+DEFAULT_TECHNIQUE = "F+R+Z3"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             technique: Technique) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and long_ctx_skip(cfg):
+        return {"status": "skipped",
+                "reason": "pure full-attention arch: O(n^2) at 524288 is "
+                          "intentionally unsupported (DESIGN.md "
+                          "S5 Arch-applicability)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, ctx, model = build_for_shape(cfg, shape, technique, mesh)
+    t_build = time.time() - t0
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    # trip-count-corrected static analysis (cost_analysis counts loop
+    # bodies once — see core/hloanalysis.py)
+    from repro.core.hloanalysis import analyze_hlo
+    from repro.core.roofline import analytic_memory_bytes, roofline
+    st = analyze_hlo(hlo)
+    ana_bytes = analytic_memory_bytes(
+        cfg, shape, state_arg_bytes=float(ma.argument_size_in_bytes),
+        n_devices=n_dev, grad_accum=max(ctx.technique.grad_accum, 1),
+        remat=ctx.technique.remat)
+    rf = roofline(cfg, shape, flops_per_device=st.flops,
+                  bytes_per_device=st.bytes_accessed,
+                  collective_bytes_per_device=st.total_collective_bytes,
+                  n_devices=n_dev, analytic_bytes=ana_bytes)
+    out = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "multi_pod": multi_pod, "devices": n_dev,
+        "technique": technique.label(),
+        "times": {"build": t_build, "lower": t_lower, "compile": t_compile},
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_per_device": int(ma.argument_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         - ma.alias_size_in_bytes),
+            "host_bytes": int(ma.host_argument_size_in_bytes
+                              + ma.host_output_size_in_bytes
+                              + ma.host_temp_size_in_bytes),
+        },
+        "cost_raw": {  # cost_analysis (loop bodies counted once)
+            "flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+        },
+        "cost": {  # trip-count-corrected, per device
+            "flops": st.flops,
+            "dot_flops": st.dot_flops,
+            "bytes_accessed": st.bytes_accessed,
+            "collective_bytes": {k: float(v) for k, v
+                                 in st.collective_bytes.items()},
+            "collective_counts": {k: float(v) for k, v
+                                  in st.collective_counts.items()},
+            "total_collective_bytes": st.total_collective_bytes,
+        },
+        "roofline": rf.to_dict(),
+        "collectives_raw": coll,
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all",
+                    choices=["all"] + list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--technique", default=DEFAULT_TECHNIQUE)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--verbose", action="store_true")
+    # hillclimb knobs (EXPERIMENTS.md §Perf iterations)
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--no-tp", action="store_true",
+                    help="fold the model axis into DP (small models)")
+    ap.add_argument("--accum", type=int, default=0, help="0 = auto")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--attn-mode", default="auto",
+                    choices=["auto", "head", "seq"])
+    ap.add_argument("--z3-gather-once", action="store_true")
+    ap.add_argument("--tag", default=None,
+                    help="suffix for the result filename")
+    args = ap.parse_args()
+
+    archs = list_archs(assigned_only=True) if args.arch == "all" \
+        else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    technique = technique_from_label(
+        args.technique, sp=not args.no_sp, tp=not args.no_tp,
+        grad_accum=args.accum, attn_mode=args.attn_mode,
+        kv_quant="int8" if args.kv_int8 else "none",
+        zero3_gather_once=args.z3_gather_once)
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape_name}__{'multi' if mp else 'single'}" \
+                      f"__{args.tag or technique.label().replace('+','_')}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    res = run_cell(arch, shape_name, mp, technique)
+                except Exception as e:  # a failure here is a bug in repro
+                    failures += 1
+                    res = {"status": "error", "arch": arch,
+                           "shape": shape_name, "multi_pod": mp,
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                line = (f"{arch:24s} {shape_name:12s} "
+                        f"{'multi ' if mp else 'single'} -> {res['status']}")
+                if res["status"] == "ok":
+                    rf = res["roofline"]
+                    line += (f"  mem/dev={res['memory']['peak_bytes_per_device']/1e9:.2f}GB"
+                             f" flops/dev={res['cost']['flops']:.3g}"
+                             f" coll={res['cost']['total_collective_bytes']/1e9:.2f}GB"
+                             f" bound={rf['bottleneck'][:4]}"
+                             f" mfu<={rf['mfu_bound']*100:.0f}%"
+                             f" useful={rf['useful_ratio']*100:.0f}%"
+                             f" compile={res['times']['compile']:.0f}s")
+                elif res["status"] == "error":
+                    line += "  " + res["error"][:160]
+                print(line, flush=True)
+                if args.verbose and res["status"] == "error":
+                    print(res["trace"])
+    print(f"dryrun done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Mesh factories.
+
+``make_production_mesh`` is the dry-run target: one TPU v5e pod is a 16x16
+torus (256 chips); multi-pod adds a leading "pod" axis over DCN (2 pods =
+512 chips). Functions, not module constants — importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_local_mesh(model: int = 1, data: Optional[int] = None):
+    """Mesh over whatever devices exist (tests / CPU smoke runs)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_layout(mesh) -> dict:
+    return {"shape": dict(mesh.shape), "axes": list(mesh.axis_names),
+            "devices": int(np.prod(list(mesh.shape.values())))}

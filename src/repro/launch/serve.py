@@ -1,0 +1,44 @@
+"""Serving launcher CLI: continuous-batching engine over synthetic bursts.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --requests 16 --int8-kv
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.data.pipeline import serving_requests
+from repro.models.lm import LM
+from repro.serving.engine import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--n-blocks", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--int8-kv", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=args.max_batch,
+                 n_blocks=args.n_blocks, block_size=args.block_size,
+                 kv_quant="int8" if args.int8_kv else "none")
+    for i, p in enumerate(serving_requests(args.requests, cfg.vocab_size,
+                                           prompt_len=args.prompt_len)):
+        eng.submit(Request(rid=i, tokens=p, max_new_tokens=args.max_new))
+    eng.run()
+    for k, v in eng.stats().items():
+        print(f"{k:>20s}: {v:.4f}" if isinstance(v, float) else
+              f"{k:>20s}: {v}")
+
+
+if __name__ == "__main__":
+    main()

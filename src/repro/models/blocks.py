@@ -1,0 +1,422 @@
+"""Transformer / SSM / MoE blocks: ParamSpec builders + pure apply fns.
+
+Every block takes a ``ctx`` (parallel.sharding.ShardCtx or None) used only to
+(a) place sharding constraints on activations and (b) drive the expert-
+parallel all-to-all path in MoE. With ``ctx=None`` everything runs locally
+(CPU smoke tests).
+
+Cache conventions (decode):
+  attn: {"k": (B,S,K,hd), "v": (B,S,K,hd)}           + global `lengths` (B,)
+  ssm:  {"conv": (B, w-1, Cch), "state": (B,H,P,N)}
+  cross (enc-dec): {"k","v"} precomputed from encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ArchConfig
+from repro.models import layers as L
+from repro.models.params import spec
+from repro.models.ssd import ssd_chunked, ssd_decode_step
+
+
+def _constrain(ctx, x, kind):
+    return ctx.constrain(x, kind) if ctx is not None else x
+
+
+# ==========================================================================
+# Attention block
+# ==========================================================================
+
+
+def attn_specs(cfg: ArchConfig, n_stack: int, cross: bool = False) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = (n_stack,)
+    ly = ("layers",)
+    p = {
+        "ln": spec(s + (d,), ly + ("embed",), "ones"),
+        "wq": spec(s + (d, h, hd), ly + ("embed", "q_heads", "head_dim")),
+        "wk": spec(s + (d, kv, hd), ly + ("embed", "kv_heads", "head_dim")),
+        "wv": spec(s + (d, kv, hd), ly + ("embed", "kv_heads", "head_dim")),
+        "wo": spec(s + (h, hd, d), ly + ("q_heads", "head_dim", "embed"),
+                   fan_in_axes=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = spec(s + (h, hd), ly + ("q_heads", "head_dim"), "zeros")
+        p["bk"] = spec(s + (kv, hd), ly + ("kv_heads", "head_dim"), "zeros")
+        p["bv"] = spec(s + (kv, hd), ly + ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = spec(s + (hd,), ly + ("head_dim",), "ones")
+        p["k_norm"] = spec(s + (hd,), ly + ("head_dim",), "ones")
+    return p
+
+
+def _qkv(x, p, cfg: ArchConfig, ctx, positions, rope: bool = True):
+    q = L.dense(x, p["wq"], bias=p.get("bq"))
+    k = L.dense(x, p["wk"], bias=p.get("bk"))
+    v = L.dense(x, p["wv"], bias=p.get("bv"))
+    if cfg.qk_norm:
+        q = L.qk_headnorm(q, p["q_norm"], cfg.norm_eps)
+        k = L.qk_headnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    q = _constrain(ctx, q, "act_q")
+    k = _constrain(ctx, k, "act_kv")
+    v = _constrain(ctx, v, "act_kv")
+    return q, k, v
+
+
+def attn_apply(x, p, cfg: ArchConfig, ctx, *, attn_impl: str, positions,
+               causal: bool = True, cache: Optional[Dict] = None,
+               lengths: Optional[jax.Array] = None,
+               return_kv: bool = False) -> Tuple[jax.Array, Any]:
+    """Self-attention residual block.
+
+    train/prefill: cache is None; optionally returns the fresh (k, v).
+    decode: cache holds (B,S,K,hd); new token written at `lengths`.
+    """
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _qkv(h, p, cfg, ctx, positions)
+    new_cache = None
+    if cache is not None:  # decode: update paged cache then attend over it
+        kc, vc = cache["k"], cache["v"]
+        s = kc.shape[1]
+        slot = jnp.clip(lengths, 0, s - 1)                       # (B,)
+        write = (jnp.arange(s)[None, :] == slot[:, None])        # (B,S)
+        m = write[:, :, None, None]
+        kc = jnp.where(m, k.astype(kc.dtype), kc)
+        vc = jnp.where(m, v.astype(vc.dtype), vc)
+        kc = _constrain(ctx, kc, "kv_cache")
+        vc = _constrain(ctx, vc, "kv_cache")
+        new_cache = {"k": kc, "v": vc}
+        out = L.attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                          mode="naive" if attn_impl != "pallas" else "pallas_decode",
+                          causal=False, kv_len=lengths + 1)
+    else:
+        out = L.attention(q, k, v, mode=attn_impl, causal=causal)
+        if return_kv:
+            new_cache = {"k": k, "v": v}
+    out = _constrain(ctx, out, "act_q")
+    y = L.dense(out, p["wo"], n_in=2)
+    y = _constrain(ctx, y, "hidden")
+    return x + y, new_cache
+
+
+def cross_attn_specs(cfg: ArchConfig, n_stack: int) -> Dict:
+    p = attn_specs(cfg, n_stack)
+    p.pop("q_norm", None), p.pop("k_norm", None)
+    return p
+
+
+def cross_attn_apply(x, enc_kv, p, cfg: ArchConfig, ctx) -> jax.Array:
+    """Cross-attention: Q from decoder stream, KV precomputed from encoder."""
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = L.dense(h, p["wq"], bias=p.get("bq"))
+    q = _constrain(ctx, q, "act_q")
+    out = L.attention(q, enc_kv["k"], enc_kv["v"], mode="naive", causal=False)
+    y = L.dense(out, p["wo"], n_in=2)
+    return x + _constrain(ctx, y, "hidden")
+
+
+def cross_kv(enc_out, p, cfg: ArchConfig, ctx) -> Dict:
+    k = L.dense(enc_out, p["wk"], bias=p.get("bk"))
+    v = L.dense(enc_out, p["wv"], bias=p.get("bv"))
+    return {"k": _constrain(ctx, k, "act_kv"), "v": _constrain(ctx, v, "act_kv")}
+
+
+# ==========================================================================
+# Dense FFN (SwiGLU)
+# ==========================================================================
+
+
+def ffn_specs(cfg: ArchConfig, n_stack: int) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    s, ly = (n_stack,), ("layers",)
+    return {
+        "ln": spec(s + (d,), ly + ("embed",), "ones"),
+        "w_gate": spec(s + (d, f), ly + ("embed", "mlp")),
+        "w_up": spec(s + (d, f), ly + ("embed", "mlp")),
+        "w_down": spec(s + (f, d), ly + ("mlp", "embed")),
+    }
+
+
+def ffn_apply(x, p, cfg: ArchConfig, ctx) -> jax.Array:
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    y = L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"],
+                 act_constraint=lambda t: _constrain(ctx, t, "act_ffn"))
+    return x + _constrain(ctx, y, "hidden")
+
+
+# ==========================================================================
+# MoE FFN: top-k routing; dense path (smoke) or EP all-to-all (shard_map)
+# ==========================================================================
+
+
+def moe_specs(cfg: ArchConfig, n_stack: int) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s, ly = (n_stack,), ("layers",)
+    return {
+        "ln": spec(s + (d,), ly + ("embed",), "ones"),
+        "router": spec(s + (d, e), ly + ("embed", "null")),
+        "w_gate": spec(s + (e, d, f), ly + ("experts", "embed", "mlp"),
+                       fan_in_axes=(1,)),
+        "w_up": spec(s + (e, d, f), ly + ("experts", "embed", "mlp"),
+                     fan_in_axes=(1,)),
+        "w_down": spec(s + (e, f, d), ly + ("experts", "mlp", "embed"),
+                       fan_in_axes=(1,)),
+    }
+
+
+def _route(h, router_w, cfg: ArchConfig):
+    logits = L.dense(h.astype(jnp.float32), router_w).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                    # (..., E)
+    top_w, top_e = jax.lax.top_k(gates, cfg.top_k)             # (..., k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style), returned for training
+    me = jnp.mean(gates, axis=tuple(range(gates.ndim - 1)))
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], cfg.n_experts, dtype=jnp.float32),
+        axis=tuple(range(top_e.ndim - 1)))
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return top_w, top_e, aux
+
+
+def _expert_ffn(xs, wg, wu, wd):
+    """xs: (E, C, D); weights (E, D, F)/(E, F, D). Batched SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", xs, wg)
+    u = jnp.einsum("ecd,edf->ecf", xs, wu)
+    return jnp.einsum("ecf,efd->ecd", L.silu(g) * u, wd)
+
+
+def _moe_local(h, p, cfg: ArchConfig, capacity_mult: float) -> Tuple[jax.Array, jax.Array]:
+    """Single-device token-choice dispatch with capacity (sort-based,
+    no (T,E,C) one-hot). Used for smoke tests and inside each shard."""
+    wg = p["w_gate"].dequantize(h.dtype) if hasattr(p["w_gate"], "dequantize") else p["w_gate"]
+    wu = p["w_up"].dequantize(h.dtype) if hasattr(p["w_up"], "dequantize") else p["w_up"]
+    wd = p["w_down"].dequantize(h.dtype) if hasattr(p["w_down"], "dequantize") else p["w_down"]
+    orig_shape = h.shape
+    d, e, k = cfg.d_model, cfg.n_experts, cfg.top_k
+    x = h.reshape(-1, d)
+    n = x.shape[0]
+    top_w, top_e, aux = _route(x, p["router"], cfg)
+    cap = int(np.ceil(k * n / e * cfg.capacity_factor * capacity_mult))
+    cap = min(max(cap, 4), k * n)
+    flat_e = top_e.reshape(-1)                                  # (n*k,)
+    flat_w = top_w.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(sorted_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(n * k) - starts[sorted_e]
+    pos = jnp.zeros((n * k,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)         # drop -> pad row
+    buf = jnp.zeros((e * cap + 1, d), h.dtype).at[slot].set(x[flat_t])
+    ys = _expert_ffn(buf[:-1].reshape(e, cap, d), wg, wu, wd)   # (E,C,D)
+    ys = jnp.concatenate([ys.reshape(e * cap, d),
+                          jnp.zeros((1, d), h.dtype)])
+    gathered = ys[slot] * flat_w[:, None].astype(h.dtype)       # (n*k, D)
+    out = jnp.zeros((n, d), h.dtype).at[flat_t].add(
+        jnp.where(keep[:, None], gathered, 0))
+    return out.reshape(orig_shape), aux
+
+
+def _moe_ep(h, p, cfg: ArchConfig, ctx, capacity_mult: float):
+    """Expert-parallel dispatch: shard_map over the mesh; tokens exchanged
+    with all-to-all along the model axis (experts sharded over `model`)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    d, e, k = cfg.d_model, cfg.n_experts, cfg.top_k
+    mesh = ctx.mesh
+    maxis = ctx.model_axis
+    msize = ctx.axis_size(maxis)
+    e_loc = e // msize
+    b, t = h.shape[0], h.shape[1]
+    dp = ctx._dp(b)         # None when the batch can't split (e.g. B=1)
+    split_t = (t % msize == 0) and t > 1
+    h_spec = P(dp, maxis if split_t else None, None)
+
+    def local(hh, router_w, wg, wu, wd):
+        # dequantize the *local* expert shard only (weight-resident int8)
+        wg = wg.dequantize(hh.dtype) if hasattr(wg, "dequantize") else wg
+        wu = wu.dequantize(hh.dtype) if hasattr(wu, "dequantize") else wu
+        wd = wd.dequantize(hh.dtype) if hasattr(wd, "dequantize") else wd
+        x = hh.reshape(-1, d)
+        n = x.shape[0]
+        top_w, top_e, aux = _route(x, router_w, cfg)
+        cap = int(np.ceil(k * n / e * cfg.capacity_factor * capacity_mult))
+        cap = min(max(cap, 4), k * n)
+        flat_e = top_e.reshape(-1)
+        flat_w = top_w.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(n), k)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(sorted_e, length=e)
+        starts = jnp.cumsum(counts) - counts
+        pos_sorted = jnp.arange(n * k) - starts[sorted_e]
+        pos = jnp.zeros((n * k,), jnp.int32).at[order].set(
+            pos_sorted.astype(jnp.int32))
+        keep = pos < cap
+        slot = jnp.where(keep, flat_e * cap + pos, e * cap)
+        send = jnp.zeros((e * cap + 1, d), hh.dtype).at[slot].set(x[flat_t])
+        send = send[:-1].reshape(msize, e_loc * cap, d)
+        recv = jax.lax.all_to_all(send, maxis, 0, 0, tiled=False)
+        # recv: (msize, e_loc*cap, d) -> (e_loc, msize*cap, d)
+        xs = recv.reshape(msize, e_loc, cap, d).transpose(1, 0, 2, 3) \
+                 .reshape(e_loc, msize * cap, d)
+        ys = _expert_ffn(xs, wg, wu, wd)
+        ys = ys.reshape(e_loc, msize, cap, d).transpose(1, 0, 2, 3) \
+               .reshape(msize, e_loc * cap, d)
+        back = jax.lax.all_to_all(ys, maxis, 0, 0, tiled=False)
+        back = jnp.concatenate([back.reshape(e * cap, d),
+                                jnp.zeros((1, d), hh.dtype)])
+        gathered = back[slot] * flat_w[:, None].astype(hh.dtype)
+        out = jnp.zeros((n, d), hh.dtype).at[flat_t].add(
+            jnp.where(keep[:, None], gathered, 0))
+        # aux loss: average over every mesh axis the input is split on
+        aux = jax.lax.pmean(aux, maxis)
+        for ax in (dp if isinstance(dp, tuple) else (dp,)):
+            if ax is not None:
+                aux = jax.lax.pmean(aux, ax)
+        return out.reshape(hh.shape), aux
+
+    wq_specs = (P(None, None), P(maxis, None, None), P(maxis, None, None),
+                P(maxis, None, None))
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(h_spec,) + wq_specs,
+                   out_specs=(h_spec, P()),
+                   check_rep=False)
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    return fn(h, p["router"], wg, wu, wd)
+
+
+def moe_apply(x, p, cfg: ArchConfig, ctx, capacity_mult: float = 1.0
+              ) -> Tuple[jax.Array, jax.Array]:
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    use_ep = (ctx is not None and ctx.model_axis is not None
+              and cfg.n_experts % ctx.axis_size(ctx.model_axis) == 0
+              and not ctx.technique_disables_ep)
+    if use_ep:
+        y, aux = _moe_ep(h, p, cfg, ctx, capacity_mult)
+    else:
+        y, aux = _moe_local(h, p, cfg, capacity_mult)
+    return x + _constrain(ctx, y, "hidden"), aux
+
+
+# ==========================================================================
+# Mamba2 (SSD) block
+# ==========================================================================
+
+
+def ssm_specs(cfg: ArchConfig, n_stack: int) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n_ssm, ns = cfg.ssm_ngroups, cfg.n_ssm_heads, cfg.ssm_state
+    conv_ch = di + 2 * g * ns
+    proj_out = 2 * di + 2 * g * ns + n_ssm
+    s, ly = (n_stack,), ("layers",)
+    return {
+        "ln": spec(s + (d,), ly + ("embed",), "ones"),
+        "in_proj": spec(s + (d, proj_out), ly + ("embed", "ssm_inner")),
+        "conv_w": spec(s + (cfg.ssm_conv, conv_ch), ly + ("conv", "ssm_inner"),
+                       fan_in_axes=(0,)),
+        "conv_b": spec(s + (conv_ch,), ly + ("ssm_inner",), "zeros"),
+        "a_log": spec(s + (n_ssm,), ly + ("ssm_heads",), "ssm_a", jnp.float32),
+        "d_skip": spec(s + (n_ssm,), ly + ("ssm_heads",), "ones", jnp.float32),
+        "dt_bias": spec(s + (n_ssm,), ly + ("ssm_heads",), "dt_bias", jnp.float32),
+        "norm": spec(s + (di,), ly + ("ssm_inner",), "ones"),
+        "out_proj": spec(s + (di, d), ly + ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, width W. x: (B,T,C), w: (W,C)."""
+    wdt = w.shape[0]
+    pads = [jnp.pad(x, ((0, 0), (wdt - 1 - i, 0), (0, 0)))[:, : x.shape[1]]
+            for i in range(wdt)]
+    y = sum(p * w[i][None, None, :] for i, p in enumerate(pads))
+    return y + b[None, None, :]
+
+
+def _ssm_pre(h, p, cfg: ArchConfig, conv_state=None, capture_tail=False,
+             ctx=None):
+    """in_proj + causal conv + splits. Returns z, x, B, C, dt, new_conv_state
+    (decode) or the conv-input tail (prefill with capture_tail)."""
+    di, g, ns, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = L.dense(h, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * g * ns]
+    dt = zxbcdt[..., di + di + 2 * g * ns:]
+    new_conv_state = None
+    if conv_state is not None:  # decode: T==1
+        buf = jnp.concatenate([conv_state, xbc], axis=1)        # (B, W, C)
+        w = p["conv_w"]
+        y = jnp.einsum("bwc,wc->bc", buf, w)[:, None, :] + p["conv_b"][None, None]
+        new_conv_state = buf[:, 1:]
+        xbc = y
+    else:
+        if capture_tail:  # conv state to resume decoding after prefill
+            w1 = cfg.ssm_conv - 1
+            tail = xbc[:, -w1:]
+            pad = w1 - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_conv_state = tail
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc = L.silu(xbc)
+    xs = xbc[..., :di]
+    Bs = xbc[..., di: di + g * ns]
+    Cs = xbc[..., di + g * ns:]
+    b, t = h.shape[0], h.shape[1]
+    xs = xs.reshape(b, t, nh, cfg.ssm_headdim)
+    Bs = Bs.reshape(b, t, g, ns)
+    Cs = Cs.reshape(b, t, g, ns)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    xs = _constrain(ctx, xs, "ssm_x")
+    Bs = _constrain(ctx, Bs, "ssm_bc")
+    Cs = _constrain(ctx, Cs, "ssm_bc")
+    dt = _constrain(ctx, dt, "ssm_dt")
+    return z, xs, Bs, Cs, dt, new_conv_state
+
+
+def ssm_apply(x, p, cfg: ArchConfig, ctx, *, cache: Optional[Dict] = None,
+              ssd_impl: str = "ref",
+              return_state: bool = False) -> Tuple[jax.Array, Any]:
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                # (H,)
+    if cache is not None:
+        z, xs, Bs, Cs, dt, conv_state = _ssm_pre(h, p, cfg, cache["conv"],
+                                                 ctx=ctx)
+        y, new_state = ssd_decode_step(
+            xs[:, 0], Bs[:, 0], Cs[:, 0], dt[:, 0], a, p["d_skip"],
+            cache["state"])
+        y = y[:, None]
+        new_cache = {"conv": conv_state, "state": new_state}
+    else:
+        z, xs, Bs, Cs, dt, conv_tail = _ssm_pre(
+            h, p, cfg, capture_tail=return_state, ctx=ctx)
+        y, final_state = ssd_chunked(xs, Bs, Cs, dt, a, p["d_skip"],
+                                     chunk=cfg.ssm_chunk, impl=ssd_impl)
+        new_cache = ({"conv": conv_tail, "state": final_state}
+                     if return_state else None)
+    b, t = h.shape[0], h.shape[1]
+    y = y.reshape(b, t, cfg.d_inner)
+    y = L.rmsnorm(y * L.silu(z), p["norm"], cfg.norm_eps)
+    y = _constrain(ctx, y, "act_ssm")
+    out = L.dense(y, p["out_proj"])
+    return x + _constrain(ctx, out, "hidden"), new_cache
+
+
+def ssm_init_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,238 @@
+"""Core layers: dense projections, RMSNorm, RoPE, attention (naive /
+flash-equivalent chunked / Pallas), SwiGLU.
+
+All functions are pure; quantized (``QTensor``) and LoRA (``LoRATensor``)
+weights are dispatched inside :func:`dense`, so every call-site supports the
+paper's quantization and PEFT techniques without modification.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# dense(): the single projection primitive (handles QTensor / LoRATensor)
+# --------------------------------------------------------------------------
+
+
+def dense(x: jax.Array, w, n_in: int = 1, bias=None, precision=None):
+    """Contract the last ``n_in`` dims of ``x`` with the first ``n_in`` dims
+    of ``w``; output gets ``w``'s remaining dims. Dispatches on weight type."""
+    from repro.quant.qtensor import QTensor        # local import: no cycles
+    from repro.peft.lora import LoRATensor
+
+    if isinstance(w, LoRATensor):
+        y = dense(x, w.base, n_in=n_in, precision=precision)
+        t = dense(x, w.a, n_in=n_in, precision=precision)      # (..., r)
+        y = y + w.scaling * dense(t, w.b, n_in=1, precision=precision)
+        if bias is not None:
+            y = y + bias
+        return y
+    if isinstance(w, QTensor):
+        w = w.dequantize(x.dtype)
+
+    in_shape = x.shape[:-n_in]
+    k = int(np.prod(x.shape[-n_in:])) if n_in else 1
+    out_dims = w.shape[n_in:]
+    x2 = x.reshape(in_shape + (k,))
+    w2 = w.reshape((k,) + (int(np.prod(out_dims)) if out_dims else 1,))
+    y = jax.lax.dot_general(x2, w2, (((x2.ndim - 1,), (0,)), ((), ())),
+                            precision=precision)
+    y = y.reshape(in_shape + tuple(out_dims))
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+# --------------------------------------------------------------------------
+# Norms & activations
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def qk_headnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Qwen3-style per-head RMSNorm over head_dim. x: (..., H, hd), w: (hd,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(x, w_gate, w_up, w_down, act_constraint=None):
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    h = silu(g) * u
+    if act_constraint is not None:
+        h = act_constraint(h)
+    return dense(h, w_down)
+
+
+# --------------------------------------------------------------------------
+# RoPE (supports chatglm3's partial/2D rotary via `fraction`)
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv), rot
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, fraction: float = 1.0,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) or (T,). Rotates the first
+    ``fraction * hd`` dims (neox style), passes the rest through."""
+    hd = x.shape[-1]
+    inv, rot = rope_frequencies(hd, fraction, theta)
+    if rot == 0:
+        return x
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(jnp.float32) * inv[None, None, :]  # (B,T,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+# --------------------------------------------------------------------------
+# Attention.
+#
+# Three implementations, selected by `mode`:
+#   naive   — materializes the (T, S) score matrix (the paper's baseline)
+#   chunked — online-softmax over KV blocks in pure XLA: the flash-equivalent
+#             path used on CPU dry-runs and as the long-context fallback
+#   pallas  — the TPU Pallas kernel (kernels/flash_attention.py)
+# q: (B, T, H, hd);  k, v: (B, S, K, hd) with H = K * G (GQA).
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_split(q, n_kv):
+    b, t, h, d = q.shape
+    return q.reshape(b, t, n_kv, h // n_kv, d)
+
+
+def naive_attention(q, k, v, *, causal: bool = True, q_offset=0,
+                    kv_len: Optional[jax.Array] = None) -> jax.Array:
+    b, t, h, d = q.shape
+    s, n_kv = k.shape[1], k.shape[2]
+    qg = _gqa_split(q, n_kv)                                    # (B,T,K,G,d)
+    scale = 1.0 / np.sqrt(d)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = None
+    if causal:
+        qpos = jnp.arange(t)[:, None] + q_offset
+        mask = qpos >= jnp.arange(s)[None, :]                   # (T,S)
+        mask = mask[None, None, None]
+    if kv_len is not None:
+        lm = jnp.arange(s)[None, :] < kv_len[:, None]           # (B,S)
+        lm = lm[:, None, None, None, :]
+        mask = lm if mask is None else jnp.logical_and(mask, lm)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v)
+    return out.reshape(b, t, h, d)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, q_offset=0,
+                      kv_len: Optional[jax.Array] = None,
+                      chunk: int = 1024) -> jax.Array:
+    """Flash-equivalent: scan over KV chunks with online softmax. Never
+    materializes the full (T, S) matrix; HBM traffic matches the flash
+    kernel's asymptotics. Used when Pallas is unavailable (CPU dry-run)."""
+    b, t, h, d = q.shape
+    s, n_kv = k.shape[1], k.shape[2]
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    rem = s - n_chunks * chunk
+    scale = 1.0 / np.sqrt(d)
+    qg = _gqa_split(q, n_kv) * scale
+    qpos = jnp.arange(t) + q_offset
+
+    # The chunk step is checkpointed: its (T, chunk) score block is
+    # recomputed in the backward pass instead of being stacked across the
+    # scan — the defining memory property of flash attention, kept in the
+    # XLA fallback path.
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, c_idx = inp
+        width = kc.shape[1]              # = chunk, or the ragged tail
+        kpos = c_idx * chunk + jnp.arange(width)
+        sc = jnp.einsum("btkgd,bskd->bkgts", qg, kc,
+                        preferred_element_type=jnp.float32)
+        mask = jnp.ones((t, width), bool)
+        if causal:
+            mask = qpos[:, None] >= kpos[None, :]
+        if kv_len is not None:
+            mask = jnp.logical_and(
+                mask[None], (kpos[None, :] < kv_len[:, None])[:, None, :])
+            mask = mask[:, None, None]
+        else:
+            mask = mask[None, None, None]
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_cur = jnp.max(sc, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgts,bskd->bkgtd", p.astype(v.dtype), vc)
+        acc = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    k_main = k[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, n_kv, d)
+    v_main = v[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, n_kv, d)
+    k_main = jnp.moveaxis(k_main, 1, 0)
+    v_main = jnp.moveaxis(v_main, 1, 0)
+    g = h // n_kv
+    init = (jnp.full((b, n_kv, g, t), NEG_INF, jnp.float32),
+            jnp.zeros((b, n_kv, g, t), jnp.float32),
+            jnp.zeros((b, n_kv, g, t, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (k_main, v_main, jnp.arange(n_chunks)))
+    if rem:  # ragged tail
+        (m, l, acc), _ = step(
+            (m, l, acc),
+            (k[:, n_chunks * chunk:], v[:, n_chunks * chunk:],
+             jnp.array(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, t, h, d)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, mode: str = "naive", causal: bool = True,
+              q_offset=0, kv_len=None, chunk: int = 1024) -> jax.Array:
+    if mode == "naive":
+        return naive_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_len=kv_len)
+    if mode == "chunked":
+        return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                 kv_len=kv_len, chunk=chunk)
+    if mode == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                    kv_len=kv_len)
+    raise ValueError(f"unknown attention mode {mode!r}")

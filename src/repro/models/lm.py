@@ -1,0 +1,403 @@
+"""Unified language model: embed → (scan over layer stack) → head.
+
+Covers all assigned families: dense / moe / ssm / hybrid / encdec / vlm.
+Layers are stacked and iterated with ``lax.scan`` so HLO size (and therefore
+512-device compile time) is independent of depth. Non-uniform stacks (jamba's
+1-attn-per-8 with alternating MoE) scan over *periods*, unrolling the layer
+pattern inside the body.
+
+Entry points:
+  ``loss``        — training objective (causal LM CE + MoE aux)
+  ``forward``     — full-sequence logits (train/debug)
+  ``prefill``     — run the prompt, return last-token logits + decode cache
+  ``decode_step`` — one token with a paged KV / SSM-state cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ArchConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.params import spec, materialize, abstract
+
+VOCAB_PAD = 512
+
+
+def padded_vocab(v: int) -> int:
+    return ((v + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def _period(cfg: ArchConfig) -> int:
+    kinds = list(zip(cfg.layer_kinds(), cfg.ffn_kinds()))
+    n = len(kinds)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(kinds[i] == kinds[i % p] for i in range(n)):
+            return p
+    return n
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, *, attn_impl: str = "naive",
+                 ssd_impl: str = "ref", ctx=None, remat: str = "none",
+                 moe_aux_coef: float = 0.01):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.ssd_impl = ssd_impl
+        self.ctx = ctx
+        self.remat = remat
+        self.moe_aux_coef = moe_aux_coef
+        self.period = _period(cfg)
+        self.n_periods = cfg.n_layers // self.period
+        self.kinds = cfg.layer_kinds()[: self.period]
+        self.fkinds = cfg.ffn_kinds()[: self.period]
+        self.vocab = padded_vocab(cfg.vocab_size)
+
+    # ------------------------------------------------------------------
+    # Parameter specs
+    # ------------------------------------------------------------------
+
+    def _block_specs(self, n_stack: int, cross: bool = False) -> Dict:
+        cfg = self.cfg
+        out = {}
+        for i in range(self.period):
+            pos: Dict[str, Any] = {}
+            if self.kinds[i] == "attn":
+                pos["mix"] = B.attn_specs(cfg, n_stack)
+            else:
+                pos["mix"] = B.ssm_specs(cfg, n_stack)
+            if cross:
+                pos["cross"] = B.cross_attn_specs(cfg, n_stack)
+            if self.fkinds[i] == "moe":
+                pos["ffn"] = B.moe_specs(cfg, n_stack)
+            else:
+                pos["ffn"] = B.ffn_specs(cfg, n_stack)
+            out[f"pos{i}"] = pos
+        return out
+
+    def param_specs(self) -> Dict:
+        cfg = self.cfg
+        d, v = cfg.d_model, self.vocab
+        p: Dict[str, Any] = {
+            "embed": spec((v, d), ("vocab", "embed")),
+            "final_ln": spec((d,), ("embed",), "ones"),
+            "blocks": self._block_specs(self.n_periods),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = spec((d, v), ("embed", "vocab"))
+        if cfg.n_enc_layers:
+            p["enc_blocks"] = {
+                f"pos0": {
+                    "mix": B.attn_specs(cfg, cfg.n_enc_layers),
+                    "ffn": B.ffn_specs(cfg, cfg.n_enc_layers),
+                }
+            }
+            p["enc_final_ln"] = spec((d,), ("embed",), "ones")
+            # decoder blocks also carry cross-attention
+            p["blocks"] = self._block_specs(self.n_periods, cross=True)
+        if cfg.frontend != "none":
+            p["frontend_proj"] = spec((d, d), ("embed", "null"))
+        return p
+
+    def init(self, rng: jax.Array):
+        return materialize(self.param_specs(), rng)
+
+    def abstract_params(self):
+        return abstract(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # Stack application
+    # ------------------------------------------------------------------
+
+    def _make_body(self, *, mode: str, lengths=None, enc_out=None):
+        """mode: train | prefill | decode. Returns scan body
+        (carry=(x, aux, positions), xs=(params, cache)) -> carry, new_cache."""
+        cfg, ctx = self.cfg, self.ctx
+
+        # Non-uniform stacks (period > 1, e.g. jamba) checkpoint each
+        # sub-layer individually: otherwise the backward of one scan step
+        # rematerializes a whole 8-layer period at once (observed 70GB+
+        # of simultaneously-live f32 SSD internals on the jamba cell).
+        sub_remat = (mode == "train" and self.period > 1
+                     and self.remat != "none")
+
+        def _ckpt(fn):
+            if not sub_remat:
+                return fn
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, lcache = xs
+            new_cache: Dict[str, Any] = {}
+            for i in range(self.period):
+                pp = lp[f"pos{i}"]
+                ci = lcache.get(f"pos{i}") if isinstance(lcache, dict) else None
+                if isinstance(ci, dict) and "self" in ci:
+                    cache_i = ci["self"]
+                else:
+                    cache_i = ci
+                if self.kinds[i] == "attn":
+                    x, nc = _ckpt(functools.partial(
+                        B.attn_apply, cfg=cfg, ctx=ctx,
+                        attn_impl=self.attn_impl,
+                        positions=self._positions, causal=(mode != "encode"),
+                        lengths=lengths,
+                        return_kv=(mode == "prefill")))(
+                        x, pp["mix"],
+                        cache=cache_i if mode == "decode" else None)
+                else:
+                    x, nc = _ckpt(functools.partial(
+                        B.ssm_apply, cfg=cfg, ctx=ctx,
+                        ssd_impl=self.ssd_impl,
+                        return_state=(mode == "prefill")))(
+                        x, pp["mix"],
+                        cache=cache_i if mode == "decode" else None)
+                if "cross" in pp:
+                    if mode == "prefill":
+                        ckv = B.cross_kv(enc_out, pp["cross"], cfg, ctx)
+                    elif mode == "decode":
+                        ckv = ci["cross"]
+                    else:
+                        ckv = B.cross_kv(enc_out, pp["cross"], cfg, ctx)
+                    x = B.cross_attn_apply(x, ckv, pp["cross"], cfg, ctx)
+                    if mode in ("prefill", "decode"):
+                        nc = {"self": nc, "cross": ckv}
+                if self.fkinds[i] == "moe":
+                    # decode: 2x capacity headroom (drops are rare and the
+                    # padded slots are the dominant decode FLOPs — §Perf B2)
+                    x, a = _ckpt(functools.partial(
+                        B.moe_apply, cfg=cfg, ctx=ctx,
+                        capacity_mult=(1.0 if mode == "train" else
+                                       2.0 if mode == "decode" else 4.0)))(
+                        x, pp["ffn"])
+                    aux = aux + a
+                else:
+                    x = _ckpt(functools.partial(
+                        B.ffn_apply, cfg=cfg, ctx=ctx))(x, pp["ffn"])
+                new_cache[f"pos{i}"] = nc
+            return (x, aux), new_cache
+
+        return body
+
+    def _apply_stack(self, blocks_params, x, *, mode: str, cache=None,
+                     lengths=None, enc_out=None, positions=None):
+        from repro.train.remat import wrap_remat
+        self._positions = positions
+        body = self._make_body(mode=mode, lengths=lengths, enc_out=enc_out)
+        if mode == "train":
+            body = wrap_remat(body, self.remat)
+        if cache is None:   # empty pytree: body sees lcache == {}
+            cache = {}
+        (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                           (blocks_params, cache))
+        return x, aux, new_cache
+
+    # ------------------------------------------------------------------
+    # Embedding / head
+    # ------------------------------------------------------------------
+
+    def _embed_in(self, params, tokens, frontend_embeds=None):
+        cfg, ctx = self.cfg, self.ctx
+        table = params["embed"]
+        if hasattr(table, "dequantize"):
+            table = table.dequantize(jnp.bfloat16)
+        x = jnp.take(table, tokens, axis=0)
+        if frontend_embeds is not None and cfg.frontend != "none" \
+                and cfg.family == "vlm":
+            fe = L.dense(frontend_embeds, params["frontend_proj"])
+            x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+        x = B._constrain(ctx, x, "hidden")
+        return x
+
+    def _head(self, params, x):
+        cfg, ctx = self.cfg, self.ctx
+        x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = params["embed"]
+            if hasattr(w, "dequantize"):
+                w = w.dequantize(x.dtype)
+            w = B._constrain(ctx, w.T, "head")          # (D, V) vocab-sharded
+        else:
+            w = params["head"]
+        logits = L.dense(x, w)
+        return B._constrain(ctx, logits, "logits")
+
+    # ------------------------------------------------------------------
+    # Encoder (enc-dec archs)
+    # ------------------------------------------------------------------
+
+    def _encode(self, params, frontend_embeds):
+        cfg, ctx = self.cfg, self.ctx
+        x = L.dense(frontend_embeds, params["frontend_proj"])
+        x = B._constrain(ctx, x, "hidden")
+        t = x.shape[1]
+        self._positions = jnp.arange(t)[None, :]
+
+        def body(carry, lp):
+            h, _ = carry
+            h, _ = B.attn_apply(h, lp["pos0"]["mix"], cfg, ctx,
+                                attn_impl=self.attn_impl,
+                                positions=self._positions, causal=False)
+            h = B.ffn_apply(h, lp["pos0"]["ffn"], cfg, ctx)
+            return (h, jnp.zeros((), jnp.float32)), None
+
+        (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 params["enc_blocks"])
+        return L.rmsnorm(x, params["enc_final_ln"], cfg.norm_eps)
+
+    # ------------------------------------------------------------------
+    # Public entry points
+    # ------------------------------------------------------------------
+
+    def forward(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Full-sequence logits. batch: tokens (B,T) [+ frontend_embeds]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        fe = batch.get("frontend_embeds")
+        enc_out = self._encode(params, fe) if cfg.n_enc_layers else None
+        x = self._embed_in(params, tokens, fe)
+        t = x.shape[1]
+        positions = jnp.arange(t)[None, :]
+        x, aux, _ = self._apply_stack(params["blocks"], x, mode="train",
+                                      enc_out=enc_out, positions=positions)
+        self._last_aux = aux
+        return self._head(params, x)
+
+    def backbone(self, params, batch) -> jax.Array:
+        """Everything before the LM head; returns final hidden states."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        fe = batch.get("frontend_embeds")
+        enc_out = self._encode(params, fe) if cfg.n_enc_layers else None
+        x = self._embed_in(params, tokens, fe)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, aux, _ = self._apply_stack(params["blocks"], x, mode="train",
+                                      enc_out=enc_out, positions=positions)
+        self._last_aux = aux
+        return x
+
+    def loss(self, params, batch, chunk_t: int = 512
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Causal-LM CE, computed block-wise over the sequence so the full
+        (B, T, V) logits tensor is never materialized: each block applies
+        the head + CE under jax.checkpoint (recomputed in bwd). This keeps
+        loss memory O(B * chunk_t * V / tp) instead of O(B * T * V / tp)."""
+        cfg, ctx = self.cfg, self.ctx
+        x = self.backbone(params, batch)
+        labels = batch["labels"]
+        n_front = x.shape[1] - labels.shape[1]
+        if n_front > 0:                       # vlm: loss only on token span
+            x = x[:, n_front:]
+        b, t, d = x.shape
+        tc = min(chunk_t, t)
+        while t % tc:
+            tc //= 2
+        nchunks = t // tc
+
+        head_w = params["head"] if not cfg.tie_embeddings else None
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def block_ce(args):
+            xb, lb = args                     # (B,tc,D), (B,tc)
+            logits = self._head(params, xb).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            onehot = (lb[..., None] ==
+                      jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2))
+            label_logit = jnp.sum(logits * onehot, axis=-1)
+            mask = (lb >= 0).astype(jnp.float32)
+            return (jnp.sum((lse - label_logit) * mask), jnp.sum(mask))
+
+        xc = jnp.moveaxis(x.reshape(b, nchunks, tc, d), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, nchunks, tc), 1, 0)
+
+        def scan_body(carry, args):
+            s, n = block_ce(args)
+            return (carry[0] + s, carry[1] + n), None
+
+        (ce_sum, n_tok), _ = jax.lax.scan(scan_body, (0.0, 0.0), (xc, lc))
+        ce = ce_sum / jnp.maximum(n_tok, 1)
+        total = ce + self.moe_aux_coef * self._last_aux / max(cfg.n_layers, 1)
+        return total, {"ce": ce, "aux": self._last_aux}
+
+    # ---- serving ----
+
+    def init_cache(self, batch: int, max_len: int, src_len: int = 0,
+                   dtype=jnp.bfloat16) -> Dict:
+        cfg = self.cfg
+        cache: Dict[str, Any] = {}
+        for i in range(self.period):
+            if self.kinds[i] == "attn":
+                kv = jnp.zeros((self.n_periods, batch, max_len,
+                                cfg.n_kv_heads, cfg.head_dim), dtype)
+                c: Any = {"k": kv, "v": kv}
+            else:
+                c = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros((self.n_periods,) + x.shape, x.dtype),
+                    B.ssm_init_cache(cfg, batch, dtype))
+            if cfg.n_enc_layers:
+                ckv = jnp.zeros((self.n_periods, batch, src_len,
+                                 cfg.n_kv_heads, cfg.head_dim), dtype)
+                c = {"self": c, "cross": {"k": ckv, "v": ckv}}
+            cache[f"pos{i}"] = c
+        return cache
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Run the prompt; returns (last_logits (B,V), cache, lengths)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        max_len = max_len or t
+        fe = batch.get("frontend_embeds")
+        enc_out = self._encode(params, fe) if cfg.n_enc_layers else None
+        x = self._embed_in(params, tokens, fe)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _, kv_new = self._apply_stack(params["blocks"], x, mode="prefill",
+                                         enc_out=enc_out, positions=positions)
+        cache = self._prefill_to_cache(kv_new, batch, max_len, params, enc_out)
+        logits = self._head(params, x[:, -1:, :])[:, 0]
+        lengths = jnp.full((b,), x.shape[1], jnp.int32)
+        return logits, cache, lengths
+
+    def _prefill_to_cache(self, kv_new, batch, max_len, params, enc_out):
+        """Layout prefill KV into fixed (B, max_len) buffers; recompute SSM
+        final states with a cheap chunked pass where needed."""
+        cfg, ctx = self.cfg, self.ctx
+        cache: Dict[str, Any] = {}
+        for i in range(self.period):
+            nc = kv_new.get(f"pos{i}") if isinstance(kv_new, dict) else None
+            cross = None
+            if isinstance(nc, dict) and "cross" in nc:
+                cross, nc = nc["cross"], nc["self"]
+            if self.kinds[i] == "attn" and nc is not None:
+                def pad_to(a):
+                    pad = max_len - a.shape[2]
+                    if pad > 0:
+                        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad),
+                                        (0, 0), (0, 0)))
+                    return B._constrain(ctx, a, "kv_cache_stack")
+                c: Any = {"k": pad_to(nc["k"]), "v": pad_to(nc["v"])}
+            else:
+                c = nc   # ssm: {"conv", "state"} captured during the stack run
+            if cross is not None:
+                c = {"self": c, "cross": cross}
+            cache[f"pos{i}"] = c
+        return cache
+
+    def decode_step(self, params, cache, tokens, lengths):
+        """One decode step. tokens (B,1) int32, lengths (B,) current KV len.
+        Returns (logits (B,V), new_cache)."""
+        x = self._embed_in(params, tokens)
+        positions = lengths[:, None]
+        x, _, new_cache = self._apply_stack(
+            params["blocks"], x, mode="decode", cache=cache,
+            lengths=lengths, positions=positions)
+        logits = self._head(params, x)[:, 0]
+        return logits, new_cache

@@ -1,0 +1,98 @@
+"""Parameter-spec machinery.
+
+A model is described once as a pytree of :class:`ParamSpec` (shape, dtype,
+*logical axis names*, initializer). From that single source of truth we derive:
+
+* materialized parameters (``materialize``) for smoke tests / real training,
+* abstract ``ShapeDtypeStruct`` stand-ins (``abstract``) for the dry-run,
+* the logical-axes tree consumed by ``parallel.sharding`` to produce
+  ``PartitionSpec``s per (technique, mesh).
+
+Logical axis vocabulary (resolved in parallel/sharding.py):
+  layers, vocab, embed, q_heads, kv_heads, head_dim, mlp, experts, rank,
+  ssm_inner, ssm_heads, ssm_state, conv, groups, frames, null
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    dtype: Any
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"   # normal | zeros | ones | ssm_a | dt_bias
+    fan_in_axes: Tuple[int, ...] = (0,)  # axes treated as fan-in for scaling
+
+
+def spec(shape, logical, init="normal", dtype=jnp.bfloat16, fan_in_axes=(0,)):
+    assert len(shape) == len(logical), (shape, logical)
+    return ParamSpec(tuple(int(s) for s in shape), dtype, tuple(logical),
+                     init, tuple(fan_in_axes))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_paths(specs):
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def materialize(specs, rng: jax.Array, stacked: int = 0):
+    """Initialize real parameters. ``stacked``: number of leading stacked
+    layer dims to exclude from fan-in computation (scan-over-layers stacks)."""
+
+    flat = tree_paths(specs)
+
+    def init_one(i: int, ps: ParamSpec) -> jax.Array:
+        key = jax.random.fold_in(rng, i)
+        if ps.init == "zeros":
+            return jnp.zeros(ps.shape, ps.dtype)
+        if ps.init == "ones":
+            return jnp.ones(ps.shape, ps.dtype)
+        if ps.init == "ssm_a":  # A_log in [log 1, log 16], mamba2 default
+            u = jax.random.uniform(key, ps.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(ps.dtype)
+        if ps.init == "dt_bias":  # softplus^-1 of dt ~ U[1e-3, 1e-1]
+            u = jax.random.uniform(key, ps.shape, jnp.float32, 1e-3, 1e-1)
+            return (u + jnp.log(-jnp.expm1(-u))).astype(ps.dtype)
+        # normal, scaled by fan-in of non-stacked contraction dims
+        fan_in = 1
+        for ax in ps.fan_in_axes:
+            a = ax + (1 if (ps.logical and ps.logical[0] == "layers") else 0)
+            if a < len(ps.shape):
+                fan_in *= ps.shape[a]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, ps.shape, jnp.float32) * scale).astype(ps.dtype)
+
+    leaves = [init_one(i, ps) for i, (_, ps) in enumerate(flat)]
+    treedef = jax.tree_util.tree_structure(specs, is_leaf=_is_spec)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract(specs):
+    """ShapeDtypeStruct tree (no allocation) — dry-run stand-ins."""
+    return jax.tree_util.tree_map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, ps.dtype), specs,
+        is_leaf=_is_spec)
+
+
+def logical_axes(specs):
+    """Tree of logical-axis tuples, same structure as the params."""
+    return jax.tree_util.tree_map(lambda ps: ps.logical, specs, is_leaf=_is_spec)
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(ps.shape)) for _, ps in tree_paths(specs))
+
+
+def param_bytes(specs) -> int:
+    return sum(int(np.prod(ps.shape)) * jnp.dtype(ps.dtype).itemsize
+               for _, ps in tree_paths(specs))

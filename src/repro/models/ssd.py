@@ -1,0 +1,128 @@
+"""Mamba-2 SSD (state-space duality) — chunked reference implementation.
+
+The SSD form computes, per head, y = (L ∘ (C Bᵀ)) x with L the causal
+decay matrix — evaluated block-wise: an intra-chunk "attention-like" term
+plus an inter-chunk state recurrence. This file is the pure-jnp oracle;
+``kernels/ssd.py`` is the Pallas TPU kernel with the same contract.
+
+Shapes: x (B,T,H,P), B/C (B,T,G,N) with G groups shared by H//G heads,
+dt (B,T,H) f32 (already softplus'd), A (H,) f32 (negative), D (H,).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-tri pairwise segment sums: out[..., i, j] = sum_{j<m<=i} a[..., m].
+    a: (..., Q) -> (..., Q, Q), -inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked_ref(x, B, C, dt, A, D, chunk: int = 256
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    tt = x.shape[1]
+    nc = tt // q
+
+    # Storage dtype follows the input (bf16 in the model path); decay terms
+    # stay f32; matmuls accumulate in f32 via preferred_element_type — the
+    # same mixed-precision contract as the Pallas kernel.
+    cdt = x.dtype
+    a_eff = dt * A[None, None, :]                                # (B,T,H) f32
+
+    xc = x.reshape(b, nc, q, g, hg, p)
+    Bc = B.reshape(b, nc, q, g, n)
+    Cc = C.reshape(b, nc, q, g, n)
+    dtc = dt.reshape(b, nc, q, h).reshape(b, nc, q, g, hg)
+    ac = a_eff.reshape(b, nc, q, h).transpose(0, 3, 1, 2)        # (B,H,nc,Q)
+    cums = jnp.cumsum(ac, axis=-1)                               # (B,H,nc,Q)
+
+    # --- intra-chunk (attention-like, causal-decayed) ---
+    Lmat = jnp.exp(_segsum(ac))                                  # (B,H,nc,Q,Q)
+    Lg = Lmat.reshape(b, g, hg, nc, q, q)
+    scores = jnp.einsum("bcigN,bcjgN->bgcij", Cc, Bc,
+                        preferred_element_type=jnp.float32)      # (B,G,nc,Q,Q)
+    xdt = (xc * dtc[..., None].astype(cdt)).astype(cdt)          # (B,nc,Q,G,HG,P)
+    y_diag = jnp.einsum("bgcij,bghcij,bcjghp->bcighp",
+                        scores.astype(cdt), Lg.astype(cdt), xdt,
+                        preferred_element_type=jnp.float32)
+
+    # --- per-chunk end states ---
+    chunk_sum = cums[..., -1]                                    # (B,H,nc)
+    decay_states = jnp.exp(chunk_sum[..., None] - cums)          # (B,H,nc,Q)
+    dsg = decay_states.reshape(b, g, hg, nc, q)
+    states = jnp.einsum("bcjgN,bghcj,bcjghp->bcghpN", Bc.astype(cdt),
+                        dsg.astype(cdt), xdt,
+                        preferred_element_type=jnp.float32)
+
+    # --- inter-chunk recurrence (sequential scan over chunks) ---
+    cs_h = chunk_sum.transpose(2, 0, 1)                          # (nc,B,H)
+    st = states.transpose(1, 0, 2, 3, 4, 5)                      # (nc,B,G,HG,P,N)
+
+    def step(s, inp):
+        new_s, csum = inp                                        # s: (B,G,HG,P,N)
+        decay = jnp.exp(csum).reshape(b, g, hg)[..., None, None]
+        s_next = s * decay + new_s
+        return s_next, s                                         # emit state *before* chunk
+
+    s0 = jnp.zeros((b, g, hg, p, n), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(step, s0, (st, cs_h))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4, 5)                # (B,nc,G,HG,P,N)
+
+    # --- inter-chunk output ---
+    decay_out = jnp.exp(cums).reshape(b, g, hg, nc, q)
+    y_off = jnp.einsum("bcigN,bghci,bcghpN->bcighp", Cc.astype(jnp.float32),
+                       decay_out, s_prevs,
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, tt, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    if pad:
+        y = y[:, :t]
+    return y.astype(x.dtype), s_final.reshape(b, h, p, n)
+
+
+def ssd_chunked(x, B, C, dt, A, D, chunk: int = 256, impl: str = "ref"):
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.ssd(x, B, C, dt, A, D, chunk=chunk)
+    return ssd_chunked_ref(x, B, C, dt, A, D, chunk=chunk)
+
+
+def ssd_decode_step(x, B, C, dt, A, D, state
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. x (B,H,P), B/C (B,G,N), dt (B,H),
+    state (B,H,P,N) f32 -> (y (B,H,P), state')."""
+    b, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    hg = h // g
+    xf = x.astype(jnp.float32).reshape(b, g, hg, p)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    dtf = dt.reshape(b, g, hg)
+    da = jnp.exp(dtf * A.reshape(g, hg)[None])                  # (B,G,HG)
+    sg = state.reshape(b, g, hg, p, n)
+    upd = jnp.einsum("bghp,bgN->bghpN", xf * dtf[..., None], Bf)
+    s_new = sg * da[..., None, None] + upd
+    y = jnp.einsum("bgN,bghpN->bghp", Cf, s_new)
+    y = y + xf * D.reshape(g, hg)[None, ..., None]
+    return (y.reshape(b, h, p).astype(x.dtype),
+            s_new.reshape(b, h, p, n))

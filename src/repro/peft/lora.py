@@ -1,0 +1,144 @@
+"""LoRA / QLoRA (paper §II-C, Table IX).
+
+``LoRATensor`` wraps a (possibly NF4-quantized) frozen base weight with
+trainable low-rank factors A (fan_in..., r) and B (r, fan_out...).
+``dense()`` applies it as ``x @ W + scaling * (x @ A) @ B`` — the real LoRA
+compute path (no materialized W+BA).
+
+``split_trainable`` partitions a LoRA-fied tree into (trainable, frozen) so
+the optimizer only ever sees adapter parameters — that is the memory effect
+the paper measures (optimizer state ~0, grads ~0 vs Full-FT).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class LoRATensor:
+    base: Any                   # jax.Array | QTensor — frozen
+    a: jax.Array                # (fan_in_dims..., r)  — trainable
+    b: jax.Array                # (r, fan_out_dims...) — trainable
+    scaling: float              # alpha / r (static)
+
+    def tree_flatten_with_keys(self):
+        gk = jax.tree_util.GetAttrKey
+        children = ((gk("base"), self.base), (gk("a"), self.a),
+                    (gk("b"), self.b))
+        return children, (self.scaling,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, scaling=aux[0])
+
+    @property
+    def shape(self):
+        return getattr(self.base, "shape")
+
+    @property
+    def ndim(self):
+        return len(self.shape)
+
+
+# Default adapter targets, as PEFT does for Llama-family models: attention
+# projections (+ MLP optionally). Matched by param-tree key name.
+DEFAULT_TARGETS = ("wq", "wk", "wv", "wo", "in_proj", "out_proj")
+
+
+def _is_leaf(x):
+    from repro.quant.qtensor import QTensor
+    return isinstance(x, (jax.Array, QTensor, jax.ShapeDtypeStruct))
+
+
+def apply_lora(params, rng: jax.Array, rank: int = 64, alpha: float = 16.0,
+               targets: Tuple[str, ...] = DEFAULT_TARGETS,
+               n_in: int = 1, stacked: bool = True):
+    """Wrap matching weights with LoRATensor. ``stacked``: leading dim is the
+    scan-over-layers stack and is preserved in A/B."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params, is_leaf=_is_leaf)
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        key_str = jax.tree_util.keystr(path)
+        name = key_str.split("'")[-2] if "'" in key_str else key_str
+        hit = any(t == name or key_str.endswith(f"'{t}']") for t in targets)
+        if not hit or not hasattr(leaf, "shape") or len(leaf.shape) < 2:
+            out.append(leaf)
+            continue
+        shape = tuple(leaf.shape)
+        lead = shape[:1] if stacked else ()
+        body = shape[1:] if stacked else shape
+        # contract dims: for wo (H, hd, D) n_in=2; default 1
+        nin = 2 if name == "wo" and len(body) == 3 else 1
+        a_shape = lead + body[:nin] + (rank,)
+        b_shape = lead + (rank,) + body[nin:]
+        if isinstance(leaf, jax.ShapeDtypeStruct):
+            a = jax.ShapeDtypeStruct(a_shape, leaf.dtype)
+            b = jax.ShapeDtypeStruct(b_shape, leaf.dtype)
+        else:
+            k = jax.random.fold_in(rng, i)
+            fan_in = 1
+            for s in body[:nin]:
+                fan_in *= s
+            a = (jax.random.normal(k, a_shape, jnp.float32)
+                 / jnp.sqrt(fan_in)).astype(jnp.bfloat16)
+            b = jnp.zeros(b_shape, jnp.bfloat16)   # B=0: identity at init
+        out.append(LoRATensor(leaf, a, b, scaling=alpha / rank))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def lora_spec_overlay(spec_tree, rank: int, targets=DEFAULT_TARGETS):
+    """Produce ParamSpec LoRA wrappers for logical-axis resolution: A gets
+    logical (..., 'rank'), B gets ('rank', ...)."""
+    def wrap(ps: ParamSpec):
+        return ps  # resolution handled structurally in parallel/sharding
+    return jax.tree_util.tree_map(wrap, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def split_trainable(params):
+    """(trainable, frozen): under LoRA only adapters train; without LoRA
+    everything trains (frozen side empty)."""
+    has_lora = any(isinstance(l, LoRATensor)
+                   for l in jax.tree_util.tree_leaves(
+                       params, is_leaf=lambda x: isinstance(x, LoRATensor)))
+    if not has_lora:
+        return params, None
+
+    def train_part(leaf):
+        if isinstance(leaf, LoRATensor):
+            return {"a": leaf.a, "b": leaf.b}
+        return None
+
+    def frozen_part(leaf):
+        if isinstance(leaf, LoRATensor):
+            return {"base": leaf.base, "scaling": leaf.scaling}
+        return leaf
+
+    is_lt = lambda x: isinstance(x, LoRATensor)
+    trainable = jax.tree_util.tree_map(train_part, params, is_leaf=is_lt)
+    frozen = jax.tree_util.tree_map(frozen_part, params, is_leaf=is_lt)
+    return trainable, frozen
+
+
+def merge_trainable(trainable, frozen):
+    """Inverse of split_trainable."""
+    if frozen is None:
+        return trainable
+
+    def merge(t, f):
+        if isinstance(t, dict) and set(t) == {"a", "b"}:
+            return LoRATensor(f["base"], t["a"], t["b"], scaling=f["scaling"])
+        return t if t is not None else f
+
+    def is_pair(t):
+        return isinstance(t, dict) and set(t) == {"a", "b"}
+
+    return jax.tree_util.tree_map(merge, trainable, frozen,
+                                  is_leaf=lambda x: is_pair(x) or x is None)

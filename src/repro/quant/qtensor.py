@@ -1,0 +1,161 @@
+"""Quantized weight tensors: int8 row-wise and NF4 block-wise with double
+quantization (the QLoRA recipe the paper benchmarks as 'Q' / 'QL').
+
+``QTensor`` is a pytree, so it flows through jit/pjit/optimizers/checkpoints
+like any weight; ``dense()`` dequantizes at use. Storage:
+
+* int8  — per-output-channel absmax scale (fp16-class accuracy, 2x mem ↓ vs bf16)
+* nf4   — 4-bit NormalFloat codes packed two-per-byte, absmax per 64-elem
+          block; the fp32 block scales are themselves int8-quantized per 256
+          scales ("double quantization"), matching Dettmers et al. 2023.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# NF4 quantiles (QLoRA paper, Appendix E)
+NF4_CODE = np.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0], dtype=np.float32)
+
+NF4_BLOCK = 64
+DQ_BLOCK = 256  # double-quant: scales quantized in blocks of 256
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QTensor:
+    data: jax.Array                 # int8 (int8 mode) or uint8 packed (nf4)
+    scale: jax.Array                # int8 row scales / int8 block scales (nf4)
+    scale2: Any                     # None (int8) | (f32 per-DQ-block scale, f32 mean)
+    kind: str                       # "int8" | "nf4"
+    shape: Tuple[int, ...]          # original logical shape
+    dtype_orig: Any                 # original dtype (bf16)
+
+    # -- pytree protocol (kind/shape/dtype are static) --
+    def tree_flatten_with_keys(self):
+        gk = jax.tree_util.GetAttrKey
+        children = ((gk("data"), self.data), (gk("scale"), self.scale),
+                    (gk("scale2"), self.scale2))
+        return children, (self.kind, self.shape, self.dtype_orig)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale, scale2 = children
+        return cls(data, scale, scale2, *aux)
+
+    @property
+    def ndim(self):
+        return len(self.shape)
+
+    def nbytes(self) -> int:
+        n = int(np.prod(self.data.shape)) * jnp.dtype(self.data.dtype).itemsize
+        n += int(np.prod(self.scale.shape)) * jnp.dtype(self.scale.dtype).itemsize
+        if self.scale2 is not None:
+            for s in jax.tree_util.tree_leaves(self.scale2):
+                n += int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        return n
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:
+        """`shape` is the *row* shape; a leading stack dim (scan-over-layers)
+        is inferred from data.ndim, so a QTensor sliced by lax.scan
+        dequantizes to the per-layer shape automatically."""
+        if self.kind == "int8":
+            # int8 storage preserves the array shape; no reshape needed
+            w = self.data.astype(jnp.float32) * self.scale.astype(jnp.float32)
+            return w.astype(dtype)
+        # nf4: data is (packed,) or (lead, packed)
+        stacked = self.data.ndim == 2
+        lead = (self.data.shape[0],) if stacked else ()
+        data2 = self.data.reshape(lead + (-1,)) if stacked else self.data
+        lo = (data2 & 0x0F).astype(jnp.int32)
+        hi = (data2 >> 4).astype(jnp.int32)
+        codes = jnp.stack([hi, lo], axis=-1).reshape(lead + (-1,))
+        vals = jnp.asarray(NF4_CODE)[codes]                       # f32
+        s_q, (s_scale, s_mean) = self.scale, self.scale2
+        nb = s_q.shape[-1]
+        s2e = jnp.repeat(s_scale, DQ_BLOCK, axis=-1)[..., :nb]
+        absmax = s_q.astype(jnp.float32) * s2e + s_mean
+        w = vals.reshape(lead + (nb, NF4_BLOCK)) * absmax[..., None]
+        numel = int(np.prod(self.shape))          # drop block padding
+        w = w.reshape(lead + (-1,))[..., :numel]
+        return w.reshape(lead + tuple(self.shape)).astype(dtype)
+
+
+def quantize_int8(w: jax.Array) -> QTensor:
+    """Per-output-channel (last axis kept full, leading axes rowwise)."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32), None, "int8",
+                   tuple(w.shape), w.dtype)
+
+
+def quantize_nf4(w: jax.Array, stacked: bool = False) -> QTensor:
+    """Block-wise NF4 with double-quantized absmax scales. ``stacked``:
+    treat dim 0 as a scan-over-layers stack (quantized per row so the
+    QTensor can be sliced by lax.scan)."""
+    lead = (w.shape[0],) if stacked else ()
+    row_shape = tuple(w.shape[1:]) if stacked else tuple(w.shape)
+    wf = w.astype(jnp.float32).reshape(lead + (-1,))
+    numel = wf.shape[-1]
+    pad = (-numel) % NF4_BLOCK
+    if pad:
+        wf = jnp.concatenate(
+            [wf, jnp.zeros(lead + (pad,), jnp.float32)], axis=-1)
+    blocks = wf.reshape(lead + (-1, NF4_BLOCK))
+    absmax = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1), 1e-8)
+    normed = blocks / absmax[..., None]
+    dist = jnp.abs(normed[..., None] - jnp.asarray(NF4_CODE))
+    codes = jnp.argmin(dist, axis=-1).astype(jnp.uint8)
+    flat = codes.reshape(lead + (-1, 2))
+    packed = (flat[..., 0] << 4) | flat[..., 1]
+    # double quantization of the scales (per row)
+    nb = absmax.shape[-1]
+    pad2 = (-nb) % DQ_BLOCK
+    am = (jnp.concatenate([absmax, jnp.zeros(lead + (pad2,), jnp.float32)],
+                          axis=-1) if pad2 else absmax)
+    mean = jnp.mean(absmax, axis=-1, keepdims=True)
+    g = (am - mean).reshape(lead + (-1, DQ_BLOCK))
+    s2 = jnp.maximum(jnp.max(jnp.abs(g), axis=-1), 1e-8) / 127.0
+    s_q = jnp.clip(jnp.round(g / s2[..., None]), -127, 127
+                   ).astype(jnp.int8).reshape(lead + (-1,))[..., :nb]
+    return QTensor(packed, s_q, (s2, mean), "nf4", row_shape, w.dtype)
+
+
+_QUANT_SKIP_NAMES = ("ln", "norm", "final_ln", "enc_final_ln", "bq", "bk",
+                     "bv", "conv_w", "conv_b", "a_log", "dt_bias", "d_skip",
+                     "q_norm", "k_norm", "router")
+
+
+def quantize_tree(params, kind: str, min_size: int = 4096):
+    """Quantize every large linear weight in a param tree. Norms, biases,
+    convs and routers stay full precision (as bitsandbytes does — and the
+    router must stay exact or expert assignment flips). Weights under a
+    'blocks' subtree are stack-quantized per layer so lax.scan can slice
+    them."""
+    def q(path, leaf):
+        if not isinstance(leaf, jax.Array) and not hasattr(leaf, "shape"):
+            return leaf
+        pstr = jax.tree_util.keystr(path)
+        name = pstr.rsplit("'", 2)[-2] if "'" in pstr else pstr
+        if name in _QUANT_SKIP_NAMES:
+            return leaf
+        stacked = "blocks']" in pstr
+        eff_ndim = leaf.ndim - (1 if stacked else 0)
+        if eff_ndim < 2 or int(np.prod(leaf.shape)) < min_size:
+            return leaf
+        if kind == "int8":
+            return quantize_int8(leaf)
+        return quantize_nf4(leaf, stacked=stacked and leaf.ndim >= 2)
+
+    return jax.tree_util.tree_map_with_path(q, params)

@@ -1,0 +1,153 @@
+"""Paged KV cache with a token-granular block allocator.
+
+The TPU-native analogue of vLLM's PagedAttention / LightLLM's TokenAttention
+(paper §II-D): HBM is carved into fixed blocks of `block_size` tokens; a
+sequence owns a *block table* (list of block ids) instead of a contiguous
+span, so fragmentation is bounded by one block per sequence and arbitrary
+prefix sharing is possible. Unlike the CUDA gather-based designs, lookups
+stay dense: the engine materializes each running batch's KV by gathering
+whole 128-aligned blocks (dense tiles — what the TPU memory system wants).
+
+Int8KV (LightLLM) is supported by storing quantized KV + per-(block, head)
+scales, doubling token capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PagedKVConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    n_blocks: int            # total HBM blocks
+    block_size: int = 256    # tokens per block (128-aligned for the MXU)
+    kv_quant: str = "none"   # none | int8
+
+
+class BlockAllocator:
+    """Free-list allocator over KV blocks (host-side, O(1) alloc/free)."""
+
+    def __init__(self, n_blocks: int):
+        self.free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self.n_blocks = n_blocks
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if len(self.free) < n:
+            return None
+        return [self.free.pop() for _ in range(n)]
+
+    def release(self, blocks: List[int]) -> None:
+        self.free.extend(blocks)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / max(self.n_blocks, 1)
+
+
+class PagedKVCache:
+    """Device storage: (L, n_blocks, block, K, hd) per k/v (+ int8 scales).
+    All updates are pure-functional jnp ops on the storage arrays."""
+
+    def __init__(self, cfg: PagedKVConfig, dtype=jnp.bfloat16):
+        self.cfg = cfg
+        store_dtype = jnp.int8 if cfg.kv_quant == "int8" else dtype
+        shape = (cfg.n_layers, cfg.n_blocks, cfg.block_size,
+                 cfg.n_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, store_dtype)
+        self.v = jnp.zeros(shape, store_dtype)
+        if cfg.kv_quant == "int8":
+            sshape = (cfg.n_layers, cfg.n_blocks, cfg.block_size,
+                      cfg.n_kv_heads, 1)
+            self.k_scale = jnp.ones(sshape, jnp.float32)
+            self.v_scale = jnp.ones(sshape, jnp.float32)
+        else:
+            self.k_scale = self.v_scale = None
+
+    # ---- quant helpers ----
+    def _enc(self, x) -> Tuple[jax.Array, Optional[jax.Array]]:
+        if self.cfg.kv_quant != "int8":
+            return x, None
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-6) / 127.0
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        return q, scale
+
+    def _dec(self, q, scale, dtype=jnp.bfloat16):
+        if scale is None:
+            return q.astype(dtype)
+        return (q.astype(jnp.float32) * scale).astype(dtype)
+
+    # ---- functional updates ----
+    def write_prefill(self, layer_kv: Tuple[jax.Array, jax.Array],
+                      block_ids: List[int]) -> None:
+        """layer_kv: k,v (L, T, K, hd) for ONE sequence; scatter into the
+        sequence's blocks (T padded up to block multiple)."""
+        k, v = layer_kv
+        bs = self.cfg.block_size
+        t = k.shape[1]
+        pad = (-t) % bs
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        nb = k.shape[1] // bs
+        kq = k.reshape(k.shape[0], nb, bs, *k.shape[2:])
+        vq = v.reshape(v.shape[0], nb, bs, *v.shape[2:])
+        kq, ks = self._enc(kq)
+        vq, vs = self._enc(vq)
+        ids = jnp.asarray(block_ids[:nb], jnp.int32)
+        self.k = self.k.at[:, ids].set(kq)
+        self.v = self.v.at[:, ids].set(vq)
+        if ks is not None:
+            self.k_scale = self.k_scale.at[:, ids].set(ks)
+            self.v_scale = self.v_scale.at[:, ids].set(vs)
+
+    def write_token(self, layer_kv: Tuple[jax.Array, jax.Array],
+                    block_ids: jax.Array, offsets: jax.Array) -> None:
+        """Decode append: k,v (L, B, K, hd); block_ids/offsets (B,) mapping
+        each sequence's next slot to (block, in-block offset)."""
+        k, v = layer_kv
+        kq, ks = self._enc(k)
+        vq, vs = self._enc(v)
+        L = k.shape[0]
+        bsz = k.shape[1]
+        li = jnp.arange(L)[:, None].repeat(bsz, 1).reshape(-1)
+        bi = jnp.tile(block_ids, L)
+        oi = jnp.tile(offsets, L)
+        self.k = self.k.at[li, bi, oi].set(kq.reshape(-1, *k.shape[2:]))
+        self.v = self.v.at[li, bi, oi].set(vq.reshape(-1, *v.shape[2:]))
+        if ks is not None:
+            self.k_scale = self.k_scale.at[li, bi, oi].set(
+                ks.reshape(-1, *ks.shape[2:]))
+            self.v_scale = self.v_scale.at[li, bi, oi].set(
+                vs.reshape(-1, *vs.shape[2:]))
+
+    def gather(self, layer: int, block_table: jax.Array,
+               dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+        """Dense per-batch view: block_table (B, max_blocks) int32 ->
+        k,v (B, max_blocks*block, K, hd). Dense 128-aligned block gather."""
+        kq = self.k[layer][block_table]          # (B, MB, bs, K, hd)
+        vq = self.v[layer][block_table]
+        ks = self.k_scale[layer][block_table] if self.k_scale is not None else None
+        vs = self.v_scale[layer][block_table] if self.v_scale is not None else None
+        k = self._dec(kq, ks, dtype)
+        v = self._dec(vq, vs, dtype)
+        b, mb, bs = k.shape[:3]
+        return (k.reshape(b, mb * bs, *k.shape[3:]),
+                v.reshape(b, mb * bs, *v.shape[3:]))
+
+    def hbm_bytes(self) -> int:
+        n = self.k.size * self.k.dtype.itemsize * 2
+        if self.k_scale is not None:
+            n += self.k_scale.size * 4 * 2
+        return int(n)

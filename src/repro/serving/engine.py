@@ -1,0 +1,291 @@
+"""Continuous-batching serving engine (vLLM / LightLLM / TGI analogue).
+
+The engine owns:
+  * a paged KV cache + block allocator (serving/cache.py),
+  * dense per-slot SSM states (constant-size — SSM/hybrid archs need paged
+    KV only for their attention layers, a capacity finding reported in
+    EXPERIMENTS.md),
+  * a FIFO admission scheduler with block-budget admission control
+    (LightLLM-style dynamic batching: admit while blocks + slots remain),
+  * the decode step over the running batch.
+
+The paper's serving benchmarks (Figs. 6-10) drive this engine with burst
+arrivals and record per-request latency for CDFs plus aggregate throughput.
+On-CPU smoke scale here; the TPU deployment path jits the same step with the
+sequence-sharded dense cache (launch/build.py build_decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ArchConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.lm import LM
+from repro.serving.cache import BlockAllocator, PagedKVCache, PagedKVConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: List[int]
+    max_new_tokens: int = 32
+    arrival: float = 0.0
+    # lifecycle
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def length(self) -> int:
+        return len(self.tokens) + len(self.output)
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
+                 n_blocks: int = 64, block_size: int = 16,
+                 kv_quant: str = "none", greedy: bool = True,
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.greedy = greedy
+        self.clock = clock
+        n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+        self.kv_cfg = PagedKVConfig(
+            n_layers=max(n_attn, 1), n_kv_heads=max(cfg.n_kv_heads, 1),
+            head_dim=max(cfg.head_dim, 1), n_blocks=n_blocks,
+            block_size=block_size, kv_quant=kv_quant)
+        self.kv = PagedKVCache(self.kv_cfg)
+        self.alloc = BlockAllocator(n_blocks)
+        self.waiting: deque = deque()
+        self.running: List[Optional[Request]] = [None] * max_batch
+        self.finished: List[Request] = []
+        # dense per-slot SSM states (constant size per slot)
+        self._ssm_states = self._init_ssm_states()
+        self._attn_layer_ids = [i for i, k in enumerate(cfg.layer_kinds())
+                                if k == "attn"]
+        self.steps = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+
+    # ------------------------------------------------------------------
+    def _init_ssm_states(self):
+        cfg = self.cfg
+        states = {}
+        for i, kind in enumerate(cfg.layer_kinds()):
+            if kind == "ssm":
+                states[i] = B.ssm_init_cache(cfg, self.max_batch)
+        return states
+
+    def _layer_params(self, layer: int):
+        pos = layer % self.model.period
+        per = layer // self.model.period
+        return jax.tree_util.tree_map(
+            lambda x: x[per], self.model_params_blocks()[f"pos{pos}"])
+
+    def model_params_blocks(self):
+        return self.params["blocks"]
+
+    # ------------------------------------------------------------------
+    # Scheduling
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.arrival = req.arrival or self.clock()
+        self.waiting.append(req)
+
+    def _blocks_needed(self, req: Request) -> int:
+        total = len(req.tokens) + req.max_new_tokens
+        return -(-total // self.block_size)
+
+    def _admit(self) -> List[Request]:
+        admitted = []
+        while self.waiting:
+            req = self.waiting[0]
+            free_slots = [i for i, r in enumerate(self.running) if r is None]
+            if not free_slots:
+                break
+            need = self._blocks_needed(req)
+            if self.alloc.n_free < need:
+                break   # admission control: no KV budget -> keep waiting
+            blocks = self.alloc.alloc(need)
+            self.waiting.popleft()
+            req.blocks = blocks
+            req.slot = free_slots[0]
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    # ------------------------------------------------------------------
+    # Prefill: run the prompt through the model, page out attention KV,
+    # snapshot SSM states into the slot.
+    # ------------------------------------------------------------------
+
+    def _prefill(self, req: Request) -> int:
+        batch = {"tokens": jnp.asarray([req.tokens], jnp.int32)}
+        logits, cache, _ = self.model.prefill(self.params, batch)
+        attn_idx = 0
+        for i, kind in enumerate(self.cfg.layer_kinds()):
+            pos, per = i % self.model.period, i // self.model.period
+            c = cache[f"pos{pos}"]
+            if isinstance(c, dict) and "self" in c:
+                c = c["self"]
+            sub = jax.tree_util.tree_map(lambda x: x[per], c)
+            if kind == "attn":
+                k = sub["k"][:, : len(req.tokens)]     # (1,T,K,hd)
+                v = sub["v"][:, : len(req.tokens)]
+                attn_layer = self._attn_layer_ids.index(i)
+                self._kv_write_single(attn_layer, k[0], v[0], req.blocks)
+                attn_idx += 1
+            elif kind == "ssm":
+                st = self._ssm_states[i]
+                for key in ("conv", "state"):
+                    st[key] = st[key].at[req.slot].set(sub[key][0])
+        tok = int(jnp.argmax(logits[0]))
+        req.output.append(tok)
+        req.first_token_time = self.clock()
+        self.prefill_tokens += len(req.tokens)
+        return tok
+
+    def _kv_write_single(self, attn_layer: int, k, v, blocks: List[int]):
+        """k,v (T,K,hd) single sequence -> pages of one attention layer."""
+        bs = self.block_size
+        t = k.shape[0]
+        pad = (-t) % bs
+        if pad:
+            k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+        nb = k.shape[0] // bs
+        kq, ks = self.kv._enc(k.reshape(nb, bs, *k.shape[1:]))
+        vq, vs = self.kv._enc(v.reshape(nb, bs, *v.shape[1:]))
+        ids = jnp.asarray(blocks[:nb], jnp.int32)
+        self.kv.k = self.kv.k.at[attn_layer, ids].set(kq)
+        self.kv.v = self.kv.v.at[attn_layer, ids].set(vq)
+        if ks is not None:
+            self.kv.k_scale = self.kv.k_scale.at[attn_layer, ids].set(ks)
+            self.kv.v_scale = self.kv.v_scale.at[attn_layer, ids].set(vs)
+
+    # ------------------------------------------------------------------
+    # Decode one token for every running sequence (paged attention).
+    # ------------------------------------------------------------------
+
+    def _decode_batch(self) -> None:
+        cfg = self.cfg
+        live = [r for r in self.running if r is not None]
+        if not live:
+            return
+        bsz = self.max_batch
+        tokens = np.zeros((bsz, 1), np.int32)
+        lengths = np.zeros((bsz,), np.int32)
+        max_blocks = max(len(r.blocks) for r in live)
+        table = np.zeros((bsz, max_blocks), np.int32)
+        for r in live:
+            tokens[r.slot, 0] = r.output[-1]
+            lengths[r.slot] = r.length - 1          # current KV length
+            table[r.slot, : len(r.blocks)] = r.blocks
+        tokens = jnp.asarray(tokens)
+        lengths = jnp.asarray(lengths)
+        table = jnp.asarray(table)
+
+        x = jnp.take(self.params["embed"], tokens, axis=0)
+        attn_layer = 0
+        for i, kind in enumerate(cfg.layer_kinds()):
+            pos, per = i % self.model.period, i // self.model.period
+            pp = jax.tree_util.tree_map(
+                lambda a: a[per], self.params["blocks"][f"pos{pos}"])
+            if kind == "attn":
+                x = self._paged_attn(x, pp["mix"], attn_layer, table,
+                                     lengths)
+                attn_layer += 1
+            else:
+                st = self._ssm_states[i]
+                x, nc = B.ssm_apply(x, pp["mix"], cfg, None, cache=st)
+                self._ssm_states[i] = nc
+            if self.model.fkinds[pos] == "moe":
+                x, _ = B.moe_apply(x, pp["ffn"], cfg, None, capacity_mult=4.0)
+            else:
+                x = B.ffn_apply(x, pp["ffn"], cfg, None)
+        x = L.rmsnorm(x, self.params["final_ln"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = self.params["embed"].T
+        else:
+            w = self.params["head"]
+        logits = L.dense(x, w)[:, 0]
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+
+        now = self.clock()
+        for r in list(live):
+            r.output.append(int(next_tokens[r.slot]))
+            self.decode_tokens += 1
+            if len(r.output) >= r.max_new_tokens:
+                r.finish_time = now
+                self.finished.append(r)
+                self.alloc.release(r.blocks)
+                self.running[r.slot] = None
+
+    def _paged_attn(self, x, p, attn_layer: int, table, lengths):
+        cfg = self.cfg
+        h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+        q, k, v = B._qkv(h, p, cfg, None, positions=lengths[:, None])
+        # append the new token to its page
+        bs = self.block_size
+        blk = table[jnp.arange(table.shape[0]),
+                    jnp.clip(lengths // bs, 0, table.shape[1] - 1)]
+        off = lengths % bs
+        kq, ks = self.kv._enc(k[:, 0])
+        vq, vs = self.kv._enc(v[:, 0])
+        self.kv.k = self.kv.k.at[attn_layer, blk, off].set(kq)
+        self.kv.v = self.kv.v.at[attn_layer, blk, off].set(vq)
+        if ks is not None:
+            self.kv.k_scale = self.kv.k_scale.at[attn_layer, blk, off].set(ks)
+            self.kv.v_scale = self.kv.v_scale.at[attn_layer, blk, off].set(vs)
+        kd, vd = self.kv.gather(attn_layer, table, dtype=q.dtype)
+        out = L.attention(q, kd, vd, mode="naive", causal=False,
+                          kv_len=lengths + 1)
+        y = L.dense(out, p["wo"], n_in=2)
+        return x + y
+
+    # ------------------------------------------------------------------
+
+    def step(self) -> None:
+        for req in self._admit():
+            self._prefill(req)
+        self._decode_batch()
+        self.steps += 1
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.waiting or any(self.running)) and self.steps < max_steps:
+            self.step()
+        return self.finished
+
+    def stats(self) -> Dict[str, float]:
+        done = self.finished
+        lat = [r.finish_time - r.arrival for r in done if r.finish_time]
+        ttft = [r.first_token_time - r.arrival for r in done
+                if r.first_token_time]
+        wall = max((r.finish_time or 0) for r in done) - \
+            min(r.arrival for r in done) if done else 0.0
+        toks = sum(len(r.output) for r in done)
+        return {
+            "requests": len(done),
+            "throughput_tok_s": toks / wall if wall > 0 else 0.0,
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "kv_utilization": self.alloc.utilization(),
+            "decode_tokens": self.decode_tokens,
+            "prefill_tokens": self.prefill_tokens,
+        }

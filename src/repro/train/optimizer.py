@@ -1,0 +1,130 @@
+"""AdamW with ZeRO-shardable state, optional 8-bit block-wise state
+(bitsandbytes-style — pairs with the paper's 'Q' rows), and weight decay.
+
+State layout mirrors the trainable-param tree so the same sharding resolver
+covers it; ZeRO-1/2/3 placement is decided in parallel/sharding.py, and
+offload moves these trees to pinned host memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+OPT8_BLOCK = 256
+
+
+class Opt8(NamedTuple):
+    """Block-wise int8 moment storage (per 256-elem block absmax scale)."""
+    q: jax.Array        # int8, padded flat
+    scale: jax.Array    # f32 per block
+    shape: Tuple[int, ...]
+
+
+def _o8_encode(x: jax.Array) -> Opt8:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % OPT8_BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    b = flat.reshape(-1, OPT8_BLOCK)
+    s = jnp.maximum(jnp.max(jnp.abs(b), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(b / s[:, None]), -127, 127).astype(jnp.int8)
+    return Opt8(q, s, tuple(x.shape))
+
+
+def _o8_decode(o: Opt8) -> jax.Array:
+    import numpy as np
+    flat = (o.q.astype(jnp.float32) * o.scale[:, None]).reshape(-1)
+    return flat[: int(np.prod(o.shape))].reshape(o.shape)
+
+
+jax.tree_util.register_pytree_node(
+    Opt8, lambda o: ((o.q, o.scale), (o.shape,)),
+    lambda aux, ch: Opt8(ch[0], ch[1], aux[0]))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    state_bits: int = 32          # 32 | 8 (block-wise int8 m/v)
+    master_fp32: bool = False     # keep fp32 master weights in opt state
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup) / jnp.maximum(cfg.decay_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(cfg: AdamWConfig, trainable) -> Dict[str, Any]:
+    def zeros_like32(x):
+        z = jnp.zeros(x.shape, jnp.float32)
+        return _o8_encode(z) if cfg.state_bits == 8 else z
+
+    state = {
+        "m": jax.tree_util.tree_map(zeros_like32, trainable),
+        "v": jax.tree_util.tree_map(zeros_like32, trainable),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), trainable)
+    return state
+
+
+def adamw_apply(cfg: AdamWConfig, grads, opt_state, trainable):
+    """Returns (new_trainable, new_opt_state)."""
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    use8 = cfg.state_bits == 8
+    master = opt_state.get("master")
+
+    def upd(g, m, v, p, mw=None):
+        gf = g.astype(jnp.float32)
+        mf = _o8_decode(m) if use8 else m
+        vf = _o8_decode(v) if use8 else v
+        mf = b1 * mf + (1 - b1) * gf
+        vf = b2 * vf + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        base = (mw if mw is not None else p).astype(jnp.float32)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + decay * base)
+        return (new, _o8_encode(mf) if use8 else mf,
+                _o8_encode(vf) if use8 else vf)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    is8 = lambda x: isinstance(x, Opt8)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"], is_leaf=is8)
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"], is_leaf=is8)
+    flat_p = jax.tree_util.tree_leaves(trainable)
+    flat_mw = (jax.tree_util.tree_leaves(master)
+               if master is not None else [None] * len(flat_p))
+    outs = [upd(g, m, v, p, mw) for g, m, v, p, mw in
+            zip(flat_g, flat_m, flat_v, flat_p, flat_mw)]
+    news = [o[0] for o in outs]
+    new_state = {
+        "m": jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs]),
+        "v": jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs]),
+        "step": step,
+    }
+    if master is not None:
+        new_state["master"] = jax.tree_util.tree_unflatten(tdef, news)
+    new_params = jax.tree_util.tree_unflatten(
+        tdef, [n.astype(p.dtype) for n, p in zip(news, flat_p)])
+    return new_params, new_state

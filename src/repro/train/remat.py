@@ -1,0 +1,31 @@
+"""Activation recomputation policies (paper §II-E 'Activation Recomputation').
+
+Applied around the per-layer scan body so the whole decoder layer is the
+rematerialization unit — the same granularity DeepSpeed/Megatron checkpoint
+at. Policies:
+
+  none       — store everything XLA decides to keep (paper's 'Naive')
+  full       — save only the layer boundary, recompute the layer in bwd ('R')
+  selective  — save matmul outputs, recompute elementwise ops
+               (Korthikanti et al.'s selective recomputation)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def wrap_remat(body, mode: str):
+    if mode == "none":
+        return body
+    if mode == "full":
+        policy = jax.checkpoint_policies.nothing_saveable
+    elif mode == "selective":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        raise ValueError(f"unknown remat mode {mode!r}")
+    return jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+
+def remat_extra_flops_factor(mode: str) -> float:
+    """Analytic forward-recompute multiplier for the roofline notes."""
+    return {"none": 1.0, "selective": 1.15, "full": 4.0 / 3.0}[mode]

@@ -1,0 +1,220 @@
+"""train_step builder: composes model loss, the technique matrix, ZeRO
+sharding constraints, host offload, gradient accumulation and the optimizer
+into one jit-able (state, batch) -> (state, metrics) function.
+
+Phase structure mirrors the paper's dissection (forward / backward /
+optimizer, Tables V & VII); perfscope hooks time each phase on real runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig, Technique
+from repro.models.lm import LM
+from repro.parallel.sharding import ShardCtx, state_shardings, logical_by_path_of
+from repro.peft.lora import apply_lora, split_trainable, merge_trainable
+from repro.quant.qtensor import QTensor, quantize_tree, quantize_nf4, quantize_int8
+from repro.train.optimizer import AdamWConfig, init_opt_state, adamw_apply
+
+
+# --------------------------------------------------------------------------
+# Train state
+# --------------------------------------------------------------------------
+
+
+def is_qtensor(x):
+    return isinstance(x, QTensor)
+
+
+def dequant_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda l: l.dequantize(jnp.bfloat16) if is_qtensor(l) else l,
+        tree, is_leaf=is_qtensor)
+
+
+def requant_like(tree, like):
+    def rq(new, old):
+        if is_qtensor(old):
+            from repro.quant.qtensor import quantize_int8, quantize_nf4
+            if old.kind == "int8":
+                return quantize_int8(new)
+            return quantize_nf4(new, stacked=(old.data.ndim == 2))
+        return new
+    return jax.tree_util.tree_map(
+        rq, tree, like, is_leaf=lambda x: is_qtensor(x))
+
+
+def init_train_state(model: LM, technique: Technique, rng: jax.Array,
+                     opt_cfg: Optional[AdamWConfig] = None) -> Dict[str, Any]:
+    """Materialize params (+ LoRA/quant transforms) and optimizer state."""
+    opt_cfg = opt_cfg or AdamWConfig(
+        state_bits=8 if technique.quant != "none" and technique.peft == "none"
+        else 32)
+    params = model.init(rng)
+    if technique.quant != "none":
+        params = quantize_tree(params, technique.quant)
+    if technique.peft in ("lora", "qlora"):
+        if technique.peft == "qlora" and technique.quant == "none":
+            params = quantize_tree(params, "nf4")
+        params = apply_lora(params, jax.random.fold_in(rng, 7),
+                            rank=technique.lora_rank)
+    trainable, frozen = split_trainable(params)
+    if technique.quant != "none" and frozen is None:
+        # full-parameter quantized training: moments track dequant view
+        opt_basis = dequant_tree(trainable)
+    else:
+        opt_basis = trainable
+    opt = init_opt_state(opt_cfg, opt_basis)
+    return {"params": params, "opt": opt,
+            "step": jnp.zeros((), jnp.int32)}, opt_cfg
+
+
+def train_state_shardings(state, model: LM, ctx: ShardCtx):
+    """Sharding tree matching init_train_state's output."""
+    logical = logical_by_path_of(model.param_specs())
+    out = {
+        "params": state_shardings(ctx, state["params"], logical,
+                                  component="params"),
+        "opt": state_shardings(ctx, state["opt"], logical, component="opt"),
+        "step": jax.sharding.NamedSharding(ctx.mesh,
+                                           jax.sharding.PartitionSpec()),
+    }
+    return out
+
+
+# --------------------------------------------------------------------------
+# Step builder
+# --------------------------------------------------------------------------
+
+
+def build_train_step(model: LM, technique: Technique, ctx: ShardCtx,
+                     opt_cfg: AdamWConfig) -> Callable:
+    quant_full = technique.quant != "none" and technique.peft == "none"
+    logical = logical_by_path_of(model.param_specs())
+
+    def grad_constraint(grads):
+        if ctx.mesh is None or technique.zero_stage < 2:
+            return grads
+        sh = state_shardings(ctx, grads, logical, component="grads")
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, sh)
+
+    def to_device_mem(tree):
+        """+O: optimizer state lives in pinned host; pull to HBM for use."""
+        if not technique.offload or ctx.mesh is None:
+            return tree
+        sh = state_shardings(
+            ctx, tree, logical, component="opt")
+        dev = jax.tree_util.tree_map(
+            lambda s: jax.sharding.NamedSharding(s.mesh, s.spec), sh)
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, dev)
+
+    def to_host_mem(tree):
+        if not technique.offload or ctx.mesh is None:
+            return tree
+        sh = state_shardings(ctx, tree, logical, component="opt")
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, sh)
+
+    def loss_on_trainable(trainable, frozen, batch):
+        params = merge_trainable(trainable, frozen)
+        return model.loss(params, batch)
+
+    def gather_once(tree):
+        """ZeRO-3 + accum: materialize the TP-shard view once per step so
+        the microbatch scan reuses it (accum-x fewer param all-gathers)."""
+        if not (technique.zero3_gather_once and technique.zero_stage >= 3
+                and ctx.mesh is not None):
+            return tree
+        ctx0 = dataclasses.replace(
+            ctx, technique=dataclasses.replace(technique, zero_stage=0))
+        sh = state_shardings(ctx0, tree, logical, component="params")
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, sh)
+
+    def params_to_device(tree):
+        """Z3+O: parameters live in pinned host memory; stream them into
+        HBM at the start of the step (ZeRO-Offload semantics)."""
+        if not (technique.offload and technique.zero_stage >= 3
+                and ctx.mesh is not None):
+            return tree
+        ctx_dev = dataclasses.replace(
+            ctx, technique=dataclasses.replace(technique, offload=False))
+        sh = state_shardings(ctx_dev, tree, logical, component="params")
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, sh)
+
+    def params_to_host(tree):
+        if not (technique.offload and technique.zero_stage >= 3
+                and ctx.mesh is not None):
+            return tree
+        sh = state_shardings(ctx, tree, logical, component="params")
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, sh)
+
+    def train_step(state, batch):
+        params = state["params"]
+        params = params_to_device(params)
+        trainable, frozen = split_trainable(params)
+        trainable = gather_once(trainable)
+        if quant_full:
+            # grads w.r.t. the dequantized view; requantize after update
+            qt = trainable
+            trainable = dequant_tree(qt)
+
+        def lfn(tr):
+            # quant_full: `tr` is the dequantized (bf16) view — the real
+            # QLoRA-style dequant-train-requant cycle.
+            return loss_on_trainable(tr, frozen, batch)
+
+        accum = max(technique.grad_accum, 1)
+        if accum > 1:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), trainable)
+            # the f32 accumulation buffer must carry ZeRO-sharded, else the
+            # scan carry holds a replicated full-model gradient
+            zero_g = grad_constraint(zero_g)
+
+            def scan_body(carry, mb):
+                (l, mets), g = jax.value_and_grad(
+                    lambda tr: loss_on_trainable(tr, frozen, mb),
+                    has_aux=True)(trainable)
+                g = grad_constraint(g)
+                gs, ls = carry
+                gs = grad_constraint(
+                    jax.tree_util.tree_map(jnp.add, gs, g))
+                return (gs, ls + l), mets
+            (gsum, lsum), metss = jax.lax.scan(scan_body, (zero_g, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metss)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lfn, has_aux=True)(trainable)
+
+        grads = grad_constraint(grads)
+        opt_in = to_device_mem(state["opt"])
+        new_trainable, new_opt = adamw_apply(opt_cfg, grads, opt_in, trainable)
+        new_opt = to_host_mem(new_opt)
+        if quant_full:
+            new_trainable = requant_like(new_trainable, qt)
+        new_params = params_to_host(merge_trainable(new_trainable, frozen))
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,168 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (interpret mode on CPU).
+
+Shapes sweep block-boundary cases (single block, multi-block, GQA groups,
+non-128 head dims that exercise padding) and dtypes bf16/f32.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.ssd import ssd_chunked_ref
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32).astype(dtype)
+
+
+TOL = {jnp.bfloat16: dict(atol=3e-2, rtol=3e-2),
+       jnp.float32: dict(atol=2e-5, rtol=2e-5)}
+
+
+# --------------------------------------------------------------------------
+# flash attention forward
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,s,h,kv,d", [
+    (1, 128, 128, 4, 4, 128),      # single block, MHA
+    (2, 256, 256, 4, 2, 128),      # multi-block, GQA
+    (1, 256, 256, 8, 1, 64),       # MQA + head-dim padding
+    (2, 128, 384, 4, 4, 128),      # cross: S > T (non-causal)
+])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_fwd(b, t, s, h, kv, d, dtype, causal):
+    if causal and t != s:
+        pytest.skip("causal requires square for this contract")
+    q = rand(0, (b, t, h, d), dtype)
+    k = rand(1, (b, s, kv, d), dtype)
+    v = rand(2, (b, s, kv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), **TOL[dtype])
+
+
+def test_flash_attention_grads_match_reference():
+    b, t, h, kv, d = 1, 128, 4, 2, 128
+    q = rand(0, (b, t, h, d), jnp.float32)
+    k = rand(1, (b, t, kv, d), jnp.float32)
+    v = rand(2, (b, t, kv, d), jnp.float32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, causal=True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.flash_attention_ref(q, k, v, causal=True) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, atol=2e-3, rtol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# flash decode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (2, 256, 4, 4, 128),
+    (3, 512, 8, 2, 128),
+    (2, 256, 4, 1, 64),
+])
+def test_flash_decode(b, s, h, kv, d):
+    q = rand(0, (b, h, d), jnp.float32)
+    k = rand(1, (b, s, kv, d), jnp.float32)
+    v = rand(2, (b, s, kv, d), jnp.float32)
+    lengths = jnp.array([s // 2, s, max(s // 4, 1)][:b], jnp.int32)
+    out = ops.flash_decode(q, k, v, lengths)
+    want = ref.flash_decode_ref(q[:, None], k, v, lengths)[:, 0]
+    np.testing.assert_allclose(out, want, atol=2e-4, rtol=2e-4)
+
+
+def test_flash_decode_partials_merge():
+    """Sequence-sharded decode: two half-cache partials LSE-merge to the
+    full-cache answer (the model-axis sharded serving path)."""
+    from repro.kernels.flash_decode import flash_decode_partial, merge_partials
+    b, s, kv, h, d = 2, 512, 2, 4, 128
+    q = rand(0, (b, h, d), jnp.float32)
+    k = rand(1, (b, s, kv, d), jnp.float32)
+    v = rand(2, (b, s, kv, d), jnp.float32)
+    lengths = jnp.array([300, 512], jnp.int32)
+    half = s // 2
+    kt, vt = jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)
+    p0 = flash_decode_partial(q, kt[:, :, :half], vt[:, :, :half],
+                              jnp.minimum(lengths, half))
+    p1 = flash_decode_partial(q, kt[:, :, half:], vt[:, :, half:],
+                              jnp.maximum(lengths - half, 0))
+    merged = merge_partials([p0, p1]).astype(jnp.float32)
+    want = ref.flash_decode_ref(q[:, None], k, v, lengths)[:, 0]
+    np.testing.assert_allclose(merged, want, atol=2e-4, rtol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# SSD
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,p,g,n,chunk", [
+    (1, 128, 2, 64, 1, 128, 64),
+    (2, 256, 4, 64, 2, 64, 128),
+    (1, 96, 2, 64, 1, 16, 32),       # jamba-like small state + ragged T
+])
+def test_ssd_kernel_vs_sequential_ref(b, t, h, p, g, n, chunk):
+    x = rand(0, (b, t, h, p), jnp.float32) * 0.5
+    B = rand(1, (b, t, g, n), jnp.float32) * 0.5
+    C = rand(2, (b, t, g, n), jnp.float32) * 0.5
+    dt = jax.nn.softplus(rand(3, (b, t, h), jnp.float32))
+    A = -jnp.exp(rand(4, (h,), jnp.float32) * 0.3)
+    D = rand(5, (h,), jnp.float32)
+    y, state = ops.ssd(x, B, C, dt, A, D, chunk=chunk)
+    y_ref, state_ref = ref.ssd_ref(x, B, C, dt, A, D)
+    np.testing.assert_allclose(y, y_ref, atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(state, state_ref, atol=2e-4, rtol=2e-3)
+
+
+def test_ssd_chunked_jnp_matches_sequential():
+    """models/ssd.py chunked reference == definitional sequential scan."""
+    b, t, h, p, g, n = 2, 192, 4, 32, 1, 48
+    x = rand(0, (b, t, h, p), jnp.float32) * 0.5
+    B = rand(1, (b, t, g, n), jnp.float32) * 0.5
+    C = rand(2, (b, t, g, n), jnp.float32) * 0.5
+    dt = jax.nn.softplus(rand(3, (b, t, h), jnp.float32))
+    A = -jnp.exp(rand(4, (h,), jnp.float32) * 0.3)
+    D = rand(5, (h,), jnp.float32)
+    y1, s1 = ssd_chunked_ref(x, B, C, dt, A, D, chunk=64)
+    y2, s2 = ref.ssd_ref(x, B, C, dt, A, D)
+    np.testing.assert_allclose(y1, y2, atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(s1, s2, atol=2e-4, rtol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm / int8 matmul
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,d", [(64, 128), (1024, 512), (333, 256)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_rmsnorm_kernel(rows, d, dtype):
+    x = rand(0, (rows, d), dtype)
+    w = rand(1, (d,), dtype) + 1.0
+    out = ops.rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (64, 512, 384)])
+def test_int8_matmul_kernel(m, k, n):
+    from repro.quant.qtensor import quantize_int8
+    x = rand(0, (m, k), jnp.bfloat16)
+    w = rand(1, (k, n), jnp.bfloat16)
+    qt = quantize_int8(w)
+    out = ops.int8_matmul(x, qt.data, qt.scale)
+    want = ref.int8_matmul_ref(x, qt.data, qt.scale)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), atol=5e-2, rtol=5e-2)

