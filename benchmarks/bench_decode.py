@@ -1,0 +1,80 @@
+"""Decode micro-benchmark: legacy per-layer loop vs fused jit step.
+
+Measures steady-state decode throughput (tok/s over the decode phase only)
+at batch sizes 4 and 8 on the same burst workload, and writes
+``BENCH_decode.json`` so the perf trajectory of the serving hot path is
+tracked across PRs. Both paths get an unmeasured warmup burst first, so
+jit compilation (fused) and eager op-cache compilation (legacy) are both
+excluded from the timed window. CSV rows go through benchmarks/common.emit
+like every other suite.
+"""
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.data.pipeline import serving_requests
+from repro.models.lm import LM
+from repro.serving.engine import Engine, Request
+
+PROMPT_LEN = 24
+MAX_NEW = 8
+OUT_PATH = os.environ.get("BENCH_DECODE_JSON", "BENCH_decode.json")
+
+
+def _measure(cfg, params, *, max_batch: int, mode: str) -> dict:
+    eng = Engine(cfg, params, max_batch=max_batch, n_blocks=64,
+                 block_size=8, mode=mode)
+    eng.warmup(PROMPT_LEN + MAX_NEW)
+    prompts = serving_requests(3 * max_batch, cfg.vocab_size,
+                               prompt_len=PROMPT_LEN, seed=0)
+    # warmup burst: compiles the fused step / legacy eager op caches for
+    # every table shape the measured burst will see
+    for i, p in enumerate(prompts[:max_batch]):
+        eng.submit(Request(rid=i, tokens=p, max_new_tokens=MAX_NEW))
+    eng.run(max_steps=2000)
+    tok0, time0 = eng.decode_tokens, eng.decode_time
+    # measured burst
+    for i, p in enumerate(prompts[max_batch:]):
+        eng.submit(Request(rid=max_batch + i, tokens=p,
+                           max_new_tokens=MAX_NEW))
+    eng.run(max_steps=2000)
+    toks = eng.decode_tokens - tok0
+    secs = eng.decode_time - time0
+    return {
+        "decode_tok_s": round(toks / max(secs, 1e-9), 2),
+        "decode_tokens": int(toks),
+        "decode_time_s": round(secs, 4),
+        "fused_step_traces": (sum(eng.trace_counts.values())
+                              if mode == "fused" else None),
+    }
+
+
+def run():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    results = {"arch": cfg.name, "backend": jax.default_backend(),
+               "prompt_len": PROMPT_LEN, "max_new": MAX_NEW, "runs": {}}
+    for bs in (4, 8):
+        for mode in ("legacy", "fused"):
+            r = _measure(cfg, params, max_batch=bs, mode=mode)
+            results["runs"][f"{mode}_bs{bs}"] = r
+            emit(f"bench_decode/{mode}_bs{bs}",
+                 r["decode_time_s"] * 1e6,
+                 f"decode_tok_s={r['decode_tok_s']}")
+        legacy = results["runs"][f"legacy_bs{bs}"]["decode_tok_s"]
+        fused = results["runs"][f"fused_bs{bs}"]["decode_tok_s"]
+        results["runs"][f"speedup_bs{bs}"] = round(fused / max(legacy, 1e-9),
+                                                   2)
+        emit(f"bench_decode/speedup_bs{bs}", 0,
+             f"{results['runs'][f'speedup_bs{bs}']}x_fused_over_legacy")
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

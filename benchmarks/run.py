@@ -10,10 +10,10 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (fig6_serving, fig11_gemm, fig13_collectives,
-                        table2_frameworks, table3_techniques,
-                        table5_modulewise, table8_flashattention,
-                        table9_finetuning)
+from benchmarks import (bench_decode, fig6_serving, fig11_gemm,
+                        fig13_collectives, table2_frameworks,
+                        table3_techniques, table5_modulewise,
+                        table8_flashattention, table9_finetuning)
 
 SUITES = {
     "table2": table2_frameworks.run,      # Megatron vs DeepSpeed
@@ -22,6 +22,7 @@ SUITES = {
     "table8": table8_flashattention.run,  # flash vs naive attention
     "table9": table9_finetuning.run,      # LoRA/QLoRA fine-tuning
     "fig6": fig6_serving.run,             # serving throughput/latency
+    "bench_decode": bench_decode.run,     # legacy vs fused decode tok/s
     "fig11": fig11_gemm.run,              # GEMM alignment sweep
     "fig13": fig13_collectives.run,       # collectives + memcpy
 }

@@ -1,0 +1,19 @@
+"""Backend-aware Pallas interpret default (leaf module: every kernel file
+and ops.py import from here, so there is no import cycle)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Compiled kernels on TPU, interpret mode (Python-evaluated kernel
+    bodies — correct but slow) everywhere else. Kernel entry points resolve
+    ``interpret=None`` through this helper so real hardware never silently
+    runs interpreted Pallas."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else interpret

@@ -21,7 +21,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret as _default_interpret
+
 NEG_INF = -1e30
+
 
 
 # ==========================================================================
@@ -71,8 +74,9 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, bq: int = 128,
-                        bk: int = 128, interpret: bool = True,
+                        bk: int = 128, interpret: Optional[bool] = None,
                         sm_scale: float = None):
+    interpret = _default_interpret(interpret)
     b, h, t, d = q.shape
     n_kv, s = k.shape[1], k.shape[2]
     g = h // n_kv
@@ -197,8 +201,9 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 
 def flash_attention_bwd(q, k, v, out, lse, do, *, causal: bool = True,
-                        bq: int = 128, bk: int = 128, interpret: bool = True,
+                        bq: int = 128, bk: int = 128, interpret: Optional[bool] = None,
                         sm_scale: float = None):
+    interpret = _default_interpret(interpret)
     b, h, t, d = q.shape
     n_kv, s = k.shape[1], k.shape[2]
     g = h // n_kv

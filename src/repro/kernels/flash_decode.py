@@ -3,9 +3,21 @@ split over KV blocks with online softmax, emitting (o, m, l) partials so a
 sequence-sharded cache (model-axis, see DESIGN §4) can LSE-merge across
 shards with one tiny collective.
 
-q: (B, H, D); k, v: (B, K, S, D); lengths: (B,) valid prefix lengths.
-Supports int8 KV cache (LightLLM 'Int8KV' analogue): pass per-(position)
-scales and the kernel dequantizes block-wise in VMEM.
+Two kernel families live here:
+
+  * :func:`flash_decode_partial` — dense cache, q (B, H, D) against
+    k, v (B, K, S, D) with `lengths` (B,) valid prefixes.
+  * :func:`paged_flash_decode_partial` — **paged** cache: K/V stay in their
+    (n_blocks, block, K, hd) HBM pages and are read *through the block
+    table* with a scalar-prefetch BlockSpec index_map, so the dense
+    (B, max_blocks*block, K, hd) gather never materializes. Int8 KV
+    (LightLLM 'Int8KV' analogue) dequantizes block-wise in VMEM via the
+    per-(block, position, head) scale tensors.
+
+The paged variant also ships an XLA fallback (`impl="xla"`) with identical
+partial semantics — a lax.scan over table columns that gathers one block
+per sequence per step — used on backends where Pallas would run in
+interpret mode (see kernels/ops.default_interpret).
 """
 from __future__ import annotations
 
@@ -18,7 +30,14 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret as _default_interpret
+
 NEG_INF = -1e30
+
+
+# ==========================================================================
+# Dense-cache flash decode
+# ==========================================================================
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
@@ -61,9 +80,11 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
 
 def flash_decode_partial(q, k, v, lengths, *, bk: int = 256,
-                         interpret: bool = True, sm_scale: float = None):
+                         interpret: Optional[bool] = None,
+                         sm_scale: float = None):
     """Returns unnormalized (o (B,H,D) f32, m (B,H,1), l (B,H,1)); caller
     merges across shards then normalizes: out = o_merged / l_merged."""
+    interpret = _default_interpret(interpret)
     b, h, d = q.shape
     n_kv, s = k.shape[1], k.shape[2]
     g = h // n_kv
@@ -102,8 +123,8 @@ def flash_decode_partial(q, k, v, lengths, *, bk: int = 256,
     return (o.reshape(b, h, d), m.reshape(b, h, 1), l.reshape(b, h, 1))
 
 
-def flash_decode(q, k, v, lengths, *, bk: int = 256, interpret: bool = True,
-                 sm_scale: float = None):
+def flash_decode(q, k, v, lengths, *, bk: int = 256,
+                 interpret: Optional[bool] = None, sm_scale: float = None):
     o, m, l = flash_decode_partial(q, k, v, lengths, bk=bk,
                                    interpret=interpret, sm_scale=sm_scale)
     return (o / jnp.maximum(l, 1e-30)).astype(q.dtype)
@@ -111,9 +132,199 @@ def flash_decode(q, k, v, lengths, *, bk: int = 256, interpret: bool = True,
 
 def merge_partials(parts):
     """LSE-merge a list of (o, m, l) partials (e.g. gathered across the
-    model axis for a sequence-sharded cache)."""
+    model axis for a sequence-sharded cache, or cache + fresh-token)."""
     os_, ms, ls = zip(*parts)
     m_glob = functools.reduce(jnp.maximum, ms)
     o = sum(o_ * jnp.exp(m_ - m_glob) for o_, m_ in zip(os_, ms))
     l = sum(l_ * jnp.exp(m_ - m_glob) for l_, m_ in zip(ls, ms))
     return o / jnp.maximum(l, 1e-30)
+
+
+# ==========================================================================
+# Paged flash decode: block-table-indexed pages, no dense materialization
+# ==========================================================================
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                  bs, scale, n_tblk, quant):
+    if quant:
+        (ks_ref, vs_ref, o_ref, m_ref, l_ref,
+         acc_ref, mm_ref, ll_ref) = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref, mm_ref, ll_ref = rest
+    ib = pl.program_id(0)
+    jb = pl.program_id(2)
+
+    @pl.when(jb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mm_ref[...] = jnp.full_like(mm_ref, NEG_INF)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    length = len_ref[ib]
+
+    @pl.when(jb * bs < length)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quant:  # int8 pages: dequantize block-wise in VMEM
+            k = k * ks_ref[0, :, 0, :]
+            v = v * vs_ref[0, :, 0, :]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bs)
+        kpos = jb * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = mm_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        ll_ref[...] = ll_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        mm_ref[...] = m_new
+
+    @pl.when(jb == n_tblk - 1)
+    def _finish():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)   # unnormalized
+        m_ref[0, 0] = mm_ref[...]
+        l_ref[0, 0] = ll_ref[...]
+
+
+def _paged_partial_pallas(q, k_pages, v_pages, table, lengths, k_scale,
+                          v_scale, *, sm_scale, interpret):
+    b, h, d = q.shape
+    nb, bs, n_kv, _ = k_pages.shape
+    g = h // n_kv
+    mb = table.shape[1]
+    quant = k_scale is not None
+    qg = q.reshape(b, n_kv, g, d)
+    kernel = functools.partial(_paged_kernel, bs=bs, n_tblk=mb, quant=quant,
+                               scale=(sm_scale or 1.0 / np.sqrt(d)))
+
+    # scalar-prefetch index maps: page blocks are addressed *through the
+    # block table*, so only the live pages of each sequence ever move.
+    def page_idx(b_, k_, j, tbl, lens):
+        return (tbl[b_, j], 0, k_, 0)
+
+    def q_idx(b_, k_, j, tbl, lens):
+        return (b_, k_, 0, 0)
+
+    def out_idx(b_, k_, j, tbl, lens):
+        return (b_, k_, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), q_idx),
+        pl.BlockSpec((1, bs, 1, d), page_idx),
+        pl.BlockSpec((1, bs, 1, d), page_idx),
+    ]
+    inputs = [qg, k_pages, v_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bs, 1, 1), page_idx),
+                     pl.BlockSpec((1, bs, 1, 1), page_idx)]
+        inputs += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_kv, mb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), out_idx),
+            pl.BlockSpec((1, 1, g, 1), out_idx),
+            pl.BlockSpec((1, 1, g, 1), out_idx),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_kv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, lengths, *inputs)
+    return (o.reshape(b, h, d), m.reshape(b, h, 1), l.reshape(b, h, 1))
+
+
+def _paged_partial_xla(q, k_pages, v_pages, table, lengths, k_scale,
+                       v_scale, *, sm_scale):
+    """Same contract in pure XLA: scan over table columns, gathering one
+    (B, block, K, hd) page tile per step — memory stays O(B * block)."""
+    b, h, d = q.shape
+    nb, bs, n_kv, _ = k_pages.shape
+    g = h // n_kv
+    mb = table.shape[1]
+    scale = sm_scale or 1.0 / np.sqrt(d)
+    qg = q.reshape(b, n_kv, g, d).astype(jnp.float32) * scale
+
+    def step(carry, j):
+        m, l, acc = carry
+        blk = table[:, j]                                   # (B,)
+        k = k_pages[blk].astype(jnp.float32)                # (B, bs, K, hd)
+        v = v_pages[blk].astype(jnp.float32)
+        if k_scale is not None:
+            k = k * k_scale[blk]
+            v = v * v_scale[blk]
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, k)            # (B, K, G, bs)
+        kpos = j * bs + jnp.arange(bs)
+        valid = (kpos[None, :] < lengths[:, None])[:, None, None, :]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        # mask p explicitly: when a row has no valid position yet, s and
+        # m_new are both NEG_INF and exp(s - m_new) alone would emit 1s,
+        # giving empty rows garbage weight (the Pallas kernel emits 0s)
+        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, -1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgs,bskd->bkgd", p, v)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, n_kv, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, n_kv, g), jnp.float32),
+            jnp.zeros((b, n_kv, g, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(mb))
+    return (acc.reshape(b, h, d), m.reshape(b, h, 1), l.reshape(b, h, 1))
+
+
+def paged_flash_decode_partial(q, k_pages, v_pages, table, lengths, *,
+                               k_scale=None, v_scale=None, impl: str = "auto",
+                               interpret: Optional[bool] = None,
+                               sm_scale: float = None):
+    """Single-token attention against ONE layer's paged KV storage.
+
+    q: (B, H, D); k_pages/v_pages: (n_blocks, block, K, hd) storage;
+    table: (B, max_blocks) int32 block table; lengths: (B,) valid prefix
+    lengths (the fresh token is NOT in the pages — merge it with
+    :func:`merge_partials`). Returns unnormalized (o f32, m, l).
+
+    impl: "pallas" (block-indexed BlockSpec kernel), "xla" (scan fallback),
+    or "auto" — pallas on TPU, xla elsewhere. The pallas path wants
+    128-aligned head_dim on real hardware; interpret mode takes any shape.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        return _paged_partial_pallas(q, k_pages, v_pages, table, lengths,
+                                     k_scale, v_scale, sm_scale=sm_scale,
+                                     interpret=_default_interpret(interpret))
+    if impl == "xla":
+        return _paged_partial_xla(q, k_pages, v_pages, table, lengths,
+                                  k_scale, v_scale, sm_scale=sm_scale)
+    raise ValueError(f"unknown paged decode impl {impl!r}")
+
+
+def paged_flash_decode(q, k_pages, v_pages, table, lengths, *,
+                       k_scale=None, v_scale=None, impl: str = "auto",
+                       interpret: Optional[bool] = None,
+                       sm_scale: float = None):
+    """Normalized paged decode output (B, H, D) in q.dtype."""
+    o, m, l = paged_flash_decode_partial(
+        q, k_pages, v_pages, table, lengths, k_scale=k_scale,
+        v_scale=v_scale, impl=impl, interpret=interpret, sm_scale=sm_scale)
+    return (o / jnp.maximum(l, 1e-30)).astype(q.dtype)

@@ -21,8 +21,9 @@ from repro.kernels import rmsnorm as rn
 from repro.kernels import ssd as ssdk
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels._interpret import default_interpret  # noqa: F401 (public)
+
+_interpret = default_interpret
 
 
 def _pad_to(x, mult: int, axis: int):

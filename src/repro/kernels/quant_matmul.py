@@ -14,6 +14,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret as _default_interpret
+
+
+
 
 def _qmm_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k_blocks):
     kb = pl.program_id(2)
@@ -34,8 +38,9 @@ def _qmm_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k_blocks):
 
 
 def int8_matmul(x, w_q, scale, *, bm: int = 256, bn: int = 256,
-                bk: int = 512, interpret: bool = True):
+                bk: int = 512, interpret=None):
     orig_lead = x.shape[:-1]
+    interpret = _default_interpret(interpret)
     k = x.shape[-1]
     n = w_q.shape[1]
     x2 = x.reshape(-1, k)

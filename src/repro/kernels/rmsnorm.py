@@ -9,6 +9,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._interpret import resolve_interpret as _default_interpret
+
+
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
     x = x_ref[...].astype(jnp.float32)
@@ -18,8 +22,9 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
 
 
 def rmsnorm(x, w, eps: float = 1e-5, *, block_rows: int = 256,
-            interpret: bool = True):
+            interpret=None):
     """x: (..., D) -> same; row-blocked single-pass kernel."""
+    interpret = _default_interpret(interpret)
     orig_shape = x.shape
     d = x.shape[-1]
     x2 = x.reshape(-1, d)

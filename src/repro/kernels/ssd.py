@@ -23,6 +23,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret as _default_interpret
+
+
+
 
 def _ssd_kernel(x_ref, b_ref, c_ref, a_ref, y_ref, state_out_ref, state_ref,
                 *, q, n, p, n_chunks):
@@ -69,9 +73,10 @@ def _ssd_kernel(x_ref, b_ref, c_ref, a_ref, y_ref, state_out_ref, state_ref,
 
 
 def ssd_chunked_kernel(xdt, b, c, a, *, chunk: int = 128,
-                       interpret: bool = True):
+                       interpret=None):
     """xdt (B,H,T,P) f32/bf16, b/c (B,G,T,N), a (B,H,T) f32.
     Returns (y (B,H,T,P) f32, final_state (B,H,N,P) f32)."""
+    interpret = _default_interpret(interpret)
     bsz, h, t, p = xdt.shape
     g, n = b.shape[1], b.shape[3]
     gsz = h // g

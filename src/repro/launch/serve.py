@@ -1,7 +1,8 @@
 """Serving launcher CLI: continuous-batching engine over synthetic bursts.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --requests 16 --int8-kv
+        --requests 16 --int8-kv          # fused jit decode (default)
+    PYTHONPATH=src python -m repro.launch.serve --legacy   # per-layer loop
 """
 import argparse
 
@@ -23,6 +24,12 @@ def main():
     ap.add_argument("--n-blocks", type=int, default=128)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--int8-kv", action="store_true")
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument("--fused", dest="mode", action="store_const",
+                     const="fused", help="jit-compiled decode step (default)")
+    grp.add_argument("--legacy", dest="mode", action="store_const",
+                     const="legacy", help="per-layer Python decode loop")
+    ap.set_defaults(mode="fused")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -30,14 +37,19 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(cfg, params, max_batch=args.max_batch,
                  n_blocks=args.n_blocks, block_size=args.block_size,
-                 kv_quant="int8" if args.int8_kv else "none")
+                 kv_quant="int8" if args.int8_kv else "none",
+                 mode=args.mode)
+    eng.warmup(args.prompt_len + args.max_new)
     for i, p in enumerate(serving_requests(args.requests, cfg.vocab_size,
                                            prompt_len=args.prompt_len)):
         eng.submit(Request(rid=i, tokens=p, max_new_tokens=args.max_new))
     eng.run()
+    print(f"{'mode':>20s}: {args.mode}")
     for k, v in eng.stats().items():
         print(f"{k:>20s}: {v:.4f}" if isinstance(v, float) else
               f"{k:>20s}: {v}")
+    if args.mode == "fused":
+        print(f"{'fused_step_traces':>20s}: {sum(eng.trace_counts.values())}")
 
 
 if __name__ == "__main__":

@@ -4,12 +4,21 @@ The TPU-native analogue of vLLM's PagedAttention / LightLLM's TokenAttention
 (paper §II-D): HBM is carved into fixed blocks of `block_size` tokens; a
 sequence owns a *block table* (list of block ids) instead of a contiguous
 span, so fragmentation is bounded by one block per sequence and arbitrary
-prefix sharing is possible. Unlike the CUDA gather-based designs, lookups
-stay dense: the engine materializes each running batch's KV by gathering
-whole 128-aligned blocks (dense tiles — what the TPU memory system wants).
+prefix sharing is possible.
+
+The storage layer is split in two:
+
+  * **pure functions** (`quant_encode` / `quant_decode` / `write_prefill` /
+    `write_token` / `gather`) that operate on a plain *state pytree*
+    ``{"k", "v", "k_scale", "v_scale"}`` — these are what the jit-compiled
+    fused decode step (serving/engine.py) traces through;
+  * the :class:`PagedKVCache` convenience wrapper that owns a state pytree
+    and mutates it in place for the host-driven legacy path and tests.
 
 Int8KV (LightLLM) is supported by storing quantized KV + per-(block, head)
-scales, doubling token capacity.
+scales, doubling token capacity. Scatters use ``mode="drop"`` so an
+out-of-range block id acts as a *null write* — the engine routes inactive
+batch slots to block id ``n_blocks`` to mask their appends.
 """
 from __future__ import annotations
 
@@ -31,16 +40,30 @@ class PagedKVConfig:
     kv_quant: str = "none"   # none | int8
 
 
+class OutOfBlocks(RuntimeError):
+    """Raised by :meth:`BlockAllocator.alloc` when the free list is short.
+
+    Callers that want admission control must check :attr:`n_free` first and
+    treat this exception as a hard invariant violation (a racing second
+    allocator user), not as backpressure.
+    """
+
+
 class BlockAllocator:
-    """Free-list allocator over KV blocks (host-side, O(1) alloc/free)."""
+    """Free-list allocator over KV blocks (host-side, O(1) alloc/free).
+
+    Contract: ``alloc(n)`` either returns exactly ``n`` block ids or raises
+    :class:`OutOfBlocks` — it never returns ``None`` or a partial list.
+    """
 
     def __init__(self, n_blocks: int):
         self.free: List[int] = list(range(n_blocks - 1, -1, -1))
         self.n_blocks = n_blocks
 
-    def alloc(self, n: int) -> Optional[List[int]]:
+    def alloc(self, n: int) -> List[int]:
         if len(self.free) < n:
-            return None
+            raise OutOfBlocks(
+                f"requested {n} blocks, only {len(self.free)} free")
         return [self.free.pop() for _ in range(n)]
 
     def release(self, blocks: List[int]) -> None:
@@ -54,97 +77,182 @@ class BlockAllocator:
         return 1.0 - len(self.free) / max(self.n_blocks, 1)
 
 
+# ==========================================================================
+# Pure functional storage ops (jit-safe; used by the fused decode step)
+# ==========================================================================
+
+
+def quant_encode(x: jax.Array, kv_quant: str
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Encode activations for storage: identity, or int8 + per-vector scale."""
+    if kv_quant != "int8":
+        return x, None
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quant_decode(q: jax.Array, scale: Optional[jax.Array],
+                 dtype=jnp.bfloat16) -> jax.Array:
+    if scale is None:
+        return q.astype(dtype)
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_state(cfg: PagedKVConfig, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Fresh storage pytree: k/v (L, n_blocks, block, K, hd) (+ scales)."""
+    store_dtype = jnp.int8 if cfg.kv_quant == "int8" else dtype
+    shape = (cfg.n_layers, cfg.n_blocks, cfg.block_size,
+             cfg.n_kv_heads, cfg.head_dim)
+    state = {"k": jnp.zeros(shape, store_dtype),
+             "v": jnp.zeros(shape, store_dtype)}
+    if cfg.kv_quant == "int8":
+        sshape = (cfg.n_layers, cfg.n_blocks, cfg.block_size,
+                  cfg.n_kv_heads, 1)
+        state["k_scale"] = jnp.ones(sshape, jnp.float32)
+        state["v_scale"] = jnp.ones(sshape, jnp.float32)
+    return state
+
+
+def write_prefill(state: Dict[str, jax.Array], kv_quant: str,
+                  layer_kv: Tuple[jax.Array, jax.Array],
+                  block_ids) -> Dict[str, jax.Array]:
+    """Page out a whole prompt: k,v (L, T, K, hd) for ONE sequence, scattered
+    into the sequence's blocks (T padded up to a block multiple)."""
+    k, v = layer_kv
+    bs = state["k"].shape[2]
+    t = k.shape[1]
+    pad = (-t) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = k.shape[1] // bs
+    kq = k.reshape(k.shape[0], nb, bs, *k.shape[2:])
+    vq = v.reshape(v.shape[0], nb, bs, *v.shape[2:])
+    kq, ks = quant_encode(kq, kv_quant)
+    vq, vs = quant_encode(vq, kv_quant)
+    ids = jnp.asarray(np.asarray(block_ids)[:nb], jnp.int32)
+    out = dict(state)
+    out["k"] = state["k"].at[:, ids].set(kq.astype(state["k"].dtype),
+                                         mode="drop")
+    out["v"] = state["v"].at[:, ids].set(vq.astype(state["v"].dtype),
+                                         mode="drop")
+    if ks is not None:
+        out["k_scale"] = state["k_scale"].at[:, ids].set(ks, mode="drop")
+        out["v_scale"] = state["v_scale"].at[:, ids].set(vs, mode="drop")
+    return out
+
+
+def write_token(state: Dict[str, jax.Array], kv_quant: str,
+                layer_kv: Tuple[jax.Array, jax.Array],
+                block_ids: jax.Array, offsets: jax.Array
+                ) -> Dict[str, jax.Array]:
+    """Decode append for ALL layers in one batched scatter.
+
+    k,v (L, B, K, hd); block_ids/offsets (B,) map each sequence's next slot
+    to (block, in-block offset). A block id >= n_blocks drops the update
+    (used to mask inactive batch slots)."""
+    k, v = layer_kv
+    kq, ks = quant_encode(k, kv_quant)
+    vq, vs = quant_encode(v, kv_quant)
+    enc = {"k": kq, "v": vq}
+    if ks is not None:
+        enc["k_scale"], enc["v_scale"] = ks, vs
+    return write_token_encoded(state, enc, block_ids, offsets)
+
+
+def write_token_encoded(state: Dict[str, jax.Array],
+                        enc: Dict[str, jax.Array],
+                        block_ids: jax.Array, offsets: jax.Array
+                        ) -> Dict[str, jax.Array]:
+    """Like :func:`write_token` but with storage-ready values: ``enc`` holds
+    already-encoded k/v (L, B, K, hd) (+ scales). Lets a caller that needed
+    the quantized form anyway (the fused decode step attends to the fresh
+    token as stored) skip a second quant_encode pass."""
+    n_l, bsz = enc["k"].shape[0], enc["k"].shape[1]
+    li = jnp.repeat(jnp.arange(n_l), bsz)
+    bi = jnp.tile(block_ids, n_l)
+    oi = jnp.tile(offsets, n_l)
+    out = dict(state)
+    for key in enc:
+        out[key] = state[key].at[li, bi, oi].set(
+            enc[key].reshape(-1, *enc[key].shape[2:]).astype(
+                state[key].dtype), mode="drop")
+    return out
+
+
+def gather(state: Dict[str, jax.Array], layer: int, block_table: jax.Array,
+           dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """Dense per-batch view: block_table (B, max_blocks) int32 ->
+    k,v (B, max_blocks*block, K, hd). Dense 128-aligned block gather.
+    Legacy-path only; the fused step reads pages through the block table."""
+    kq = state["k"][layer][block_table]          # (B, MB, bs, K, hd)
+    vq = state["v"][layer][block_table]
+    ks = (state["k_scale"][layer][block_table]
+          if "k_scale" in state else None)
+    vs = (state["v_scale"][layer][block_table]
+          if "v_scale" in state else None)
+    k = quant_decode(kq, ks, dtype)
+    v = quant_decode(vq, vs, dtype)
+    b, mb, bs = k.shape[:3]
+    return (k.reshape(b, mb * bs, *k.shape[3:]),
+            v.reshape(b, mb * bs, *v.shape[3:]))
+
+
+# ==========================================================================
+# Object wrapper (host-side convenience for the legacy path and tests)
+# ==========================================================================
+
+
 class PagedKVCache:
     """Device storage: (L, n_blocks, block, K, hd) per k/v (+ int8 scales).
-    All updates are pure-functional jnp ops on the storage arrays."""
+    Thin stateful wrapper over the pure functions above: every method
+    rebinds ``self.state`` to the functionally-updated pytree."""
 
     def __init__(self, cfg: PagedKVConfig, dtype=jnp.bfloat16):
         self.cfg = cfg
-        store_dtype = jnp.int8 if cfg.kv_quant == "int8" else dtype
-        shape = (cfg.n_layers, cfg.n_blocks, cfg.block_size,
-                 cfg.n_kv_heads, cfg.head_dim)
-        self.k = jnp.zeros(shape, store_dtype)
-        self.v = jnp.zeros(shape, store_dtype)
-        if cfg.kv_quant == "int8":
-            sshape = (cfg.n_layers, cfg.n_blocks, cfg.block_size,
-                      cfg.n_kv_heads, 1)
-            self.k_scale = jnp.ones(sshape, jnp.float32)
-            self.v_scale = jnp.ones(sshape, jnp.float32)
-        else:
-            self.k_scale = self.v_scale = None
+        self.state = init_state(cfg, dtype)
 
-    # ---- quant helpers ----
+    # attribute views kept for existing call sites / tests
+    @property
+    def k(self) -> jax.Array:
+        return self.state["k"]
+
+    @property
+    def v(self) -> jax.Array:
+        return self.state["v"]
+
+    @property
+    def k_scale(self) -> Optional[jax.Array]:
+        return self.state.get("k_scale")
+
+    @property
+    def v_scale(self) -> Optional[jax.Array]:
+        return self.state.get("v_scale")
+
+    # ---- quant helpers (compat shims over the pure fns) ----
     def _enc(self, x) -> Tuple[jax.Array, Optional[jax.Array]]:
-        if self.cfg.kv_quant != "int8":
-            return x, None
-        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-        scale = jnp.maximum(amax, 1e-6) / 127.0
-        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
-                     -127, 127).astype(jnp.int8)
-        return q, scale
+        return quant_encode(x, self.cfg.kv_quant)
 
     def _dec(self, q, scale, dtype=jnp.bfloat16):
-        if scale is None:
-            return q.astype(dtype)
-        return (q.astype(jnp.float32) * scale).astype(dtype)
+        return quant_decode(q, scale, dtype)
 
-    # ---- functional updates ----
+    # ---- updates ----
     def write_prefill(self, layer_kv: Tuple[jax.Array, jax.Array],
                       block_ids: List[int]) -> None:
-        """layer_kv: k,v (L, T, K, hd) for ONE sequence; scatter into the
-        sequence's blocks (T padded up to block multiple)."""
-        k, v = layer_kv
-        bs = self.cfg.block_size
-        t = k.shape[1]
-        pad = (-t) % bs
-        if pad:
-            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        nb = k.shape[1] // bs
-        kq = k.reshape(k.shape[0], nb, bs, *k.shape[2:])
-        vq = v.reshape(v.shape[0], nb, bs, *v.shape[2:])
-        kq, ks = self._enc(kq)
-        vq, vs = self._enc(vq)
-        ids = jnp.asarray(block_ids[:nb], jnp.int32)
-        self.k = self.k.at[:, ids].set(kq)
-        self.v = self.v.at[:, ids].set(vq)
-        if ks is not None:
-            self.k_scale = self.k_scale.at[:, ids].set(ks)
-            self.v_scale = self.v_scale.at[:, ids].set(vs)
+        self.state = write_prefill(self.state, self.cfg.kv_quant,
+                                   layer_kv, block_ids)
 
     def write_token(self, layer_kv: Tuple[jax.Array, jax.Array],
                     block_ids: jax.Array, offsets: jax.Array) -> None:
-        """Decode append: k,v (L, B, K, hd); block_ids/offsets (B,) mapping
-        each sequence's next slot to (block, in-block offset)."""
-        k, v = layer_kv
-        kq, ks = self._enc(k)
-        vq, vs = self._enc(v)
-        L = k.shape[0]
-        bsz = k.shape[1]
-        li = jnp.arange(L)[:, None].repeat(bsz, 1).reshape(-1)
-        bi = jnp.tile(block_ids, L)
-        oi = jnp.tile(offsets, L)
-        self.k = self.k.at[li, bi, oi].set(kq.reshape(-1, *k.shape[2:]))
-        self.v = self.v.at[li, bi, oi].set(vq.reshape(-1, *v.shape[2:]))
-        if ks is not None:
-            self.k_scale = self.k_scale.at[li, bi, oi].set(
-                ks.reshape(-1, *ks.shape[2:]))
-            self.v_scale = self.v_scale.at[li, bi, oi].set(
-                vs.reshape(-1, *vs.shape[2:]))
+        self.state = write_token(self.state, self.cfg.kv_quant,
+                                 layer_kv, block_ids, offsets)
 
     def gather(self, layer: int, block_table: jax.Array,
                dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
-        """Dense per-batch view: block_table (B, max_blocks) int32 ->
-        k,v (B, max_blocks*block, K, hd). Dense 128-aligned block gather."""
-        kq = self.k[layer][block_table]          # (B, MB, bs, K, hd)
-        vq = self.v[layer][block_table]
-        ks = self.k_scale[layer][block_table] if self.k_scale is not None else None
-        vs = self.v_scale[layer][block_table] if self.v_scale is not None else None
-        k = self._dec(kq, ks, dtype)
-        v = self._dec(vq, vs, dtype)
-        b, mb, bs = k.shape[:3]
-        return (k.reshape(b, mb * bs, *k.shape[3:]),
-                v.reshape(b, mb * bs, *v.shape[3:]))
+        return gather(self.state, layer, block_table, dtype)
 
     def hbm_bytes(self) -> int:
         n = self.k.size * self.k.dtype.itemsize * 2

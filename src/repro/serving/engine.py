@@ -1,24 +1,45 @@
-"""Continuous-batching serving engine (vLLM / LightLLM / TGI analogue).
+"""Continuous-batching serving engine with a fused, jit-compiled decode step.
 
 The engine owns:
   * a paged KV cache + block allocator (serving/cache.py),
   * dense per-slot SSM states (constant-size — SSM/hybrid archs need paged
-    KV only for their attention layers, a capacity finding reported in
-    EXPERIMENTS.md),
+    KV only for their attention layers), stored per period position with a
+    leading ``n_periods`` axis so they scan with the layer stack,
   * a FIFO admission scheduler with block-budget admission control
     (LightLLM-style dynamic batching: admit while blocks + slots remain),
   * the decode step over the running batch.
 
+**Fused decode (default).** One ``jax.jit``-compiled function
+``step(params, kv_state, ssm_states, tokens, lengths, table, active)``
+advances every running sequence by one token: it scans the layer stack
+(periods, like models/lm.py), computes attention with the *paged*
+flash-decode kernel — K/V pages are read through the block table
+(kernels/flash_decode.paged_flash_decode_partial), never materialized
+densely — LSE-merges the fresh token's contribution analytically
+(merge_partials), and appends all layers' new KV with ONE batched scatter
+(cache.write_token_encoded) after the scan. Inactive batch slots route their
+append to block id ``n_blocks`` (a dropped null write), so they can never
+corrupt live pages. Block-table width is bucketed to powers of two, so the
+jit cache holds at most one executable per (batch, table-bucket) pair;
+``trace_counts`` records every retrace for the bounded-compile invariant.
+
+**Legacy decode** (``mode="legacy"``) keeps the paper-baseline per-layer
+Python hot loop: per-layer eager dispatch, dense block gather, naive
+attention. It exists as the measured baseline for benchmarks/bench_decode
+and benchmarks/fig6_serving (--legacy), and as the parity oracle in tests.
+
+**Prefill** is batched: admitted requests are grouped by prompt length and
+run through the model as one forward per group, then paged out with one
+all-layer scatter per sequence (cache.write_prefill).
+
 The paper's serving benchmarks (Figs. 6-10) drive this engine with burst
 arrivals and record per-request latency for CDFs plus aggregate throughput.
-On-CPU smoke scale here; the TPU deployment path jits the same step with the
-sequence-sharded dense cache (launch/build.py build_decode).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from collections import Counter, deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -29,7 +50,16 @@ from repro.core.config import ArchConfig
 from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models.lm import LM
+from repro.serving import cache as C
 from repro.serving.cache import BlockAllocator, PagedKVCache, PagedKVConfig
+from repro.kernels import flash_decode as fd
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 @dataclasses.dataclass
@@ -54,15 +84,24 @@ class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  n_blocks: int = 64, block_size: int = 16,
                  kv_quant: str = "none", greedy: bool = True,
-                 clock=time.monotonic):
+                 mode: str = "fused", clock=time.monotonic):
+        if mode not in ("fused", "legacy"):
+            raise ValueError(f"mode must be 'fused' or 'legacy', got {mode!r}")
         self.cfg = cfg
         self.model = LM(cfg)
         self.params = params
         self.max_batch = max_batch
         self.block_size = block_size
         self.greedy = greedy
+        self.mode = mode
         self.clock = clock
-        n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+        # attention layout: which period positions mix with attention, and
+        # the (period, rank) -> flat attn-layer mapping used by the storage
+        self._attn_pos = [i for i in range(self.model.period)
+                          if self.model.kinds[i] == "attn"]
+        self._ssm_pos = [i for i in range(self.model.period)
+                         if self.model.kinds[i] == "ssm"]
+        n_attn = len(self._attn_pos) * self.model.n_periods
         self.kv_cfg = PagedKVConfig(
             n_layers=max(n_attn, 1), n_kv_heads=max(cfg.n_kv_heads, 1),
             head_dim=max(cfg.head_dim, 1), n_blocks=n_blocks,
@@ -72,31 +111,34 @@ class Engine:
         self.waiting: deque = deque()
         self.running: List[Optional[Request]] = [None] * max_batch
         self.finished: List[Request] = []
-        # dense per-slot SSM states (constant size per slot)
         self._ssm_states = self._init_ssm_states()
-        self._attn_layer_ids = [i for i, k in enumerate(cfg.layer_kinds())
-                                if k == "attn"]
+        self._paged_impl = ("pallas" if jax.default_backend() == "tpu"
+                            else "xla")
+        # one executable per (batch, table-bucket) pair; trace_counts
+        # observes every (re)trace of the fused step. KV/SSM state buffers
+        # are donated: the caller always rebinds to the returned state, so
+        # the cache is updated in place instead of copied every token
+        # (backends without donation support fall back to a copy).
+        self.trace_counts: Counter = Counter()
+        self._fused_step = jax.jit(self._fused_step_impl,
+                                   donate_argnums=(1, 2))
         self.steps = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        self.decode_time = 0.0
 
     # ------------------------------------------------------------------
     def _init_ssm_states(self):
-        cfg = self.cfg
-        states = {}
-        for i, kind in enumerate(cfg.layer_kinds()):
-            if kind == "ssm":
-                states[i] = B.ssm_init_cache(cfg, self.max_batch)
+        cfg, model = self.cfg, self.model
+        states: Dict[str, Any] = {}
+        base = None
+        for pos in self._ssm_pos:
+            if base is None:
+                base = B.ssm_init_cache(cfg, self.max_batch)
+            states[f"pos{pos}"] = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((model.n_periods,) + x.shape, x.dtype),
+                base)
         return states
-
-    def _layer_params(self, layer: int):
-        pos = layer % self.model.period
-        per = layer // self.model.period
-        return jax.tree_util.tree_map(
-            lambda x: x[per], self.model_params_blocks()[f"pos{pos}"])
-
-    def model_params_blocks(self):
-        return self.params["blocks"]
 
     # ------------------------------------------------------------------
     # Scheduling
@@ -120,6 +162,9 @@ class Engine:
             need = self._blocks_needed(req)
             if self.alloc.n_free < need:
                 break   # admission control: no KV budget -> keep waiting
+            # past the pre-check, alloc() cannot fail; if it ever raises
+            # OutOfBlocks the allocator invariant is broken and the error
+            # must propagate, not be absorbed as backpressure
             blocks = self.alloc.alloc(need)
             self.waiting.popleft()
             req.blocks = blocks
@@ -129,56 +174,207 @@ class Engine:
         return admitted
 
     # ------------------------------------------------------------------
-    # Prefill: run the prompt through the model, page out attention KV,
-    # snapshot SSM states into the slot.
+    # Prefill: one forward per group of equal-length prompts; page out
+    # attention KV with one all-layer scatter per sequence; snapshot SSM
+    # states into the slots.
     # ------------------------------------------------------------------
 
-    def _prefill(self, req: Request) -> int:
-        batch = {"tokens": jnp.asarray([req.tokens], jnp.int32)}
-        logits, cache, _ = self.model.prefill(self.params, batch)
-        attn_idx = 0
-        for i, kind in enumerate(self.cfg.layer_kinds()):
-            pos, per = i % self.model.period, i // self.model.period
-            c = cache[f"pos{pos}"]
-            if isinstance(c, dict) and "self" in c:
-                c = c["self"]
-            sub = jax.tree_util.tree_map(lambda x: x[per], c)
-            if kind == "attn":
-                k = sub["k"][:, : len(req.tokens)]     # (1,T,K,hd)
-                v = sub["v"][:, : len(req.tokens)]
-                attn_layer = self._attn_layer_ids.index(i)
-                self._kv_write_single(attn_layer, k[0], v[0], req.blocks)
-                attn_idx += 1
-            elif kind == "ssm":
-                st = self._ssm_states[i]
-                for key in ("conv", "state"):
-                    st[key] = st[key].at[req.slot].set(sub[key][0])
-        tok = int(jnp.argmax(logits[0]))
-        req.output.append(tok)
-        req.first_token_time = self.clock()
-        self.prefill_tokens += len(req.tokens)
-        return tok
+    def _prefill(self, reqs: List[Request]) -> None:
+        by_len: Dict[int, List[Request]] = {}
+        for r in reqs:
+            by_len.setdefault(len(r.tokens), []).append(r)
+        for t in sorted(by_len):
+            self._prefill_group(by_len[t], t)
 
-    def _kv_write_single(self, attn_layer: int, k, v, blocks: List[int]):
-        """k,v (T,K,hd) single sequence -> pages of one attention layer."""
+    def _prefill_group(self, group: List[Request], t: int) -> None:
+        model = self.model
+        toks = jnp.asarray([r.tokens for r in group], jnp.int32)
+        logits, cache, _ = model.prefill(self.params, {"tokens": toks})
+        if self._attn_pos:
+            ks, vs = [], []
+            for pos in self._attn_pos:
+                c = cache[f"pos{pos}"]
+                if isinstance(c, dict) and "self" in c:
+                    c = c["self"]
+                ks.append(c["k"])            # (n_periods, G, T, K, hd)
+                vs.append(c["v"])
+            lkv = (len(group), t, self.kv_cfg.n_kv_heads, self.kv_cfg.head_dim)
+            k_all = jnp.stack(ks, axis=1).reshape((-1,) + lkv)  # (L, G, T, ..)
+            v_all = jnp.stack(vs, axis=1).reshape((-1,) + lkv)
+        for g, r in enumerate(group):
+            if self._attn_pos:
+                self.kv.write_prefill((k_all[:, g], v_all[:, g]), r.blocks)
+            for pos in self._ssm_pos:
+                c = cache[f"pos{pos}"]
+                st = self._ssm_states[f"pos{pos}"]
+                self._ssm_states[f"pos{pos}"] = jax.tree_util.tree_map(
+                    lambda full, new: full.at[:, r.slot].set(new[:, g]),
+                    st, c)
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+        now = self.clock()
+        for g, r in enumerate(group):
+            r.output.append(int(next_tok[g]))
+            r.first_token_time = now
+            self.prefill_tokens += t
+
+    # ------------------------------------------------------------------
+    # Fused decode: the whole step — embed, layer-stack scan with paged
+    # flash attention, head, greedy sample, batched KV append — is ONE
+    # jit-compiled function of pytrees. Host work per step is O(max_batch).
+    # ------------------------------------------------------------------
+
+    def _fused_step_impl(self, params, kv_state, ssm_states, tokens,
+                         lengths, table, active):
+        # runs only when jit (re)traces: bounded-compile accounting
+        self.trace_counts[(int(tokens.shape[0]), int(table.shape[1]))] += 1
+        cfg, model = self.cfg, self.model
+        period, n_periods = model.period, model.n_periods
         bs = self.block_size
-        t = k.shape[0]
-        pad = (-t) % bs
-        if pad:
-            k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
-            v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
-        nb = k.shape[0] // bs
-        kq, ks = self.kv._enc(k.reshape(nb, bs, *k.shape[1:]))
-        vq, vs = self.kv._enc(v.reshape(nb, bs, *v.shape[1:]))
-        ids = jnp.asarray(blocks[:nb], jnp.int32)
-        self.kv.k = self.kv.k.at[attn_layer, ids].set(kq)
-        self.kv.v = self.kv.v.at[attn_layer, ids].set(vq)
-        if ks is not None:
-            self.kv.k_scale = self.kv.k_scale.at[attn_layer, ids].set(ks)
-            self.kv.v_scale = self.kv.v_scale.at[attn_layer, ids].set(vs)
+        quant = self.kv_cfg.kv_quant
+        n_attn_pp = len(self._attn_pos)
+        bsz = tokens.shape[0]
+        hq, hd = cfg.n_heads, cfg.head_dim
+        n_kv = self.kv_cfg.n_kv_heads
+        g = hq // max(n_kv, 1)
+        sm_scale = 1.0 / float(np.sqrt(hd))
+
+        x = model._embed_in(params, tokens[:, None])
+        positions = lengths[:, None]
+
+        if n_attn_pp:
+            kv_xs = {kk: vv.reshape((n_periods, n_attn_pp) + vv.shape[1:])
+                     for kk, vv in kv_state.items()}
+        else:
+            kv_xs = {}
+        ssm_xs = ssm_states
+
+        def body(x, xs):
+            lp, kv_slice, ssm_slice = xs
+            new_kv: Dict[str, list] = {}
+            new_ssm: Dict[str, Any] = {}
+            r = 0
+            for pos in range(period):
+                pp = lp[f"pos{pos}"]
+                if model.kinds[pos] == "attn":
+                    h = L.rmsnorm(x, pp["mix"]["ln"], cfg.norm_eps)
+                    q, k, v = B._qkv(h, pp["mix"], cfg, None,
+                                     positions=positions)
+                    q0, k0, v0 = q[:, 0], k[:, 0], v[:, 0]
+                    o_c, m_c, l_c = fd.paged_flash_decode_partial(
+                        q0, kv_slice["k"][r], kv_slice["v"][r], table,
+                        lengths,
+                        k_scale=(kv_slice["k_scale"][r]
+                                 if quant == "int8" else None),
+                        v_scale=(kv_slice["v_scale"][r]
+                                 if quant == "int8" else None),
+                        impl=self._paged_impl, sm_scale=sm_scale)
+                    # the fresh token attends to itself via an analytic
+                    # single-position partial, LSE-merged with the cache —
+                    # its KV lands in the pages AFTER the scan, in one
+                    # batched all-layer scatter. Attend to the token as the
+                    # cache will store it (int8 roundtrip under kv_quant),
+                    # so this step and every later one see the same values;
+                    # the encoded form doubles as the scan output so the
+                    # post-scan scatter never re-quantizes.
+                    kq0, ks0 = C.quant_encode(k0, quant)
+                    vq0, vs0 = C.quant_encode(v0, quant)
+                    k0a = C.quant_decode(kq0, ks0, jnp.float32)
+                    v0a = C.quant_decode(vq0, vs0, jnp.float32)
+                    qg = q0.reshape(bsz, n_kv, g, hd).astype(jnp.float32)
+                    s_new = jnp.einsum("bkgd,bkd->bkg", qg, k0a) * sm_scale
+                    m_n = s_new.reshape(bsz, hq, 1)
+                    l_n = jnp.ones((bsz, hq, 1), jnp.float32)
+                    o_n = jnp.broadcast_to(
+                        v0a[:, :, None],
+                        (bsz, n_kv, g, hd)).reshape(bsz, hq, hd)
+                    out = fd.merge_partials(
+                        [(o_c, m_c, l_c), (o_n, m_n, l_n)]).astype(x.dtype)
+                    y = L.dense(out.reshape(bsz, 1, hq, hd), pp["mix"]["wo"],
+                                n_in=2)
+                    x = x + y
+                    new_kv.setdefault("k", []).append(kq0)
+                    new_kv.setdefault("v", []).append(vq0)
+                    if ks0 is not None:
+                        new_kv.setdefault("k_scale", []).append(ks0)
+                        new_kv.setdefault("v_scale", []).append(vs0)
+                    r += 1
+                else:
+                    st = ssm_slice[f"pos{pos}"]
+                    x, nc = B.ssm_apply(x, pp["mix"], cfg, None, cache=st)
+                    new_ssm[f"pos{pos}"] = nc
+                if model.fkinds[pos] == "moe":
+                    x, _ = B.moe_apply(x, pp["ffn"], cfg, None,
+                                       capacity_mult=4.0)
+                else:
+                    x = B.ffn_apply(x, pp["ffn"], cfg, None)
+            kv_ys = {kk: jnp.stack(vv) for kk, vv in new_kv.items()}
+            return x, (kv_ys, new_ssm)
+
+        x, (kv_ys, new_ssm) = jax.lax.scan(
+            body, x, (params["blocks"], kv_xs, ssm_xs))
+
+        logits = model._head(params, x)[:, 0]
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        if n_attn_pp:
+            n_l = n_periods * n_attn_pp
+            enc = {kk: vv.reshape((n_l,) + vv.shape[2:])
+                   for kk, vv in kv_ys.items()}   # (periods, R, ...) -> (L, ...)
+            blk = table[jnp.arange(bsz),
+                        jnp.clip(lengths // bs, 0, table.shape[1] - 1)]
+            # inactive slots -> block id n_blocks: a dropped null write
+            blk = jnp.where(active, blk, self.kv_cfg.n_blocks)
+            off = lengths % bs
+            kv_state = C.write_token_encoded(kv_state, enc, blk, off)
+        new_lengths = jnp.where(active, lengths + 1, lengths)
+        return kv_state, new_ssm, next_tokens, new_lengths
+
+    def _decode_fused(self) -> None:
+        live = [r for r in self.running if r is not None]
+        if not live:
+            return
+        bsz = self.max_batch
+        tokens = np.zeros((bsz,), np.int32)
+        lengths = np.zeros((bsz,), np.int32)
+        active = np.zeros((bsz,), bool)
+        mbb = _next_pow2(max(len(r.blocks) for r in live))
+        table = np.zeros((bsz, mbb), np.int32)
+        for r in live:
+            tokens[r.slot] = r.output[-1]
+            lengths[r.slot] = r.length - 1          # current KV length
+            active[r.slot] = True
+            table[r.slot, : len(r.blocks)] = r.blocks
+        kv_state, ssm_states, next_tokens, _ = self._fused_step(
+            self.params, self.kv.state, self._ssm_states,
+            jnp.asarray(tokens), jnp.asarray(lengths), jnp.asarray(table),
+            jnp.asarray(active))
+        self.kv.state = kv_state
+        if ssm_states:
+            self._ssm_states = ssm_states
+        self._finish_step(live, np.asarray(next_tokens))
+
+    def warmup(self, max_seq_len: int) -> None:
+        """Pre-compile the fused step for the table bucket implied by
+        ``max_seq_len`` (prompt + generation budget), the way a serving
+        deployment compiles before taking traffic. No state is mutated."""
+        if self.mode != "fused":
+            return
+        mbb = _next_pow2(-(-max_seq_len // self.block_size))
+        bsz = self.max_batch
+        # the step donates its state args: hand it throwaway copies so the
+        # live cache buffers survive the discarded warmup call
+        out = self._fused_step(
+            self.params,
+            jax.tree_util.tree_map(jnp.copy, self.kv.state),
+            jax.tree_util.tree_map(jnp.copy, self._ssm_states),
+            jnp.zeros((bsz,), jnp.int32), jnp.zeros((bsz,), jnp.int32),
+            jnp.zeros((bsz, mbb), jnp.int32), jnp.zeros((bsz,), bool))
+        jax.block_until_ready(out)
 
     # ------------------------------------------------------------------
-    # Decode one token for every running sequence (paged attention).
+    # Legacy decode: the paper-baseline per-layer Python hot loop (eager
+    # dispatch per layer, dense block gather, naive attention). Kept as
+    # the measured baseline and parity oracle for the fused path.
     # ------------------------------------------------------------------
 
     def _decode_batch(self) -> None:
@@ -189,15 +385,18 @@ class Engine:
         bsz = self.max_batch
         tokens = np.zeros((bsz, 1), np.int32)
         lengths = np.zeros((bsz,), np.int32)
+        active = np.zeros((bsz,), bool)
         max_blocks = max(len(r.blocks) for r in live)
         table = np.zeros((bsz, max_blocks), np.int32)
         for r in live:
             tokens[r.slot, 0] = r.output[-1]
             lengths[r.slot] = r.length - 1          # current KV length
+            active[r.slot] = True
             table[r.slot, : len(r.blocks)] = r.blocks
         tokens = jnp.asarray(tokens)
         lengths = jnp.asarray(lengths)
         table = jnp.asarray(table)
+        active = jnp.asarray(active)
 
         x = jnp.take(self.params["embed"], tokens, axis=0)
         attn_layer = 0
@@ -207,12 +406,14 @@ class Engine:
                 lambda a: a[per], self.params["blocks"][f"pos{pos}"])
             if kind == "attn":
                 x = self._paged_attn(x, pp["mix"], attn_layer, table,
-                                     lengths)
+                                     lengths, active)
                 attn_layer += 1
             else:
-                st = self._ssm_states[i]
+                full = self._ssm_states[f"pos{pos}"]
+                st = jax.tree_util.tree_map(lambda a: a[per], full)
                 x, nc = B.ssm_apply(x, pp["mix"], cfg, None, cache=st)
-                self._ssm_states[i] = nc
+                self._ssm_states[f"pos{pos}"] = jax.tree_util.tree_map(
+                    lambda a, n: a.at[per].set(n), full, nc)
             if self.model.fkinds[pos] == "moe":
                 x, _ = B.moe_apply(x, pp["ffn"], cfg, None, capacity_mult=4.0)
             else:
@@ -224,9 +425,47 @@ class Engine:
             w = self.params["head"]
         logits = L.dense(x, w)[:, 0]
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        self._finish_step(live, next_tokens)
 
+    def _paged_attn(self, x, p, attn_layer: int, table, lengths, active):
+        cfg = self.cfg
+        h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+        q, k, v = B._qkv(h, p, cfg, None, positions=lengths[:, None])
+        # append the new token to its page; inactive slots (all-zero table
+        # rows) become null writes instead of corrupting block 0
+        bs = self.block_size
+        blk = table[jnp.arange(table.shape[0]),
+                    jnp.clip(lengths // bs, 0, table.shape[1] - 1)]
+        blk = jnp.where(active, blk, self.kv_cfg.n_blocks)
+        off = lengths % bs
+        quant = self.kv_cfg.kv_quant
+        kq, ks = C.quant_encode(k[:, 0], quant)
+        vq, vs = C.quant_encode(v[:, 0], quant)
+        st = dict(self.kv.state)
+        st["k"] = st["k"].at[attn_layer, blk, off].set(
+            kq.astype(st["k"].dtype), mode="drop")
+        st["v"] = st["v"].at[attn_layer, blk, off].set(
+            vq.astype(st["v"].dtype), mode="drop")
+        if ks is not None:
+            st["k_scale"] = st["k_scale"].at[attn_layer, blk, off].set(
+                ks, mode="drop")
+            st["v_scale"] = st["v_scale"].at[attn_layer, blk, off].set(
+                vs, mode="drop")
+        self.kv.state = st
+        # f32 softmax accumulation: matches the flash-decode kernels' and
+        # the fused step's numerics (bf16 p·v rounding would make the two
+        # paths' greedy tokens drift apart)
+        kd, vd = self.kv.gather(attn_layer, table, dtype=jnp.float32)
+        out = L.attention(q.astype(jnp.float32), kd, vd, mode="naive",
+                          causal=False, kv_len=lengths + 1).astype(q.dtype)
+        y = L.dense(out, p["wo"], n_in=2)
+        return x + y
+
+    # ------------------------------------------------------------------
+
+    def _finish_step(self, live: List[Request], next_tokens) -> None:
         now = self.clock()
-        for r in list(live):
+        for r in live:
             r.output.append(int(next_tokens[r.slot]))
             self.decode_tokens += 1
             if len(r.output) >= r.max_new_tokens:
@@ -235,34 +474,16 @@ class Engine:
                 self.alloc.release(r.blocks)
                 self.running[r.slot] = None
 
-    def _paged_attn(self, x, p, attn_layer: int, table, lengths):
-        cfg = self.cfg
-        h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
-        q, k, v = B._qkv(h, p, cfg, None, positions=lengths[:, None])
-        # append the new token to its page
-        bs = self.block_size
-        blk = table[jnp.arange(table.shape[0]),
-                    jnp.clip(lengths // bs, 0, table.shape[1] - 1)]
-        off = lengths % bs
-        kq, ks = self.kv._enc(k[:, 0])
-        vq, vs = self.kv._enc(v[:, 0])
-        self.kv.k = self.kv.k.at[attn_layer, blk, off].set(kq)
-        self.kv.v = self.kv.v.at[attn_layer, blk, off].set(vq)
-        if ks is not None:
-            self.kv.k_scale = self.kv.k_scale.at[attn_layer, blk, off].set(ks)
-            self.kv.v_scale = self.kv.v_scale.at[attn_layer, blk, off].set(vs)
-        kd, vd = self.kv.gather(attn_layer, table, dtype=q.dtype)
-        out = L.attention(q, kd, vd, mode="naive", causal=False,
-                          kv_len=lengths + 1)
-        y = L.dense(out, p["wo"], n_in=2)
-        return x + y
-
-    # ------------------------------------------------------------------
-
     def step(self) -> None:
-        for req in self._admit():
-            self._prefill(req)
-        self._decode_batch()
+        admitted = self._admit()
+        if admitted:
+            self._prefill(admitted)
+        t0 = self.clock()
+        if self.mode == "fused":
+            self._decode_fused()
+        else:
+            self._decode_batch()
+        self.decode_time += self.clock() - t0
         self.steps += 1
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -288,4 +509,7 @@ class Engine:
             "kv_utilization": self.alloc.utilization(),
             "decode_tokens": self.decode_tokens,
             "prefill_tokens": self.prefill_tokens,
+            "decode_time_s": self.decode_time,
+            "decode_tok_s": (self.decode_tokens / self.decode_time
+                             if self.decode_time > 0 else 0.0),
         }

@@ -1,5 +1,6 @@
 """Serving engine: paged KV correctness, continuous batching lifecycle,
-block allocator invariants, Int8KV capacity doubling."""
+block allocator invariants, Int8KV capacity doubling, fused-vs-legacy
+decode parity, bounded retracing of the fused step."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +8,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models.lm import LM
-from repro.serving.cache import BlockAllocator, PagedKVCache, PagedKVConfig
+from repro.serving.cache import (BlockAllocator, OutOfBlocks, PagedKVCache,
+                                 PagedKVConfig)
 from repro.serving.engine import Engine, Request
 
 
@@ -15,7 +17,8 @@ def test_block_allocator_invariants():
     a = BlockAllocator(10)
     b1 = a.alloc(4)
     b2 = a.alloc(6)
-    assert a.alloc(1) is None          # exhausted -> admission control
+    with pytest.raises(OutOfBlocks):   # exhausted -> explicit raise contract
+        a.alloc(1)
     assert sorted(b1 + b2) == list(range(10))
     a.release(b1)
     assert a.n_free == 4
@@ -40,6 +43,21 @@ def test_paged_cache_roundtrip():
                                   np.asarray(v[0], np.float32))
 
 
+def test_paged_cache_write_token_drops_out_of_range():
+    """Block id n_blocks is the null-write sentinel for inactive slots."""
+    cfg = PagedKVConfig(n_layers=1, n_kv_heads=2, head_dim=16, n_blocks=4,
+                        block_size=4)
+    kv = PagedKVCache(cfg)
+    k = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, 16), jnp.bfloat16)
+    kv.write_prefill((k, k), [0])
+    before = np.asarray(kv.k, np.float32)
+    garbage = jnp.full((1, 2, 2, 16), 7.0, jnp.bfloat16)
+    kv.write_token((garbage, garbage),
+                   jnp.asarray([cfg.n_blocks, cfg.n_blocks], jnp.int32),
+                   jnp.asarray([0, 0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(kv.k, np.float32), before)
+
+
 def test_paged_cache_int8_roundtrip_accuracy():
     cfg = PagedKVConfig(n_layers=1, n_kv_heads=2, head_dim=16, n_blocks=4,
                         block_size=4, kv_quant="int8")
@@ -57,12 +75,14 @@ def test_paged_cache_int8_roundtrip_accuracy():
     assert PagedKVCache(cfg16).k.nbytes == 2 * kv.k.nbytes
 
 
+@pytest.mark.parametrize("mode", ["fused", "legacy"])
 @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "jamba-v0.1-52b"])
-def test_engine_continuous_batching(arch):
+def test_engine_continuous_batching(arch, mode):
     cfg = get_config(arch, reduced=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8)
+    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8,
+                 mode=mode)
     rng = np.random.default_rng(0)
     for rid in range(6):
         eng.submit(Request(rid=rid,
@@ -80,7 +100,8 @@ def test_engine_continuous_batching(arch):
     assert st["requests"] == 6 and st["decode_tokens"] > 0
 
 
-def test_engine_greedy_matches_model_decode():
+@pytest.mark.parametrize("mode", ["fused", "legacy"])
+def test_engine_greedy_matches_model_decode(mode):
     """Paged-engine tokens == dense-cache greedy decode (same params)."""
     cfg = get_config("qwen1.5-0.5b", reduced=True)
     model = LM(cfg)
@@ -97,11 +118,74 @@ def test_engine_greedy_matches_model_decode():
             params, cache, jnp.asarray([[ref[-1]]], jnp.int32), lengths)
         lengths = lengths + 1
         ref.append(int(jnp.argmax(logits[0])))
-    # paged engine
-    eng = Engine(cfg, params, max_batch=2, n_blocks=16, block_size=4)
+    # paged engine (slot 1 stays inactive: its appends must be null writes,
+    # not corruption of block 0 — the bug that used to break this parity)
+    eng = Engine(cfg, params, max_batch=2, n_blocks=16, block_size=4,
+                 mode=mode)
     eng.submit(Request(rid=0, tokens=prompt, max_new_tokens=n_new))
     done = eng.run(max_steps=50)
     assert done[0].output == ref
+
+
+@pytest.mark.parametrize("arch,kv_quant", [
+    ("qwen1.5-0.5b", "none"),
+    ("qwen1.5-0.5b", "int8"),
+    ("mamba2-130m", "none"),
+])
+def test_fused_matches_legacy_tokens(arch, kv_quant):
+    """Fused jitted decode emits the same greedy tokens as the legacy
+    per-layer loop, including with an int8-quantized KV cache and with a
+    partially-occupied batch (5 requests over a 3-slot engine)."""
+    cfg = get_config(arch, reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    outs = {}
+    for mode in ("legacy", "fused"):
+        eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8,
+                     kv_quant=kv_quant, mode=mode)
+        rng = np.random.default_rng(0)
+        for rid in range(5):
+            eng.submit(Request(
+                rid=rid,
+                tokens=rng.integers(1, cfg.vocab_size, size=12).tolist(),
+                max_new_tokens=5))
+        done = eng.run(max_steps=200)
+        assert len(done) == 5
+        outs[mode] = {r.rid: r.output for r in done}
+    assert outs["fused"] == outs["legacy"]
+
+
+def test_fused_step_compiles_once_per_bucket():
+    """The fused step retraces at most once per (batch, table-bucket) pair:
+    same-footprint requests reuse the executable; a larger block-table
+    bucket triggers exactly one more trace."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, n_blocks=64, block_size=4,
+                 mode="fused")
+    # bucket 1: prompt 4 + 4 new -> 2 blocks -> table width 2
+    eng.submit(Request(rid=0, tokens=list(range(1, 5)), max_new_tokens=4))
+    eng.run(max_steps=50)
+    assert dict(eng.trace_counts) == {(2, 2): 1}
+    # same footprint again (and a second concurrent request): cache hit
+    eng.submit(Request(rid=1, tokens=list(range(1, 5)), max_new_tokens=4))
+    eng.submit(Request(rid=2, tokens=list(range(2, 6)), max_new_tokens=4))
+    eng.run(max_steps=50)
+    assert dict(eng.trace_counts) == {(2, 2): 1}
+    # larger footprint: 16 + 8 -> 6 blocks -> bucket 8 -> one new trace
+    eng.submit(Request(rid=3, tokens=list(range(1, 17)), max_new_tokens=8))
+    eng.run(max_steps=80)
+    assert dict(eng.trace_counts) == {(2, 2): 1, (2, 8): 1}
+    assert len(eng.finished) == 4
+    # warmup pre-compiles a bucket without mutating engine state
+    eng2 = Engine(cfg, params, max_batch=2, n_blocks=64, block_size=4,
+                  mode="fused")
+    eng2.warmup(8)
+    assert dict(eng2.trace_counts) == {(2, 2): 1}
+    eng2.submit(Request(rid=0, tokens=list(range(1, 5)), max_new_tokens=4))
+    eng2.run(max_steps=50)
+    assert dict(eng2.trace_counts) == {(2, 2): 1}   # served from warm cache
 
 
 def test_engine_admission_control_under_block_pressure():
@@ -115,3 +199,22 @@ def test_engine_admission_control_under_block_pressure():
                            max_new_tokens=4))
     done = eng.run(max_steps=300)
     assert len(done) == 3              # all served despite pressure
+
+
+def test_engine_batched_prefill_admits_group_in_one_forward():
+    """Admission of N equal-length prompts runs one grouped forward: all
+    first tokens appear after a single step() and match per-request
+    prefill results."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(range(1 + i, 9 + i)) for i in range(3)]
+    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, tokens=p, max_new_tokens=4))
+    eng.step()
+    firsts = {r.rid: r.output[0] for r in eng.running if r is not None}
+    for rid, p in enumerate(prompts):
+        logits, _, _ = model.prefill(
+            params, {"tokens": jnp.asarray([p], jnp.int32)})
+        assert firsts[rid] == int(jnp.argmax(logits[0]))
