@@ -1,0 +1,151 @@
+"""Latency-SLO benchmark: Poisson arrivals against the serving engine.
+
+Production serving is gated by *latency under contention* — TTFT/TPOT
+percentiles when prompts are long and KV blocks run out — not by closed-loop
+burst throughput (benchmarks/fig6_serving.py). This harness drives the
+engine open-loop: a Poisson arrival process over a mixed prompt-length
+trace. Per-scenario p50/p95/p99 TTFT and TPOT (plus throughput and
+preemption counts) land in ``BENCH_latency.json`` so the scheduler's
+tail-latency trajectory is tracked across PRs, the same way
+BENCH_decode.json tracks the decode hot path.
+
+Scenarios (smoke-scale honesty notes inline):
+  * ``whole_prefill`` / ``chunked_prefill`` — steady state, every
+    executable pre-built. At smoke scale (d_model 64) prompt FLOPs are
+    negligible, so chunking shows its per-dispatch overhead rather than
+    its head-of-line win; the structural numbers (queue time, tail order)
+    still track the scheduler.
+  * ``*_coldstart`` — the same trace on a fresh engine: the TTFT tail
+    under a compile storm, a real production hazard for shape-specialized
+    serving stacks. Whole-prompt prefill compiles one executable per
+    (group size, prompt length) the trace discovers; chunked prefill
+    compiles one chunk executable per block-table bucket — fewer
+    executables, though each is individually pricier to build (the chunk
+    graph carries the dense page view), so neither schedule dominates this
+    scenario at smoke scale.
+  * ``chunked_block_pressure`` — an undersized block pool with long
+    generations: preemption fires and every request still completes; the
+    TTFT/TPOT tails price the evictions.
+"""
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.data.pipeline import poisson_arrivals, serving_requests
+from repro.models.lm import LM
+from repro.serving.engine import Engine, Request
+
+N_REQUESTS = int(os.environ.get("BENCH_LATENCY_REQUESTS", 32))
+RATE_RPS = float(os.environ.get("BENCH_LATENCY_RATE", 200.0))
+PROMPT_LENS = (16, 64, 16, 32)      # mixed trace: short interactive + long
+MAX_NEW = 8
+CHUNK = 16
+OUT_PATH = os.environ.get("BENCH_LATENCY_JSON", "BENCH_latency.json")
+
+ENGINE_KW = dict(max_batch=4, n_blocks=32, block_size=8)
+PRESSURE_KW = dict(max_batch=4, n_blocks=12, block_size=8)
+
+
+def _drive(eng: Engine, prompts, arrivals, max_new: int) -> None:
+    """Open-loop dispatch: submit each request at its arrival offset while
+    stepping the engine; idle-wait when the queue is empty."""
+    t0 = time.monotonic()
+    i, n = 0, len(prompts)
+    while True:
+        now = time.monotonic() - t0
+        while i < n and arrivals[i] <= now:
+            eng.submit(Request(rid=i, tokens=list(prompts[i]),
+                               max_new_tokens=max_new,
+                               arrival=t0 + arrivals[i]))
+            i += 1
+        if eng.sched.has_work:
+            eng.step()
+        elif i < n:
+            time.sleep(max(0.0, min(arrivals[i] - (time.monotonic() - t0),
+                                    0.005)))
+        else:
+            break
+
+
+def _warm_prefill_shapes(eng: Engine, cfg, max_new: int) -> None:
+    """Build every whole-prefill executable the trace can demand: one
+    grouped forward per (group size, prompt length) combination that
+    admission could ever form (groups the block budget forbids here are
+    forbidden identically during the measured pass)."""
+    rid = 10_000
+    for t in sorted(set(PROMPT_LENS)):
+        for g in range(1, eng.max_batch + 1):
+            for p in serving_requests(g, cfg.vocab_size, prompt_len=t,
+                                      seed=7):
+                eng.submit(Request(rid=rid, tokens=p, max_new_tokens=max_new))
+                rid += 1
+            eng.run(max_steps=2000)
+
+
+def _measure(cfg, params, *, prefill_chunk, warm=True, engine_kw=None,
+             max_new=MAX_NEW) -> dict:
+    engine_kw = engine_kw or ENGINE_KW
+    eng = Engine(cfg, params, prefill_chunk=prefill_chunk, **engine_kw)
+    prompts = serving_requests(N_REQUESTS, cfg.vocab_size, seed=0,
+                               prompt_lens=PROMPT_LENS)
+    arrivals = poisson_arrivals(N_REQUESTS, RATE_RPS, seed=1)
+    if warm:
+        eng.warmup(max(PROMPT_LENS) + max_new)
+        if prefill_chunk is None:   # chunked engines never call _prefill_fwd
+            _warm_prefill_shapes(eng, cfg, max_new)
+        _drive(eng, prompts, arrivals, max_new)  # warm decode/chunk buckets
+        eng.reset_stats()
+    _drive(eng, prompts, arrivals, max_new)      # measured pass
+    assert len(eng.finished) == N_REQUESTS
+    st = eng.stats()
+    return {
+        "completed": int(st["requests"]),
+        "throughput_tok_s": round(st["throughput_tok_s"], 2),
+        "p50_ttft_s": round(st["p50_ttft_s"], 5),
+        "p95_ttft_s": round(st["p95_ttft_s"], 5),
+        "p99_ttft_s": round(st["p99_ttft_s"], 5),
+        "p50_tpot_s": round(st["p50_tpot_s"], 6),
+        "p95_tpot_s": round(st["p95_tpot_s"], 6),
+        "p99_tpot_s": round(st["p99_tpot_s"], 6),
+        "mean_queue_s": round(st["mean_queue_s"], 5),
+        "preemptions": int(st["preemptions"]),
+    }
+
+
+def run():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scenarios = {
+        "whole_prefill": dict(prefill_chunk=None),
+        "chunked_prefill": dict(prefill_chunk=CHUNK),
+        "whole_prefill_coldstart": dict(prefill_chunk=None, warm=False),
+        "chunked_prefill_coldstart": dict(prefill_chunk=CHUNK, warm=False),
+        "chunked_block_pressure": dict(prefill_chunk=CHUNK,
+                                       engine_kw=PRESSURE_KW, max_new=24),
+    }
+    results = {
+        "arch": cfg.name, "backend": jax.default_backend(),
+        "rate_rps": RATE_RPS, "n_requests": N_REQUESTS,
+        "prompt_lens": list(PROMPT_LENS), "max_new": MAX_NEW,
+        "engine": dict(ENGINE_KW), "pressure_engine": dict(PRESSURE_KW),
+        "prefill_chunk": CHUNK, "runs": {},
+    }
+    for name, kw in scenarios.items():
+        r = _measure(cfg, params, **kw)
+        results["runs"][name] = r
+        emit(f"bench_latency/{name}", r["p95_ttft_s"] * 1e6,
+             f"p50_ttft_s={r['p50_ttft_s']};p99_ttft_s={r['p99_ttft_s']};"
+             f"p95_tpot_s={r['p95_tpot_s']};preempt={r['preemptions']};"
+             f"tok_s={r['throughput_tok_s']}")
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -10,8 +10,8 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (bench_decode, fig6_serving, fig11_gemm,
-                        fig13_collectives, table2_frameworks,
+from benchmarks import (bench_decode, bench_latency, fig6_serving,
+                        fig11_gemm, fig13_collectives, table2_frameworks,
                         table3_techniques, table5_modulewise,
                         table8_flashattention, table9_finetuning)
 
@@ -23,6 +23,7 @@ SUITES = {
     "table9": table9_finetuning.run,      # LoRA/QLoRA fine-tuning
     "fig6": fig6_serving.run,             # serving throughput/latency
     "bench_decode": bench_decode.run,     # legacy vs fused decode tok/s
+    "bench_latency": bench_latency.run,   # Poisson TTFT/TPOT percentiles
     "fig11": fig11_gemm.run,              # GEMM alignment sweep
     "fig13": fig13_collectives.run,       # collectives + memcpy
 }

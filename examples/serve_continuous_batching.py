@@ -2,7 +2,14 @@
 under a burst of requests — the paper's benchmark protocol (Figs. 6-7) at
 smoke scale, with per-request latency lines and the aggregate CDF summary.
 
+Scheduler v2 knobs: ``--prefill-chunk N`` pages prompts out N tokens per
+step (interleaved with decode), and an undersized ``--n-blocks`` pool
+demonstrates preemption — evicted requests re-queue with their generated
+prefix and still finish:
+
     PYTHONPATH=src python examples/serve_continuous_batching.py
+    PYTHONPATH=src python examples/serve_continuous_batching.py \
+        --prefill-chunk 8 --n-blocks 12 --mixed
 """
 import argparse
 
@@ -22,29 +29,43 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--n-blocks", type=int, default=128)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size (0 = whole-prompt)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed prompt lengths (8 / 2x / 0.5x prompt-len)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, max_batch=4, n_blocks=128, block_size=8,
-                 kv_quant="int8" if args.int8_kv else "none")
+    eng = Engine(cfg, params, max_batch=4, n_blocks=args.n_blocks,
+                 block_size=8, kv_quant="int8" if args.int8_kv else "none",
+                 prefill_chunk=args.prefill_chunk or None)
+    lens = ((8, 2 * args.prompt_len, args.prompt_len // 2)
+            if args.mixed else None)
     prompts = serving_requests(args.requests, cfg.vocab_size,
-                               prompt_len=args.prompt_len)
+                               prompt_len=args.prompt_len, prompt_lens=lens)
     for i, p in enumerate(prompts):   # burst arrival, as in the paper
         eng.submit(Request(rid=i, tokens=p, max_new_tokens=args.max_new))
     done = eng.run()
     st = eng.stats()
     print(f"{'rid':>4s} {'prompt':>7s} {'new':>4s} {'ttft_s':>8s} "
-          f"{'latency_s':>10s}")
+          f"{'tpot_ms':>8s} {'latency_s':>10s} {'evict':>6s}")
     for r in sorted(done, key=lambda r: r.rid):
+        tpot = r.tpot()
         print(f"{r.rid:>4d} {len(r.tokens):>7d} {len(r.output):>4d} "
-              f"{r.first_token_time - r.arrival:>8.3f} "
-              f"{r.finish_time - r.arrival:>10.3f}")
+              f"{r.ttft():>8.3f} "
+              f"{(tpot * 1e3 if tpot is not None else 0.0):>8.2f} "
+              f"{r.finish_time - r.arrival:>10.3f} {r.n_preemptions:>6d}")
     print(f"\nthroughput {st['throughput_tok_s']:.1f} tok/s   "
           f"p50 {st['p50_latency_s']:.3f}s  p99 {st['p99_latency_s']:.3f}s  "
+          f"p95_ttft {st['p95_ttft_s']:.3f}s  p95_tpot "
+          f"{st['p95_tpot_s'] * 1e3:.2f}ms  "
+          f"preemptions {st['preemptions']}  "
           f"kv_util peak-free {st['kv_utilization']:.2f}")
     assert len(done) == args.requests
+    assert eng.alloc.n_free == eng.alloc.n_blocks, "leaked KV blocks"
 
 
 if __name__ == "__main__":

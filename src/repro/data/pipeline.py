@@ -116,9 +116,23 @@ class Prefetcher:
 
 
 def serving_requests(n: int, vocab: int, prompt_len: int = SERVING_PROMPT_LEN,
-                     seed: int = 0):
+                     seed: int = 0, prompt_lens=None):
     """The paper's serving workload: n synthetic prompts of prompt_len
-    tokens, dispatched in a burst."""
+    tokens, dispatched in a burst. ``prompt_lens`` (a sequence of lengths,
+    cycled over requests) produces the mixed-length traces the scheduler
+    benchmarks use — e.g. short interactive prompts contending with long
+    document prompts."""
     rng = np.random.default_rng(seed)
-    return [rng.integers(1, vocab, size=prompt_len, dtype=np.int32).tolist()
-            for _ in range(n)]
+    out = []
+    for i in range(n):
+        t = prompt_lens[i % len(prompt_lens)] if prompt_lens else prompt_len
+        out.append(rng.integers(1, vocab, size=t, dtype=np.int32).tolist())
+    return out
+
+
+def poisson_arrivals(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:
+    """Cumulative arrival offsets (seconds from t0) of a Poisson process at
+    ``rate_rps`` requests/second — the open-loop workload used by
+    benchmarks/bench_latency.py for TTFT/TPOT percentiles under load."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))

@@ -89,7 +89,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
     t_compile = time.time() - t0
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    # cost_analysis() returns a per-program list on current jax (one dict
+    # per executable) and a bare dict on older releases; normalize to a dict
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    ca = ca or {}
     hlo = compiled.as_text()
     coll = collective_stats(hlo)
     n_dev = int(np.prod(list(mesh.shape.values())))

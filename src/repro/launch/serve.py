@@ -24,6 +24,12 @@ def main():
     ap.add_argument("--n-blocks", type=int, default=128)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="page prompts out N tokens per step, interleaved "
+                         "with decode (0 = whole-prompt prefill)")
+    ap.add_argument("--mixed-lens", default=None,
+                    help="comma-separated prompt lengths cycled over the "
+                         "burst, e.g. 16,64,24 (overrides --prompt-len)")
     grp = ap.add_mutually_exclusive_group()
     grp.add_argument("--fused", dest="mode", action="store_const",
                      const="fused", help="jit-compiled decode step (default)")
@@ -35,13 +41,17 @@ def main():
     cfg = get_config(args.arch, reduced=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    lens = ([int(t) for t in args.mixed_lens.split(",")]
+            if args.mixed_lens else None)
     eng = Engine(cfg, params, max_batch=args.max_batch,
                  n_blocks=args.n_blocks, block_size=args.block_size,
                  kv_quant="int8" if args.int8_kv else "none",
-                 mode=args.mode)
-    eng.warmup(args.prompt_len + args.max_new)
+                 mode=args.mode,
+                 prefill_chunk=args.prefill_chunk or None)
+    eng.warmup(max(lens or [args.prompt_len]) + args.max_new)
     for i, p in enumerate(serving_requests(args.requests, cfg.vocab_size,
-                                           prompt_len=args.prompt_len)):
+                                           prompt_len=args.prompt_len,
+                                           prompt_lens=lens)):
         eng.submit(Request(rid=i, tokens=p, max_new_tokens=args.max_new))
     eng.run()
     print(f"{'mode':>20s}: {args.mode}")

@@ -345,21 +345,34 @@ def _causal_conv(x, w, b):
 
 
 def _ssm_pre(h, p, cfg: ArchConfig, conv_state=None, capture_tail=False,
-             ctx=None):
+             ctx=None, n_valid=None):
     """in_proj + causal conv + splits. Returns z, x, B, C, dt, new_conv_state
-    (decode) or the conv-input tail (prefill with capture_tail)."""
+    (decode) or the conv-input tail (prefill with capture_tail).
+
+    ``n_valid`` (scalar, chunked prefill only) marks the valid prefix of a
+    right-padded chunk: dt is zeroed past it (a state-neutral no-op for the
+    SSD recurrence) and the carried conv tail is taken from the last valid
+    inputs instead of the padding."""
     di, g, ns, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
     zxbcdt = L.dense(h, p["in_proj"])
     z = zxbcdt[..., :di]
     xbc = zxbcdt[..., di: di + di + 2 * g * ns]
     dt = zxbcdt[..., di + di + 2 * g * ns:]
     new_conv_state = None
-    if conv_state is not None:  # decode: T==1
+    if conv_state is not None and xbc.shape[1] == 1:  # decode: T==1
         buf = jnp.concatenate([conv_state, xbc], axis=1)        # (B, W, C)
         w = p["conv_w"]
         y = jnp.einsum("bwc,wc->bc", buf, w)[:, None, :] + p["conv_b"][None, None]
         new_conv_state = buf[:, 1:]
         xbc = y
+    elif conv_state is not None:  # chunked prefill continue: T>1 with history
+        w1 = conv_state.shape[1]                                # ssm_conv - 1
+        buf = jnp.concatenate([conv_state, xbc], axis=1)        # (B, W-1+T, C)
+        if n_valid is None:
+            new_conv_state = buf[:, -w1:]
+        else:   # last W-1 *valid* inputs: rows [n_valid, n_valid + w1)
+            new_conv_state = jax.lax.dynamic_slice_in_dim(buf, n_valid, w1, 1)
+        xbc = _causal_conv(buf, p["conv_w"], p["conv_b"])[:, w1:]
     else:
         if capture_tail:  # conv state to resume decoding after prefill
             w1 = cfg.ssm_conv - 1
@@ -378,6 +391,10 @@ def _ssm_pre(h, p, cfg: ArchConfig, conv_state=None, capture_tail=False,
     Bs = Bs.reshape(b, t, g, ns)
     Cs = Cs.reshape(b, t, g, ns)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    if n_valid is not None:
+        # padded positions: dt=0 ⇒ decay exp(0)=1 and update x·dt=0, so the
+        # SSD state is untouched past the valid prefix
+        dt = jnp.where((jnp.arange(t) < n_valid)[None, :, None], dt, 0.0)
     xs = _constrain(ctx, xs, "ssm_x")
     Bs = _constrain(ctx, Bs, "ssm_bc")
     Cs = _constrain(ctx, Cs, "ssm_bc")
@@ -386,11 +403,11 @@ def _ssm_pre(h, p, cfg: ArchConfig, conv_state=None, capture_tail=False,
 
 
 def ssm_apply(x, p, cfg: ArchConfig, ctx, *, cache: Optional[Dict] = None,
-              ssd_impl: str = "ref",
-              return_state: bool = False) -> Tuple[jax.Array, Any]:
+              ssd_impl: str = "ref", return_state: bool = False,
+              n_valid=None) -> Tuple[jax.Array, Any]:
     h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))                # (H,)
-    if cache is not None:
+    if cache is not None and x.shape[1] == 1:
         z, xs, Bs, Cs, dt, conv_state = _ssm_pre(h, p, cfg, cache["conv"],
                                                  ctx=ctx)
         y, new_state = ssd_decode_step(
@@ -398,6 +415,16 @@ def ssm_apply(x, p, cfg: ArchConfig, ctx, *, cache: Optional[Dict] = None,
             cache["state"])
         y = y[:, None]
         new_cache = {"conv": conv_state, "state": new_state}
+    elif cache is not None:
+        # chunked prefill continue: T>1 starting from a carried (conv, ssd)
+        # state — conv consumes the W-1 token history, SSD seeds the
+        # inter-chunk recurrence with the carried state
+        z, xs, Bs, Cs, dt, conv_state = _ssm_pre(h, p, cfg, cache["conv"],
+                                                 ctx=ctx, n_valid=n_valid)
+        y, final_state = ssd_chunked(xs, Bs, Cs, dt, a, p["d_skip"],
+                                     chunk=cfg.ssm_chunk, impl=ssd_impl,
+                                     init_state=cache["state"])
+        new_cache = {"conv": conv_state, "state": final_state}
     else:
         z, xs, Bs, Cs, dt, conv_tail = _ssm_pre(
             h, p, cfg, capture_tail=return_state, ctx=ctx)

@@ -26,9 +26,15 @@ def _segsum(a: jax.Array) -> jax.Array:
     return jnp.where(mask, out, -jnp.inf)
 
 
-def ssd_chunked_ref(x, B, C, dt, A, D, chunk: int = 256
+def ssd_chunked_ref(x, B, C, dt, A, D, chunk: int = 256, init_state=None
                     ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    """Returns (y (B,T,H,P), final_state (B,H,P,N)).
+
+    ``init_state`` (B,H,P,N) f32 seeds the inter-chunk recurrence, letting a
+    long prompt be processed in several calls (chunked prefill): feeding the
+    final state of one call as the init of the next is equivalent to one
+    pass over the concatenated sequence. Right-padding is state-neutral
+    (dt=0 ⇒ decay 1, update 0), so ragged tails may be padded freely."""
     b, t, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
     hg = h // g
@@ -83,7 +89,10 @@ def ssd_chunked_ref(x, B, C, dt, A, D, chunk: int = 256
         s_next = s * decay + new_s
         return s_next, s                                         # emit state *before* chunk
 
-    s0 = jnp.zeros((b, g, hg, p, n), jnp.float32)
+    if init_state is None:
+        s0 = jnp.zeros((b, g, hg, p, n), jnp.float32)
+    else:
+        s0 = init_state.astype(jnp.float32).reshape(b, g, hg, p, n)
     s_final, s_prevs = jax.lax.scan(step, s0, (st, cs_h))
     s_prevs = s_prevs.transpose(1, 0, 2, 3, 4, 5)                # (B,nc,G,HG,P,N)
 
@@ -100,11 +109,15 @@ def ssd_chunked_ref(x, B, C, dt, A, D, chunk: int = 256
     return y.astype(x.dtype), s_final.reshape(b, h, p, n)
 
 
-def ssd_chunked(x, B, C, dt, A, D, chunk: int = 256, impl: str = "ref"):
-    if impl == "pallas":
+def ssd_chunked(x, B, C, dt, A, D, chunk: int = 256, impl: str = "ref",
+                init_state=None):
+    # the Pallas kernel starts from a zero state; a carried state (chunked
+    # prefill) routes to the reference path, which shares its contract
+    if impl == "pallas" and init_state is None:
         from repro.kernels import ops as kops
         return kops.ssd(x, B, C, dt, A, D, chunk=chunk)
-    return ssd_chunked_ref(x, B, C, dt, A, D, chunk=chunk)
+    return ssd_chunked_ref(x, B, C, dt, A, D, chunk=chunk,
+                           init_state=init_state)
 
 
 def ssd_decode_step(x, B, C, dt, A, D, state

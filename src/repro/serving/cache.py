@@ -183,6 +183,23 @@ def write_token_encoded(state: Dict[str, jax.Array],
     return out
 
 
+def append_slots(table: jax.Array, positions: jax.Array, block_size: int,
+                 n_blocks: int, valid: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Map per-row token positions to (block id, in-block offset) through a
+    block table. ``table`` (B, max_blocks) int32, ``positions`` (B,) int32,
+    ``valid`` (B,) bool. Rows flagged invalid route to block id ``n_blocks``
+    — the dropped null write — so an inactive batch slot or a padded prompt
+    chunk position can never corrupt live pages. Shared by the fused decode
+    step (one row per sequence) and the chunked-prefill step (one row per
+    chunk token of a single sequence)."""
+    mb = table.shape[1]
+    idx = jnp.clip(positions // block_size, 0, mb - 1)
+    blk = jnp.take_along_axis(table, idx[:, None], axis=1)[:, 0]
+    blk = jnp.where(valid, blk, n_blocks)
+    return blk, positions % block_size
+
+
 def gather(state: Dict[str, jax.Array], layer: int, block_table: jax.Array,
            dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
     """Dense per-batch view: block_table (B, max_blocks) int32 ->

@@ -1,13 +1,15 @@
-"""Continuous-batching serving engine with a fused, jit-compiled decode step.
+"""Continuous-batching serving engine with a fused, jit-compiled decode step
+and a chunked-prefill / preemption scheduler (scheduler v2).
 
 The engine owns:
   * a paged KV cache + block allocator (serving/cache.py),
   * dense per-slot SSM states (constant-size — SSM/hybrid archs need paged
     KV only for their attention layers), stored per period position with a
     leading ``n_periods`` axis so they scan with the layer stack,
-  * a FIFO admission scheduler with block-budget admission control
-    (LightLLM-style dynamic batching: admit while blocks + slots remain),
-  * the decode step over the running batch.
+  * a :class:`repro.serving.scheduler.Scheduler` that makes every policy
+    decision: FIFO admission with lazy block allocation, chunked-prefill
+    planning, and preemption of the youngest request under block pressure,
+  * the jit-compiled decode and chunk-prefill steps over the running batch.
 
 **Fused decode (default).** One ``jax.jit``-compiled function
 ``step(params, kv_state, ssm_states, tokens, lengths, table, active)``
@@ -23,24 +25,40 @@ corrupt live pages. Block-table width is bucketed to powers of two, so the
 jit cache holds at most one executable per (batch, table-bucket) pair;
 ``trace_counts`` records every retrace for the bounded-compile invariant.
 
+**Prefill** comes in two schedules:
+
+  * whole-prompt (``prefill_chunk=None``): admitted requests are grouped by
+    context length and run through the model as one forward per group, then
+    paged out with one all-layer scatter per sequence (the v1 behavior);
+  * chunked (``prefill_chunk=N``): one jit-compiled chunk step pages N
+    prompt tokens per engine step through the block table — attention runs
+    against the request's own pages (dense per-layer view, causal within
+    the chunk via ``q_offset``), SSM layers carry (conv, state) across
+    chunks (blocks.ssm_apply T>1-with-cache), and the chunk's KV lands with
+    one all-layer scatter whose padded tail routes to the null-write block.
+    Decode for the running batch proceeds in the *same* engine step, so a
+    long prompt no longer stalls every decoding request.
+
+**Preemption.** Block tables grow lazily (scheduler.ensure_blocks); when the
+pool runs dry the youngest active request is evicted and re-queued with its
+generated prefix, then re-prefilled on re-admission (recompute preemption).
+``Engine.stats()`` surfaces the resulting latency distributions: TTFT, TPOT
+and queue-time percentiles plus the preemption count.
+
 **Legacy decode** (``mode="legacy"``) keeps the paper-baseline per-layer
 Python hot loop: per-layer eager dispatch, dense block gather, naive
 attention. It exists as the measured baseline for benchmarks/bench_decode
 and benchmarks/fig6_serving (--legacy), and as the parity oracle in tests.
 
-**Prefill** is batched: admitted requests are grouped by prompt length and
-run through the model as one forward per group, then paged out with one
-all-layer scatter per sequence (cache.write_prefill).
-
 The paper's serving benchmarks (Figs. 6-10) drive this engine with burst
-arrivals and record per-request latency for CDFs plus aggregate throughput.
+arrivals and record per-request latency for CDFs plus aggregate throughput;
+benchmarks/bench_latency.py adds Poisson arrivals and SLO percentiles.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import Counter, deque
-from typing import Any, Dict, List, Optional, Tuple
+from collections import Counter
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,8 +69,11 @@ from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models.lm import LM
 from repro.serving import cache as C
-from repro.serving.cache import BlockAllocator, PagedKVCache, PagedKVConfig
+from repro.serving.cache import PagedKVCache, PagedKVConfig
+from repro.serving.scheduler import RUNNING, Request, Scheduler
 from repro.kernels import flash_decode as fd
+
+__all__ = ["Engine", "Request"]
 
 
 def _next_pow2(n: int) -> int:
@@ -62,29 +83,12 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    tokens: List[int]
-    max_new_tokens: int = 32
-    arrival: float = 0.0
-    # lifecycle
-    first_token_time: Optional[float] = None
-    finish_time: Optional[float] = None
-    output: List[int] = dataclasses.field(default_factory=list)
-    blocks: List[int] = dataclasses.field(default_factory=list)
-    slot: int = -1
-
-    @property
-    def length(self) -> int:
-        return len(self.tokens) + len(self.output)
-
-
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  n_blocks: int = 64, block_size: int = 16,
                  kv_quant: str = "none", greedy: bool = True,
-                 mode: str = "fused", clock=time.monotonic):
+                 mode: str = "fused", prefill_chunk: Optional[int] = None,
+                 clock=time.monotonic):
         if mode not in ("fused", "legacy"):
             raise ValueError(f"mode must be 'fused' or 'legacy', got {mode!r}")
         self.cfg = cfg
@@ -94,6 +98,7 @@ class Engine:
         self.block_size = block_size
         self.greedy = greedy
         self.mode = mode
+        self.prefill_chunk = prefill_chunk
         self.clock = clock
         # attention layout: which period positions mix with attention, and
         # the (period, rank) -> flat attn-layer mapping used by the storage
@@ -107,25 +112,48 @@ class Engine:
             head_dim=max(cfg.head_dim, 1), n_blocks=n_blocks,
             block_size=block_size, kv_quant=kv_quant)
         self.kv = PagedKVCache(self.kv_cfg)
-        self.alloc = BlockAllocator(n_blocks)
-        self.waiting: deque = deque()
-        self.running: List[Optional[Request]] = [None] * max_batch
+        self.sched = Scheduler(max_batch=max_batch, n_blocks=n_blocks,
+                               block_size=block_size,
+                               prefill_chunk=prefill_chunk)
         self.finished: List[Request] = []
         self._ssm_states = self._init_ssm_states()
         self._paged_impl = ("pallas" if jax.default_backend() == "tpu"
                             else "xla")
-        # one executable per (batch, table-bucket) pair; trace_counts
-        # observes every (re)trace of the fused step. KV/SSM state buffers
+        # one executable per (batch, table-bucket) pair — plus one per
+        # ("chunk", chunk, table-bucket) for chunked prefill; trace_counts
+        # observes every (re)trace of the jitted steps. KV/SSM state buffers
         # are donated: the caller always rebinds to the returned state, so
         # the cache is updated in place instead of copied every token
         # (backends without donation support fall back to a copy).
         self.trace_counts: Counter = Counter()
         self._fused_step = jax.jit(self._fused_step_impl,
                                    donate_argnums=(1, 2))
+        self._chunk_step = jax.jit(self._chunk_step_impl,
+                                   donate_argnums=(1, 2))
+        # whole-prompt prefill is jit-compiled too (one executable per
+        # (group, length) shape): besides the speedup, compiled-vs-eager
+        # bf16 fusion differences would otherwise make whole-prompt and
+        # chunked prefill disagree on greedy tokens for SSD stacks
+        self._prefill_fwd = jax.jit(self._prefill_fwd_impl)
         self.steps = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self.decode_time = 0.0
+        self.prefill_time = 0.0
+
+    # engine-level views over the scheduler's bookkeeping (the public
+    # surface tests and benchmarks built against v1)
+    @property
+    def alloc(self):
+        return self.sched.alloc
+
+    @property
+    def waiting(self):
+        return self.sched.waiting
+
+    @property
+    def running(self):
+        return self.sched.running
 
     # ------------------------------------------------------------------
     def _init_ssm_states(self):
@@ -140,56 +168,43 @@ class Engine:
                 base)
         return states
 
+    def _zero_ssm_slot(self, slot: int) -> None:
+        """Reset one slot's SSM state (chunked prefill starts from zeros;
+        whole-prompt prefill overwrites the slot with its snapshot instead)."""
+        if not self._ssm_states:
+            return
+        self._ssm_states = jax.tree_util.tree_map(
+            lambda a: a.at[:, slot].set(0), self._ssm_states)
+
     # ------------------------------------------------------------------
-    # Scheduling
+    # Scheduling entry points (policy lives in serving/scheduler.py)
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         req.arrival = req.arrival or self.clock()
-        self.waiting.append(req)
-
-    def _blocks_needed(self, req: Request) -> int:
-        total = len(req.tokens) + req.max_new_tokens
-        return -(-total // self.block_size)
-
-    def _admit(self) -> List[Request]:
-        admitted = []
-        while self.waiting:
-            req = self.waiting[0]
-            free_slots = [i for i, r in enumerate(self.running) if r is None]
-            if not free_slots:
-                break
-            need = self._blocks_needed(req)
-            if self.alloc.n_free < need:
-                break   # admission control: no KV budget -> keep waiting
-            # past the pre-check, alloc() cannot fail; if it ever raises
-            # OutOfBlocks the allocator invariant is broken and the error
-            # must propagate, not be absorbed as backpressure
-            blocks = self.alloc.alloc(need)
-            self.waiting.popleft()
-            req.blocks = blocks
-            req.slot = free_slots[0]
-            self.running[req.slot] = req
-            admitted.append(req)
-        return admitted
+        self.sched.submit(req)
 
     # ------------------------------------------------------------------
-    # Prefill: one forward per group of equal-length prompts; page out
-    # attention KV with one all-layer scatter per sequence; snapshot SSM
-    # states into the slots.
+    # Whole-prompt prefill: one forward per group of equal-length contexts;
+    # page out attention KV with one all-layer scatter per sequence;
+    # snapshot SSM states into the slots. Resume-aware: a preempted request
+    # re-prefills its prompt *plus generated prefix* and keeps decoding.
     # ------------------------------------------------------------------
 
     def _prefill(self, reqs: List[Request]) -> None:
         by_len: Dict[int, List[Request]] = {}
         for r in reqs:
-            by_len.setdefault(len(r.tokens), []).append(r)
+            by_len.setdefault(r.context_len(), []).append(r)
         for t in sorted(by_len):
             self._prefill_group(by_len[t], t)
 
+    def _prefill_fwd_impl(self, params, toks):
+        logits, cache, _ = self.model.prefill(params, {"tokens": toks})
+        return logits, cache
+
     def _prefill_group(self, group: List[Request], t: int) -> None:
-        model = self.model
-        toks = jnp.asarray([r.tokens for r in group], jnp.int32)
-        logits, cache, _ = model.prefill(self.params, {"tokens": toks})
+        toks = jnp.asarray([r.context_tokens() for r in group], jnp.int32)
+        logits, cache = self._prefill_fwd(self.params, toks)
         if self._attn_pos:
             ks, vs = [], []
             for pos in self._attn_pos:
@@ -213,9 +228,173 @@ class Engine:
         next_tok = np.asarray(jnp.argmax(logits, axis=-1))
         now = self.clock()
         for g, r in enumerate(group):
-            r.output.append(int(next_tok[g]))
-            r.first_token_time = now
+            if not r.output:        # fresh request: this IS the first token
+                r.output.append(int(next_tok[g]))
+                r.first_token_time = now
+            # resumed request: the recomputed token is already output[-1]
+            r.prefilled = t
+            r.state = RUNNING
             self.prefill_tokens += t
+
+    # ------------------------------------------------------------------
+    # Chunked prefill: one jit-compiled step pages `prefill_chunk` context
+    # tokens of ONE sequence through its block table. Attention runs
+    # against the sequence's own pages (dense per-layer view + the fresh
+    # chunk placed at its true positions, causal via q_offset); SSM layers
+    # carry (conv, state) across chunks. Ragged tails are right-padded to
+    # the chunk size so the jit cache stays one executable per
+    # (chunk, table-bucket): padded KV routes to the null-write block and
+    # padded SSM positions are dt-masked (state-neutral).
+    # ------------------------------------------------------------------
+
+    def _chunk_step_impl(self, params, kv_state, ssm_states, tokens, ctx,
+                         n_valid, table, slot):
+        # NOTE: the layer-body structure (encode-as-stored KV contract, scan
+        # ys collection, moe/ffn dispatch) mirrors _fused_step_impl and the
+        # two must evolve together — only the attention read path (dense
+        # page view + naive causal here, paged flash partial + analytic
+        # merge there) and the SSM cache plumbing differ. Divergence is
+        # caught by the chunked-vs-whole and fused-vs-legacy parity tests.
+        cn = int(tokens.shape[1])
+        mbb = int(table.shape[1])
+        # runs only when jit (re)traces: bounded-compile accounting
+        self.trace_counts[("chunk", cn, mbb)] += 1
+        cfg, model = self.cfg, self.model
+        period, n_periods = model.period, model.n_periods
+        bs = self.block_size
+        quant = self.kv_cfg.kv_quant
+        n_attn_pp = len(self._attn_pos)
+        n_kv = self.kv_cfg.n_kv_heads
+        hd = self.kv_cfg.head_dim
+
+        x = model._embed_in(params, tokens)                  # (1, C, d)
+        positions = ctx + jnp.arange(cn, dtype=jnp.int32)[None, :]
+
+        if n_attn_pp:
+            kv_xs = {kk: vv.reshape((n_periods, n_attn_pp) + vv.shape[1:])
+                     for kk, vv in kv_state.items()}
+        else:
+            kv_xs = {}
+        ssm_xs = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+            ssm_states)
+        table0 = table[0]
+
+        def body(x, xs):
+            lp, kv_slice, ssm_slice = xs
+            new_kv: Dict[str, list] = {}
+            new_ssm: Dict[str, Any] = {}
+            r = 0
+            for pos in range(period):
+                pp = lp[f"pos{pos}"]
+                if model.kinds[pos] == "attn":
+                    h = L.rmsnorm(x, pp["mix"]["ln"], cfg.norm_eps)
+                    q, k, v = B._qkv(h, pp["mix"], cfg, None,
+                                     positions=positions)   # (1, C, H, hd)
+                    # encode once: attend to the chunk as the cache will
+                    # store it (int8 roundtrip under kv_quant) and reuse
+                    # the encoded form for the post-scan page-out
+                    kq, ks = C.quant_encode(k, quant)
+                    vq, vs = C.quant_encode(v, quant)
+                    ka = C.quant_decode(kq, ks, k.dtype)
+                    va = C.quant_decode(vq, vs, v.dtype)
+                    # dense view of this layer's pages, extended by C slots
+                    # and overlaid with the fresh chunk at its true
+                    # positions; everything past ctx + n_valid is masked by
+                    # the causal q_offset mask, so garbage pages behind
+                    # padded table entries are unreachable from valid rows
+                    kd = kv_slice["k"][r][table0]        # (MB, bs, K, hd)
+                    vd = kv_slice["v"][r][table0]
+                    ksd = (kv_slice["k_scale"][r][table0]
+                           if quant == "int8" else None)
+                    vsd = (kv_slice["v_scale"][r][table0]
+                           if quant == "int8" else None)
+                    kd = C.quant_decode(kd, ksd, k.dtype).reshape(
+                        1, mbb * bs, n_kv, hd)
+                    vd = C.quant_decode(vd, vsd, v.dtype).reshape(
+                        1, mbb * bs, n_kv, hd)
+                    pad = jnp.zeros((1, cn, n_kv, hd), k.dtype)
+                    k_full = jax.lax.dynamic_update_slice_in_dim(
+                        jnp.concatenate([kd, pad], axis=1), ka, ctx, axis=1)
+                    v_full = jax.lax.dynamic_update_slice_in_dim(
+                        jnp.concatenate([vd, pad], axis=1), va, ctx, axis=1)
+                    out = L.attention(q, k_full, v_full, mode="naive",
+                                      causal=True, q_offset=ctx)
+                    y = L.dense(out, pp["mix"]["wo"], n_in=2)
+                    x = x + y
+                    new_kv.setdefault("k", []).append(kq[0])
+                    new_kv.setdefault("v", []).append(vq[0])
+                    if ks is not None:
+                        new_kv.setdefault("k_scale", []).append(ks[0])
+                        new_kv.setdefault("v_scale", []).append(vs[0])
+                    r += 1
+                else:
+                    st = ssm_slice[f"pos{pos}"]
+                    x, nc = B.ssm_apply(x, pp["mix"], cfg, None, cache=st,
+                                        n_valid=n_valid)
+                    new_ssm[f"pos{pos}"] = nc
+                if model.fkinds[pos] == "moe":
+                    x, _ = B.moe_apply(x, pp["ffn"], cfg, None,
+                                       capacity_mult=4.0)
+                else:
+                    x = B.ffn_apply(x, pp["ffn"], cfg, None)
+            kv_ys = {kk: jnp.stack(vv) for kk, vv in new_kv.items()}
+            return x, (kv_ys, new_ssm)
+
+        x, (kv_ys, new_ssm) = jax.lax.scan(
+            body, x, (params["blocks"], kv_xs, ssm_xs))
+
+        last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        logits = model._head(params, last)[:, 0]
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+
+        if n_attn_pp:
+            n_l = n_periods * n_attn_pp
+            enc = {kk: vv.reshape((n_l,) + vv.shape[2:])
+                   for kk, vv in kv_ys.items()}   # (periods, R, C, ...) -> (L, C, ...)
+            tok_pos = ctx + jnp.arange(cn, dtype=jnp.int32)
+            valid = jnp.arange(cn) < n_valid
+            blk, off = C.append_slots(
+                jnp.broadcast_to(table0[None], (cn, mbb)), tok_pos, bs,
+                self.kv_cfg.n_blocks, valid)
+            kv_state = C.write_token_encoded(kv_state, enc, blk, off)
+        if self._ssm_pos:
+            ssm_states = jax.tree_util.tree_map(
+                lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                    full, new, slot, axis=1),
+                ssm_states, new_ssm)
+        return kv_state, ssm_states, next_token
+
+    def _prefill_chunk_tick(self) -> None:
+        plan = self.sched.next_prefill_chunk()
+        if plan is None:
+            return
+        req, start, n = plan
+        if not self.sched.ensure_blocks(req, start + n):
+            return      # only elders hold blocks: wait for them to finish
+        seq = req.context_tokens()
+        cn = self.prefill_chunk
+        chunk = seq[start:start + n] + [0] * (cn - n)
+        # fixed table width per request footprint: every chunk of this
+        # request compiles against the same bucket
+        mbb = _next_pow2(self.sched._blocks_for(len(seq)))
+        table = np.zeros((1, mbb), np.int32)
+        table[0, : len(req.blocks)] = req.blocks
+        kv_state, ssm_states, next_tok = self._chunk_step(
+            self.params, self.kv.state, self._ssm_states,
+            jnp.asarray([chunk], jnp.int32),
+            jnp.asarray(start, jnp.int32), jnp.asarray(n, jnp.int32),
+            jnp.asarray(table), jnp.asarray(req.slot, jnp.int32))
+        self.kv.state = kv_state
+        if self._ssm_pos:
+            self._ssm_states = ssm_states
+        req.prefilled = start + n
+        self.prefill_tokens += n
+        if req.prefilled >= len(seq):
+            if not req.output:      # fresh request: this IS the first token
+                req.output.append(int(next_tok))
+                req.first_token_time = self.clock()
+            req.state = RUNNING
 
     # ------------------------------------------------------------------
     # Fused decode: the whole step — embed, layer-stack scan with paged
@@ -301,6 +480,16 @@ class Engine:
                 else:
                     st = ssm_slice[f"pos{pos}"]
                     x, nc = B.ssm_apply(x, pp["mix"], cfg, None, cache=st)
+                    # inactive slots keep their state: a slot mid-way
+                    # through chunked prefill must not have its carried
+                    # (conv, ssd) state advanced by the running batch's
+                    # decode steps (the SSM analogue of the null-write
+                    # block for inactive KV appends)
+                    nc = jax.tree_util.tree_map(
+                        lambda new, old: jnp.where(
+                            active.reshape((-1,) + (1,) * (new.ndim - 1)),
+                            new, old),
+                        nc, st)
                     new_ssm[f"pos{pos}"] = nc
                 if model.fkinds[pos] == "moe":
                     x, _ = B.moe_apply(x, pp["ffn"], cfg, None,
@@ -320,17 +509,14 @@ class Engine:
             n_l = n_periods * n_attn_pp
             enc = {kk: vv.reshape((n_l,) + vv.shape[2:])
                    for kk, vv in kv_ys.items()}   # (periods, R, ...) -> (L, ...)
-            blk = table[jnp.arange(bsz),
-                        jnp.clip(lengths // bs, 0, table.shape[1] - 1)]
             # inactive slots -> block id n_blocks: a dropped null write
-            blk = jnp.where(active, blk, self.kv_cfg.n_blocks)
-            off = lengths % bs
+            blk, off = C.append_slots(table, lengths, bs,
+                                      self.kv_cfg.n_blocks, active)
             kv_state = C.write_token_encoded(kv_state, enc, blk, off)
         new_lengths = jnp.where(active, lengths + 1, lengths)
         return kv_state, new_ssm, next_tokens, new_lengths
 
-    def _decode_fused(self) -> None:
-        live = [r for r in self.running if r is not None]
+    def _decode_fused(self, live: List[Request]) -> None:
         if not live:
             return
         bsz = self.max_batch
@@ -354,22 +540,31 @@ class Engine:
         self._finish_step(live, np.asarray(next_tokens))
 
     def warmup(self, max_seq_len: int) -> None:
-        """Pre-compile the fused step for the table bucket implied by
+        """Pre-compile the jitted steps for the table bucket implied by
         ``max_seq_len`` (prompt + generation budget), the way a serving
         deployment compiles before taking traffic. No state is mutated."""
-        if self.mode != "fused":
-            return
         mbb = _next_pow2(-(-max_seq_len // self.block_size))
         bsz = self.max_batch
-        # the step donates its state args: hand it throwaway copies so the
-        # live cache buffers survive the discarded warmup call
-        out = self._fused_step(
-            self.params,
-            jax.tree_util.tree_map(jnp.copy, self.kv.state),
-            jax.tree_util.tree_map(jnp.copy, self._ssm_states),
-            jnp.zeros((bsz,), jnp.int32), jnp.zeros((bsz,), jnp.int32),
-            jnp.zeros((bsz, mbb), jnp.int32), jnp.zeros((bsz,), bool))
-        jax.block_until_ready(out)
+        # the steps donate their state args: hand them throwaway copies so
+        # the live cache buffers survive the discarded warmup calls
+        if self.mode == "fused":
+            out = self._fused_step(
+                self.params,
+                jax.tree_util.tree_map(jnp.copy, self.kv.state),
+                jax.tree_util.tree_map(jnp.copy, self._ssm_states),
+                jnp.zeros((bsz,), jnp.int32), jnp.zeros((bsz,), jnp.int32),
+                jnp.zeros((bsz, mbb), jnp.int32), jnp.zeros((bsz,), bool))
+            jax.block_until_ready(out)
+        if self.prefill_chunk is not None:
+            cn = self.prefill_chunk
+            out = self._chunk_step(
+                self.params,
+                jax.tree_util.tree_map(jnp.copy, self.kv.state),
+                jax.tree_util.tree_map(jnp.copy, self._ssm_states),
+                jnp.zeros((1, cn), jnp.int32),
+                jnp.asarray(0, jnp.int32), jnp.asarray(cn, jnp.int32),
+                jnp.zeros((1, mbb), jnp.int32), jnp.asarray(0, jnp.int32))
+            jax.block_until_ready(out)
 
     # ------------------------------------------------------------------
     # Legacy decode: the paper-baseline per-layer Python hot loop (eager
@@ -377,9 +572,8 @@ class Engine:
     # the measured baseline and parity oracle for the fused path.
     # ------------------------------------------------------------------
 
-    def _decode_batch(self) -> None:
+    def _decode_batch(self, live: List[Request]) -> None:
         cfg = self.cfg
-        live = [r for r in self.running if r is not None]
         if not live:
             return
         bsz = self.max_batch
@@ -412,6 +606,12 @@ class Engine:
                 full = self._ssm_states[f"pos{pos}"]
                 st = jax.tree_util.tree_map(lambda a: a[per], full)
                 x, nc = B.ssm_apply(x, pp["mix"], cfg, None, cache=st)
+                # inactive slots keep their state (see fused step)
+                nc = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(
+                        active.reshape((-1,) + (1,) * (new.ndim - 1)),
+                        new, old),
+                    nc, st)
                 self._ssm_states[f"pos{pos}"] = jax.tree_util.tree_map(
                     lambda a, n: a.at[per].set(n), full, nc)
             if self.model.fkinds[pos] == "moe":
@@ -433,12 +633,9 @@ class Engine:
         q, k, v = B._qkv(h, p, cfg, None, positions=lengths[:, None])
         # append the new token to its page; inactive slots (all-zero table
         # rows) become null writes instead of corrupting block 0
-        bs = self.block_size
-        blk = table[jnp.arange(table.shape[0]),
-                    jnp.clip(lengths // bs, 0, table.shape[1] - 1)]
-        blk = jnp.where(active, blk, self.kv_cfg.n_blocks)
-        off = lengths % bs
         quant = self.kv_cfg.kv_quant
+        blk, off = C.append_slots(table, lengths, self.block_size,
+                                  self.kv_cfg.n_blocks, active)
         kq, ks = C.quant_encode(k[:, 0], quant)
         vq, vs = C.quant_encode(v[:, 0], quant)
         st = dict(self.kv.state)
@@ -469,47 +666,94 @@ class Engine:
             r.output.append(int(next_tokens[r.slot]))
             self.decode_tokens += 1
             if len(r.output) >= r.max_new_tokens:
-                r.finish_time = now
+                self.sched.finish(r, now)
                 self.finished.append(r)
-                self.alloc.release(r.blocks)
-                self.running[r.slot] = None
 
     def step(self) -> None:
-        admitted = self._admit()
-        if admitted:
-            self._prefill(admitted)
+        admitted = self.sched.admit(self.clock())
+        t0 = self.clock()
+        if self.prefill_chunk is None:
+            if admitted:
+                self._prefill(admitted)
+        else:
+            for r in admitted:
+                self._zero_ssm_slot(r.slot)
+            self._prefill_chunk_tick()
+        self.prefill_time += self.clock() - t0
+        # grow each decoding request's block table for this step's append;
+        # under pressure this preempts strictly-younger request(s) — so
+        # re-check states after the loop — and a request that could only
+        # grow by evicting an elder sits this step out instead
+        deferred = set()
+        for r in self.sched.decode_candidates():
+            if r.state == RUNNING and \
+                    not self.sched.ensure_blocks(r, r.length):
+                deferred.add(r.rid)
+        live = [r for r in self.sched.running
+                if r is not None and r.state == RUNNING
+                and r.rid not in deferred]
         t0 = self.clock()
         if self.mode == "fused":
-            self._decode_fused()
+            self._decode_fused(live)
         else:
-            self._decode_batch()
+            self._decode_batch(live)
         self.decode_time += self.clock() - t0
         self.steps += 1
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        while (self.waiting or any(self.running)) and self.steps < max_steps:
+        while self.sched.has_work and self.steps < max_steps:
             self.step()
         return self.finished
+
+    def reset_stats(self) -> None:
+        """Clear request history and counters while keeping compiled steps
+        and cache storage — benchmarks run a warmup trace, reset, then
+        measure the same engine with every executable already built.
+        Requires a quiescent engine (no waiting/running requests)."""
+        if self.sched.has_work:
+            raise RuntimeError("reset_stats() on an engine with live work")
+        self.finished = []
+        self.steps = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.decode_time = 0.0
+        self.prefill_time = 0.0
+        self.sched.n_preemptions = 0
 
     def stats(self) -> Dict[str, float]:
         done = self.finished
         lat = [r.finish_time - r.arrival for r in done if r.finish_time]
-        ttft = [r.first_token_time - r.arrival for r in done
-                if r.first_token_time]
+        ttft = [t for t in (r.ttft() for r in done) if t is not None]
+        tpot = [t for t in (r.tpot() for r in done) if t is not None]
+        queue = [t for t in (r.queue_time() for r in done) if t is not None]
         wall = max((r.finish_time or 0) for r in done) - \
             min(r.arrival for r in done) if done else 0.0
         toks = sum(len(r.output) for r in done)
+
+        def pct(a, p):
+            return float(np.percentile(a, p)) if a else 0.0
+
         return {
             "requests": len(done),
             "throughput_tok_s": toks / wall if wall > 0 else 0.0,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
-            "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
-            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "p50_latency_s": pct(lat, 50),
+            "p99_latency_s": pct(lat, 99),
             "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "p50_ttft_s": pct(ttft, 50),
+            "p95_ttft_s": pct(ttft, 95),
+            "p99_ttft_s": pct(ttft, 99),
+            "mean_tpot_s": float(np.mean(tpot)) if tpot else 0.0,
+            "p50_tpot_s": pct(tpot, 50),
+            "p95_tpot_s": pct(tpot, 95),
+            "p99_tpot_s": pct(tpot, 99),
+            "mean_queue_s": float(np.mean(queue)) if queue else 0.0,
+            "preemptions": self.sched.n_preemptions,
             "kv_utilization": self.alloc.utilization(),
             "decode_tokens": self.decode_tokens,
             "prefill_tokens": self.prefill_tokens,
             "decode_time_s": self.decode_time,
+            "prefill_time_s": self.prefill_time,
             "decode_tok_s": (self.decode_tokens / self.decode_time
                              if self.decode_time > 0 else 0.0),
         }

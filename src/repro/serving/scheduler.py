@@ -1,0 +1,252 @@
+"""Continuous-batching scheduler v2: chunked prefill, lazy block
+allocation, and preemption under block pressure.
+
+The scheduler owns every *policy* decision of the serving engine; the
+engine (serving/engine.py) owns model execution. Compared to the v1
+FIFO-with-full-reservation admission loop, three things change:
+
+  * **Lazy block allocation.** A request is admitted with only the blocks
+    its first prefill unit needs (one chunk, or the whole prompt when
+    chunked prefill is off) and grows its block table on demand — one
+    block at a time during decode, one chunk's worth during prefill. KV
+    budget is a live resource, not a worst-case reservation, so a burst of
+    long-``max_new`` requests no longer serializes behind pessimistic
+    admission control.
+
+  * **Chunked prefill** (``prefill_chunk=N``). Prompts are paged out N
+    tokens at a time, one chunk per engine step, interleaved with the
+    fused decode step over the running batch — a 4k-token prompt no longer
+    stalls every decoding request for a whole-prompt forward (the
+    Sarathi/vLLM chunked-prefill schedule). ``next_prefill_chunk`` always
+    picks the *oldest* prefilling request, so prefill is FCFS.
+
+  * **Preemption under block pressure.** When a request must grow and the
+    free list is short, :meth:`ensure_blocks` evicts the lowest-priority
+    (youngest-arrival) *other* request: its blocks are freed, its slot is
+    released, and it is re-queued at the front of the waiting queue with
+    its generated prefix intact (recompute-style preemption — on
+    re-admission its prompt *plus generated tokens* are prefilled again
+    and decode continues from where it stopped). Victims are always
+    strictly younger than the grower — a request that would have to evict
+    an elder waits instead (``ensure_blocks`` returns False) — so FCFS
+    priority is never inverted, the oldest active request always
+    progresses, and the schedule cannot deadlock; :meth:`submit` rejects
+    requests whose full footprint could never fit the pool, which
+    guarantees the oldest can always grow by evicting its juniors.
+
+Latency accounting lives on the :class:`Request`: arrival, first
+admission (queue time), first token (TTFT), finish (TPOT = decode seconds
+per generated token after the first, re-prefill delays included — the
+honest SLO view of preemption), and a preemption counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional, Tuple
+
+from repro.serving.cache import BlockAllocator, OutOfBlocks
+
+WAITING = "waiting"
+PREFILL = "prefill"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: List[int]
+    max_new_tokens: int = 32
+    arrival: float = 0.0
+    # lifecycle
+    state: str = WAITING
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    admitted_time: Optional[float] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    prefilled: int = 0          # context tokens already paged out
+    n_preemptions: int = 0
+
+    @property
+    def length(self) -> int:
+        return len(self.tokens) + len(self.output)
+
+    def context_tokens(self) -> List[int]:
+        """Tokens whose KV must be paged before decode can proceed: the
+        prompt plus every generated token except the last (the last one is
+        the next decode input; its KV is appended by the decode step)."""
+        if self.output:
+            return list(self.tokens) + self.output[:-1]
+        return list(self.tokens)
+
+    def context_len(self) -> int:
+        return len(self.tokens) + max(len(self.output) - 1, 0)
+
+    # latency views (valid once the corresponding timestamps exist)
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    def tpot(self) -> Optional[float]:
+        if (self.finish_time is None or self.first_token_time is None
+                or len(self.output) < 2):
+            return None
+        return ((self.finish_time - self.first_token_time)
+                / (len(self.output) - 1))
+
+    def queue_time(self) -> Optional[float]:
+        if self.admitted_time is None:
+            return None
+        return self.admitted_time - self.arrival
+
+
+def _priority(req: Request) -> Tuple[float, int]:
+    """FCFS priority: earlier arrival wins; rid breaks ties."""
+    return (req.arrival, req.rid)
+
+
+class Scheduler:
+    """Slot/queue/block bookkeeping for the continuous-batching engine."""
+
+    def __init__(self, *, max_batch: int, n_blocks: int, block_size: int,
+                 prefill_chunk: Optional[int] = None):
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1 (or None)")
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        self.alloc = BlockAllocator(n_blocks)
+        self.waiting: deque = deque()
+        self.running: List[Optional[Request]] = [None] * max_batch
+        self.n_preemptions = 0
+
+    # ------------------------------------------------------------------
+    def _blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def submit(self, req: Request) -> None:
+        total = len(req.tokens) + req.max_new_tokens
+        if self._blocks_for(total) > self.alloc.n_blocks:
+            raise OutOfBlocks(
+                f"request {req.rid} needs {self._blocks_for(total)} blocks "
+                f"at its full footprint but the pool holds only "
+                f"{self.alloc.n_blocks}; it could never be scheduled")
+        req.state = WAITING
+        self.waiting.append(req)
+
+    # ------------------------------------------------------------------
+    # Admission: FIFO, with only the first prefill unit's blocks. The
+    # headroom term keeps one free block per already-active request (each
+    # may need to grow within a step or two), which damps admit→preempt
+    # thrash without reverting to full-footprint reservation.
+    # ------------------------------------------------------------------
+
+    def admit(self, now: float) -> List[Request]:
+        admitted: List[Request] = []
+        while self.waiting:
+            req = self.waiting[0]
+            free_slots = [i for i, r in enumerate(self.running) if r is None]
+            if not free_slots:
+                break
+            target = req.context_len()
+            first = (target if self.prefill_chunk is None
+                     else min(target, self.prefill_chunk))
+            need = self._blocks_for(first)
+            headroom = sum(1 for r in self.running if r is not None)
+            if self.alloc.n_free < need + headroom:
+                break               # no KV budget yet: keep FIFO order
+            self.waiting.popleft()
+            req.blocks = self.alloc.alloc(need)
+            req.slot = free_slots[0]
+            req.state = PREFILL
+            req.prefilled = 0
+            if req.admitted_time is None:
+                req.admitted_time = now
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    # ------------------------------------------------------------------
+    # Growth + preemption
+    # ------------------------------------------------------------------
+
+    def ensure_blocks(self, req: Request, n_tokens: int) -> bool:
+        """Grow ``req``'s block table to cover ``n_tokens`` context tokens,
+        preempting the youngest active request(s) *younger than req* if the
+        free list is short. Returns False when ``req`` must wait instead
+        (only older requests hold the blocks — evicting them would invert
+        FCFS priority). The oldest active request can always grow: every
+        other active request is younger and submit() bounds each footprint
+        by the pool size, so it makes progress and the schedule cannot
+        deadlock; a waiting grower is unblocked when its elders finish."""
+        need = self._blocks_for(n_tokens) - len(req.blocks)
+        if need <= 0:
+            return True
+        while self.alloc.n_free < need:
+            victim = self._pick_victim(than=req)
+            if victim is None:
+                return False        # req yields to its elders this step
+            self.preempt(victim)
+        req.blocks.extend(self.alloc.alloc(need))
+        return True
+
+    def _pick_victim(self, than: Request) -> Optional[Request]:
+        """Youngest active request strictly lower-priority than ``than``."""
+        cands = [r for r in self.running
+                 if r is not None and r is not than
+                 and _priority(r) > _priority(than)]
+        if not cands:
+            return None
+        return max(cands, key=_priority)    # youngest arrival goes first
+
+    def preempt(self, victim: Request) -> None:
+        """Evict an active request: free its blocks and slot, re-queue it at
+        the front of the waiting queue with its generated prefix intact."""
+        self.alloc.release(victim.blocks)
+        victim.blocks = []
+        self.running[victim.slot] = None
+        victim.slot = -1
+        victim.prefilled = 0
+        victim.state = WAITING
+        victim.n_preemptions += 1
+        self.n_preemptions += 1
+        # victims are preempted youngest-first and appendleft'ed, so the
+        # waiting queue stays globally FCFS-ordered
+        self.waiting.appendleft(victim)
+
+    def finish(self, req: Request, now: float) -> None:
+        req.finish_time = now
+        req.state = FINISHED
+        self.alloc.release(req.blocks)
+        req.blocks = []
+        self.running[req.slot] = None
+        req.slot = -1
+
+    # ------------------------------------------------------------------
+    # Step planning views
+    # ------------------------------------------------------------------
+
+    def next_prefill_chunk(self) -> Optional[Tuple[Request, int, int]]:
+        """(request, start, n_tokens) for the oldest request still paging
+        its context out, or None. Only meaningful with chunked prefill."""
+        cands = [r for r in self.running
+                 if r is not None and r.state == PREFILL]
+        if not cands:
+            return None
+        req = min(cands, key=_priority)
+        n = min(self.prefill_chunk, req.context_len() - req.prefilled)
+        return req, req.prefilled, n
+
+    def decode_candidates(self) -> List[Request]:
+        """Running (decoding) requests, oldest first."""
+        return sorted((r for r in self.running
+                       if r is not None and r.state == RUNNING),
+                      key=_priority)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(r is not None for r in self.running)

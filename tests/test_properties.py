@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# optional dependency: without this guard a missing hypothesis aborts the
+# whole tier-1 run at collection time instead of skipping this module
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import layers as L

@@ -1,0 +1,247 @@
+"""Scheduler v2: chunked prefill parity, preemption lifecycle under block
+pressure, SSD state-carry correctness, and latency accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import blocks as B
+from repro.models.lm import LM
+from repro.models.ssd import ssd_chunked_ref
+from repro.serving.cache import OutOfBlocks
+from repro.serving.engine import Engine, Request
+
+
+def _params(cfg):
+    return LM(cfg).init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=t).tolist() for t in lens]
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill == whole-prompt prefill (greedy tokens)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,chunk,lens", [
+    ("qwen1.5-0.5b", 5, (12, 7, 9)),        # ragged chunk tails
+    ("mamba2-130m", 32, (40, 56, 33)),      # ssm_chunk-aligned chunks
+])
+def test_chunked_prefill_matches_whole_prompt(arch, chunk, lens):
+    """Paging a prompt out chunk-by-chunk (interleaved with decode) emits
+    the same greedy tokens as one whole-prompt forward. For SSD stacks the
+    chunk must be a multiple of cfg.ssm_chunk so both schedules group the
+    recurrence identically (bf16 rounding is grouping-sensitive)."""
+    cfg = get_config(arch, reduced=True)
+    params = _params(cfg)
+    prompts = _prompts(cfg, lens)
+    outs = {}
+    for pf in (None, chunk):
+        eng = Engine(cfg, params, max_batch=2, n_blocks=64, block_size=8,
+                     prefill_chunk=pf)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=5))
+        done = eng.run(max_steps=300)
+        assert len(done) == len(prompts)
+        assert eng.alloc.n_free == eng.alloc.n_blocks
+        outs[pf] = {r.rid: r.output for r in done}
+    assert outs[None] == outs[chunk]
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """While a long prompt is being paged out chunk-by-chunk, an
+    already-running request keeps generating: its output grows across the
+    steps the long prompt's prefill occupies (no head-of-line stall)."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    prompts = _prompts(cfg, (8, 64))
+    eng = Engine(cfg, params, max_batch=2, n_blocks=64, block_size=8,
+                 prefill_chunk=8)
+    eng.submit(Request(rid=0, tokens=list(prompts[0]), max_new_tokens=16))
+    eng.step()                      # rid 0 prefills (one chunk) ...
+    assert [r.rid for r in eng.running if r is not None] == [0]
+    eng.submit(Request(rid=1, tokens=list(prompts[1]), max_new_tokens=4))
+    grew = 0
+    for _ in range(8):              # rid 1 needs 8 chunk steps to prefill
+        r0 = [r for r in eng.running if r is not None and r.rid == 0][0]
+        before = len(r0.output)
+        eng.step()
+        r1 = [r for r in eng.running if r is not None and r.rid == 1]
+        if r1 and r1[0].state == "prefill" and len(r0.output) > before:
+            grew += 1               # decode progressed DURING rid 1 prefill
+    assert grew >= 4
+    done = eng.run(max_steps=200)
+    assert sorted(r.rid for r in done) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Preemption under block pressure
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prefill_chunk", [None, 4])
+def test_preemption_lifecycle_completes_all(prefill_chunk):
+    """A deliberately undersized block pool forces evictions: every request
+    still completes, with the same greedy tokens as an uncontended run, and
+    no KV blocks leak."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    prompts = _prompts(cfg, (8, 8, 8, 8), seed=1)
+
+    def run(n_blocks):
+        eng = Engine(cfg, params, max_batch=3, n_blocks=n_blocks,
+                     block_size=4, prefill_chunk=prefill_chunk)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=6))
+        done = eng.run(max_steps=500)
+        return eng, {r.rid: r.output for r in done}
+
+    ref_eng, ref = run(n_blocks=64)          # uncontended reference
+    assert ref_eng.sched.n_preemptions == 0
+    eng, out = run(n_blocks=6)               # 4 live footprints don't fit
+    assert len(out) == len(prompts)          # everyone completed
+    assert out == ref                        # with correct tokens
+    assert eng.sched.n_preemptions > 0       # pressure actually evicted
+    assert eng.alloc.n_free == eng.alloc.n_blocks   # zero leaked blocks
+    assert all(r is None for r in eng.running)
+    evicted = [r for r in eng.finished if r.n_preemptions > 0]
+    assert evicted                           # a victim survived to finish
+
+
+def test_preemption_keeps_generated_prefix_and_ttft():
+    """An evicted request resumes with its generated prefix (output tokens
+    are never discarded) and its first_token_time is not reset."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    prompts = _prompts(cfg, (8, 8, 8, 8), seed=1)
+    eng = Engine(cfg, params, max_batch=3, n_blocks=6, block_size=4,
+                 prefill_chunk=4)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=6))
+    seen_outputs = {}
+    witnessed_resume = False
+    while eng.sched.has_work and eng.steps < 500:
+        eng.step()
+        for r in list(eng.waiting) + [x for x in eng.running if x]:
+            if r.n_preemptions and r.output:
+                prev = seen_outputs.get(r.rid)
+                if prev is not None:
+                    assert r.output[:len(prev)] == prev   # prefix kept
+                    witnessed_resume = True
+                seen_outputs[r.rid] = list(r.output)
+    assert witnessed_resume
+    for r in eng.finished:
+        if r.n_preemptions:
+            assert r.first_token_time is not None
+            assert r.first_token_time <= r.finish_time
+
+
+def test_submit_rejects_unschedulable_footprint():
+    """A request whose full footprint can never fit the pool is rejected at
+    submit time instead of deadlocking the queue."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    eng = Engine(cfg, params, max_batch=2, n_blocks=4, block_size=4)
+    with pytest.raises(OutOfBlocks):
+        eng.submit(Request(rid=0, tokens=list(range(1, 17)),
+                           max_new_tokens=8))     # 6 blocks > 4-block pool
+
+
+# ---------------------------------------------------------------------------
+# SSD state carry (the kernel-level contract chunked prefill rests on)
+# ---------------------------------------------------------------------------
+
+
+def test_ssd_chunked_init_state_carry():
+    """Feeding chunk N's final state as chunk N+1's init_state equals one
+    pass over the concatenated sequence."""
+    rng = jax.random.PRNGKey(0)
+    b, t, h, p, g, n = 2, 24, 4, 8, 2, 8
+    x = jax.random.normal(rng, (b, t, h, p), jnp.float32)
+    Bm = jax.random.normal(jax.random.fold_in(rng, 1), (b, t, g, n))
+    Cm = jax.random.normal(jax.random.fold_in(rng, 2), (b, t, g, n))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(rng, 3),
+                                           (b, t, h)))
+    A = -jnp.abs(jax.random.normal(jax.random.fold_in(rng, 4), (h,)))
+    D = jnp.ones((h,))
+    y_ref, s_ref = ssd_chunked_ref(x, Bm, Cm, dt, A, D, chunk=8)
+    ys, state = [], None
+    for a in range(0, t, 8):
+        y, state = ssd_chunked_ref(x[:, a:a + 8], Bm[:, a:a + 8],
+                                   Cm[:, a:a + 8], dt[:, a:a + 8], A, D,
+                                   chunk=8, init_state=state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_apply_chunk_continue_bitwise():
+    """blocks.ssm_apply with a carried cache over aligned chunks is
+    bitwise-identical to the one-pass prefill path, including a ragged
+    dt-masked tail."""
+    cfg = get_config("mamba2-130m", reduced=True)
+    params = _params(cfg)
+    pp = jax.tree_util.tree_map(lambda a: a[0],
+                                params["blocks"]["pos0"])["mix"]
+    x = jax.random.normal(jax.random.PRNGKey(42), (1, 40, cfg.d_model),
+                          jnp.bfloat16)
+    y_whole, st_whole = B.ssm_apply(x, pp, cfg, None, return_state=True)
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    st = {"conv": jnp.zeros((1, cfg.ssm_conv - 1, conv_ch), jnp.bfloat16),
+          "state": jnp.zeros((1, cfg.n_ssm_heads, cfg.ssm_headdim,
+                              cfg.ssm_state), jnp.float32)}
+    ch, ys = cfg.ssm_chunk, []
+    for a in range(0, 40, ch):
+        nv = min(ch, 40 - a)
+        xc = x[:, a:a + ch]
+        if xc.shape[1] < ch:    # ragged tail: pad with garbage, mask via dt
+            xc = jnp.pad(xc, ((0, 0), (0, ch - xc.shape[1]), (0, 0)),
+                         constant_values=0.5)
+        yc, st = B.ssm_apply(xc, pp, cfg, None, cache=st,
+                             n_valid=jnp.asarray(nv, jnp.int32))
+        ys.append(yc[:, :nv])
+    y_chunk = jnp.concatenate(ys, axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(y_whole, np.float32), np.asarray(y_chunk, np.float32))
+    np.testing.assert_array_equal(np.asarray(st_whole["state"]),
+                                  np.asarray(st["state"]))
+    np.testing.assert_array_equal(
+        np.asarray(st_whole["conv"], np.float32),
+        np.asarray(st["conv"], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Latency accounting
+# ---------------------------------------------------------------------------
+
+
+def test_stats_latency_fields():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    eng = Engine(cfg, params, max_batch=2, n_blocks=32, block_size=8,
+                 prefill_chunk=8)
+    for rid, p in enumerate(_prompts(cfg, (12, 20, 9))):
+        eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=6))
+    done = eng.run(max_steps=300)
+    assert len(done) == 3
+    st = eng.stats()
+    for k in ("p50_ttft_s", "p95_ttft_s", "p99_ttft_s", "p50_tpot_s",
+              "p95_tpot_s", "p99_tpot_s", "mean_queue_s", "preemptions",
+              "prefill_time_s"):
+        assert k in st
+    assert 0.0 <= st["p50_ttft_s"] <= st["p99_ttft_s"]
+    assert 0.0 <= st["p50_tpot_s"] <= st["p99_tpot_s"]
+    assert st["p99_ttft_s"] <= st["p99_latency_s"]
+    for r in done:
+        assert r.queue_time() is not None and r.queue_time() >= 0
+        assert r.ttft() is not None and r.ttft() >= r.queue_time()
+        assert r.tpot() is not None and r.tpot() > 0
+    # reset keeps compiled steps but clears history
+    eng.reset_stats()
+    assert eng.stats()["requests"] == 0 and eng.decode_tokens == 0
