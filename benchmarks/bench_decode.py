@@ -1,4 +1,5 @@
-"""Decode micro-benchmark: legacy per-layer loop vs fused jit step.
+"""Decode micro-benchmark: legacy per-layer loop vs fused jit step, plus
+speculative-decoding scenarios.
 
 Measures steady-state decode throughput (tok/s over the decode phase only)
 at batch sizes 4 and 8 on the same burst workload, and writes
@@ -7,20 +8,44 @@ tracked across PRs. Both paths get an unmeasured warmup burst first, so
 jit compilation (fused) and eager op-cache compilation (legacy) are both
 excluded from the timed window. CSV rows go through benchmarks/common.emit
 like every other suite.
+
+Speculative scenarios (batch 1 — speculation is a *low-batch latency*
+knob: it spends spare FLOPs to cut weight/KV reads per token, so its win
+shrinks as batching fills the same per-step forward; the spec_off row is
+the identical-workload baseline):
+
+  * ``spec_ngram_bs1`` — n-gram/prompt-lookup proposer on a repetitive
+    trace (a repeated 8-token pattern prompt; the greedy continuation of
+    the smoke model is itself partially periodic, which is exactly the
+    regime prompt lookup exploits). Acceptance rate is recorded; the
+    speedup row is the PR's headline number.
+  * ``spec_draft_self_bs1`` — draft-model proposer drafting with the
+    *target's own* params ("qwen-smoke" self-draft): acceptance is 1.0 by
+    construction, isolating the verify-path mechanics. Honesty note: at
+    smoke scale the draft loop itself runs eagerly (one prefill + K-1
+    decode dispatches per round), so wall-clock is dominated by the
+    proposer, not the verify forward — the recorded value tracks that
+    overhead until the draft gets its own jitted cache (ROADMAP).
 """
 import json
 import os
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config
-from repro.data.pipeline import serving_requests
+from repro.data.pipeline import repetitive_requests, serving_requests
 from repro.models.lm import LM
 from repro.serving.engine import Engine, Request
+from repro.serving.speculate import DraftModelProposer
 
 PROMPT_LEN = 24
 MAX_NEW = 8
+SPEC_PROMPT_LEN = 24
+SPEC_MAX_NEW = 128
+SPEC_REQUESTS = 6        # 1 unmeasured warmup + 5 measured
+SPEC_PATTERN_SEED = 2
 OUT_PATH = os.environ.get("BENCH_DECODE_JSON", "BENCH_decode.json")
 
 
@@ -52,12 +77,54 @@ def _measure(cfg, params, *, max_batch: int, mode: str) -> dict:
     }
 
 
-def run():
+def _measure_spec(cfg, params, *, speculate, spec_depth: int,
+                  max_new: int, n_requests: int = 3) -> dict:
+    from collections import Counter
+
+    eng = Engine(cfg, params, max_batch=1, n_blocks=512, block_size=8,
+                 speculate=speculate, spec_depth=spec_depth)
+    eng.warmup(SPEC_PROMPT_LEN + max_new)
+    prompts = repetitive_requests(n_requests, cfg.vocab_size,
+                                  prompt_len=SPEC_PROMPT_LEN,
+                                  seed=SPEC_PATTERN_SEED)
+    # warmup request: compiles every (window, table) bucket the trace uses
+    eng.submit(Request(rid=0, tokens=list(prompts[0]),
+                       max_new_tokens=max_new))
+    eng.run(max_steps=8000)
+    tok0, time0 = eng.decode_tokens, eng.decode_time
+    sp0, sa0 = ((eng.spec.proposed_tokens, eng.spec.accepted_tokens)
+                if eng.spec else (0, 0))
+    hist0 = Counter(eng.spec.depth_hist) if eng.spec else Counter()
+    for i, p in enumerate(prompts[1:], start=1):
+        eng.submit(Request(rid=i, tokens=list(p), max_new_tokens=max_new))
+    eng.run(max_steps=8000)
+    toks = eng.decode_tokens - tok0
+    secs = eng.decode_time - time0
+    out = {
+        "decode_tok_s": round(toks / max(secs, 1e-9), 2),
+        "decode_tokens": int(toks),
+        "decode_time_s": round(secs, 4),
+    }
+    if eng.spec is not None:
+        prop = eng.spec.proposed_tokens - sp0
+        acc = eng.spec.accepted_tokens - sa0
+        out["proposed_tokens"] = int(prop)
+        out["accepted_tokens"] = int(acc)
+        out["accept_rate"] = round(acc / max(prop, 1), 4)
+        # measured burst only, consistent with the counters above
+        hist = eng.spec.depth_hist - hist0
+        out["spec_depth_hist"] = {str(k): v
+                                  for k, v in sorted(hist.items())}
+    return out
+
+
+def run(spec_depth: int = 8):
     cfg = get_config("qwen1.5-0.5b", reduced=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
     results = {"arch": cfg.name, "backend": jax.default_backend(),
-               "prompt_len": PROMPT_LEN, "max_new": MAX_NEW, "runs": {}}
+               "prompt_len": PROMPT_LEN, "max_new": MAX_NEW,
+               "spec_depth": spec_depth, "runs": {}}
     for bs in (4, 8):
         for mode in ("legacy", "fused"):
             r = _measure(cfg, params, max_batch=bs, mode=mode)
@@ -71,6 +138,29 @@ def run():
                                                    2)
         emit(f"bench_decode/speedup_bs{bs}", 0,
              f"{results['runs'][f'speedup_bs{bs}']}x_fused_over_legacy")
+    # --- speculative scenarios (see module docstring) ---
+    scenarios = {
+        "spec_off_bs1": dict(speculate=None, max_new=SPEC_MAX_NEW,
+                             n_requests=SPEC_REQUESTS),
+        "spec_ngram_bs1": dict(speculate="ngram", max_new=SPEC_MAX_NEW,
+                               n_requests=SPEC_REQUESTS),
+        "spec_draft_self_bs1": dict(
+            speculate=DraftModelProposer(cfg, params), max_new=16,
+            n_requests=2),
+    }
+    for name, kw in scenarios.items():
+        r = _measure_spec(cfg, params, spec_depth=spec_depth, **kw)
+        results["runs"][name] = r
+        emit(f"bench_decode/{name}", r["decode_time_s"] * 1e6,
+             f"decode_tok_s={r['decode_tok_s']}"
+             + (f";accept_rate={r['accept_rate']}"
+                if "accept_rate" in r else ""))
+    base = results["runs"]["spec_off_bs1"]["decode_tok_s"]
+    ngram = results["runs"]["spec_ngram_bs1"]["decode_tok_s"]
+    results["runs"]["speedup_spec_ngram_bs1"] = round(
+        ngram / max(base, 1e-9), 2)
+    emit("bench_decode/speedup_spec_ngram_bs1", 0,
+         f"{results['runs']['speedup_spec_ngram_bs1']}x_ngram_over_plain")
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
 

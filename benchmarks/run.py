@@ -32,14 +32,18 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--spec-depth", type=int, default=8,
+                    help="max speculation depth K for bench_decode's "
+                         "speculative scenarios")
     args = ap.parse_args()
+    suite_kw = {"bench_decode": {"spec_depth": args.spec_depth}}
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in SUITES.items():
         if args.only and args.only != name:
             continue
         try:
-            fn()
+            fn(**suite_kw.get(name, {}))
         except Exception:
             failures += 1
             print(f"{name}/ERROR,0,{traceback.format_exc(limit=1)!r}",

@@ -10,6 +10,26 @@ prefix and still finish:
     PYTHONPATH=src python examples/serve_continuous_batching.py
     PYTHONPATH=src python examples/serve_continuous_batching.py \
         --prefill-chunk 8 --n-blocks 12 --mixed
+
+Speculative decoding (``serving/speculate.py``): a proposer guesses up to
+``--spec-depth`` continuation tokens per request and one jit-compiled
+verify forward scores every request's window through the paged cache;
+greedy output stays token-identical to non-speculative decode (proposals
+are accepted only while they match the model's own argmax, and rollback
+is exact — rejected KV is never stored, SSM state rewinds by snapshot).
+
+    # n-gram / prompt-lookup: no extra weights, pays off on repetitive
+    # context (the --repetitive trace makes acceptance visible)
+    PYTHONPATH=src python examples/serve_continuous_batching.py \
+        --speculate ngram --spec-depth 8 --repetitive --max-new 64
+
+    # draft model: any config sharing the tokenizer, e.g. self-drafting
+    # the smoke target (acceptance 1.0 upper bound)
+    PYTHONPATH=src python examples/serve_continuous_batching.py \
+        --speculate draft:qwen1.5-0.5b --max-new 32
+
+The summary line reports the acceptance rate and the verify-round depth
+histogram alongside the latency percentiles.
 """
 import argparse
 
@@ -17,9 +37,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.data.pipeline import serving_requests
+from repro.data.pipeline import repetitive_requests, serving_requests
 from repro.models.lm import LM
 from repro.serving.engine import Engine, Request
+from repro.serving.speculate import DraftModelProposer
 
 
 def main():
@@ -34,18 +55,37 @@ def main():
                     help="chunked prefill size (0 = whole-prompt)")
     ap.add_argument("--mixed", action="store_true",
                     help="mixed prompt lengths (8 / 2x / 0.5x prompt-len)")
+    ap.add_argument("--speculate", default="off",
+                    help="off | ngram | draft:<config>")
+    ap.add_argument("--spec-depth", type=int, default=4)
+    ap.add_argument("--repetitive", action="store_true",
+                    help="repeated-pattern prompts (the n-gram proposer's "
+                         "home turf)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    speculate = args.speculate
+    if speculate.startswith("draft:") and \
+            speculate.split(":", 1)[1].removesuffix("-smoke") == args.arch:
+        # drafting with the target's own arch: share its params too
+        # (self-draft, the acceptance-1.0 upper bound); a different config
+        # would get fresh random draft weights — mechanics demo only
+        speculate = DraftModelProposer(cfg, params)
     eng = Engine(cfg, params, max_batch=4, n_blocks=args.n_blocks,
                  block_size=8, kv_quant="int8" if args.int8_kv else "none",
-                 prefill_chunk=args.prefill_chunk or None)
+                 prefill_chunk=args.prefill_chunk or None,
+                 speculate=speculate, spec_depth=args.spec_depth)
     lens = ((8, 2 * args.prompt_len, args.prompt_len // 2)
             if args.mixed else None)
-    prompts = serving_requests(args.requests, cfg.vocab_size,
-                               prompt_len=args.prompt_len, prompt_lens=lens)
+    if args.repetitive:
+        prompts = repetitive_requests(args.requests, cfg.vocab_size,
+                                      prompt_len=args.prompt_len, seed=2)
+    else:
+        prompts = serving_requests(args.requests, cfg.vocab_size,
+                                   prompt_len=args.prompt_len,
+                                   prompt_lens=lens)
     for i, p in enumerate(prompts):   # burst arrival, as in the paper
         eng.submit(Request(rid=i, tokens=p, max_new_tokens=args.max_new))
     done = eng.run()
@@ -64,6 +104,11 @@ def main():
           f"{st['p95_tpot_s'] * 1e3:.2f}ms  "
           f"preemptions {st['preemptions']}  "
           f"kv_util peak-free {st['kv_utilization']:.2f}")
+    if "accept_rate" in st:
+        print(f"speculation: accept_rate {st['accept_rate']:.2f}  "
+              f"({st['spec_accepted_tokens']}/{st['spec_proposed_tokens']} "
+              f"tokens over {st['spec_rounds']} rounds)  "
+              f"depth histogram {st['spec_depth_hist']}")
     assert len(done) == args.requests
     assert eng.alloc.n_free == eng.alloc.n_blocks, "leaked KV blocks"
 

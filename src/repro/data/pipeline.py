@@ -130,6 +130,20 @@ def serving_requests(n: int, vocab: int, prompt_len: int = SERVING_PROMPT_LEN,
     return out
 
 
+def repetitive_requests(n: int, vocab: int,
+                        prompt_len: int = SERVING_PROMPT_LEN,
+                        pattern_len: int = 8, seed: int = 0):
+    """Repeated-pattern prompts: one random ``pattern_len``-token pattern
+    tiled to ``prompt_len``, shared by all ``n`` requests. The serving
+    trace for speculative decoding's n-gram/prompt-lookup proposer —
+    benchmarks/bench_decode's spec scenarios, the serving example's
+    ``--repetitive`` flag, and the spec parity tests all draw from here."""
+    rng = np.random.default_rng(seed)
+    pat = rng.integers(1, vocab, size=pattern_len, dtype=np.int32).tolist()
+    reps = -(-prompt_len // pattern_len)
+    return [(pat * reps)[:prompt_len] for _ in range(n)]
+
+
 def poisson_arrivals(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:
     """Cumulative arrival offsets (seconds from t0) of a Poisson process at
     ``rate_rps`` requests/second — the open-loop workload used by

@@ -328,3 +328,96 @@ def paged_flash_decode(q, k_pages, v_pages, table, lengths, *,
         q, k_pages, v_pages, table, lengths, k_scale=k_scale,
         v_scale=v_scale, impl=impl, interpret=interpret, sm_scale=sm_scale)
     return (o / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+# ==========================================================================
+# Multi-token paged reads: T query rows against one paged prefix. The
+# speculative-decoding verify step scores K+1 proposed tokens in ONE
+# forward — each page tile is gathered once and dotted against every
+# query row, so the HBM traffic per accepted token shrinks by the
+# acceptance count (the whole point of speculation on a bandwidth-bound
+# decode). XLA scan implementation; a Pallas multi-query variant of
+# _paged_kernel is the TPU follow-up (ROADMAP).
+# ==========================================================================
+
+
+def paged_flash_prefix_partial(q, k_pages, v_pages, table, lengths, *,
+                               k_scale=None, v_scale=None,
+                               sm_scale: float = None):
+    """Attention partials of a T-token chunk against ONE layer's paged KV.
+
+    q: (B, T, H, D); k_pages/v_pages: (n_blocks, block, K, hd) storage;
+    table: (B, max_blocks) int32; lengths: (B,) valid prefix lengths —
+    every row of the chunk attends the same [0, lengths[b]) prefix (the
+    chunk's own tokens are NOT in the pages; merge their causal
+    self-attention via :func:`causal_self_partial` + :func:`merge_partials`).
+    Returns unnormalized (o (B,T,H,D) f32, m (B,T,H,1), l (B,T,H,1)).
+
+    Same online-softmax block scan as the T=1 XLA fallback
+    (:func:`_paged_partial_xla`): one (B, block, K, hd) page tile is
+    gathered per step and reused by all T query rows.
+    """
+    b, tq, h, d = q.shape
+    nb, bs, n_kv, _ = k_pages.shape
+    g = h // n_kv
+    mb = table.shape[1]
+    scale = sm_scale or 1.0 / np.sqrt(d)
+    qg = q.reshape(b, tq, n_kv, g, d).astype(jnp.float32) * scale
+
+    def step(carry, j):
+        m, l, acc = carry
+        blk = table[:, j]                                   # (B,)
+        k = k_pages[blk].astype(jnp.float32)                # (B, bs, K, hd)
+        v = v_pages[blk].astype(jnp.float32)
+        if k_scale is not None:
+            k = k * k_scale[blk]
+            v = v * v_scale[blk]
+        s = jnp.einsum("btkgd,bskd->btkgs", qg, k)          # (B,T,K,G,bs)
+        kpos = j * bs + jnp.arange(bs)
+        valid = (kpos[None, :] < lengths[:, None])[:, None, None, None, :]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        # mask p explicitly: a row with no valid prefix position yet would
+        # otherwise give exp(NEG_INF - NEG_INF) = 1 weight to garbage
+        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, -1)
+        acc = acc * corr[..., None] + jnp.einsum("btkgs,bskd->btkgd", p, v)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, tq, n_kv, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, tq, n_kv, g), jnp.float32),
+            jnp.zeros((b, tq, n_kv, g, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(mb))
+    return (acc.reshape(b, tq, h, d), m.reshape(b, tq, h, 1),
+            l.reshape(b, tq, h, 1))
+
+
+def causal_self_partial(q, k, v, *, sm_scale: float = None):
+    """Unnormalized causal self-attention partials of a fresh T-token chunk.
+
+    Row i attends columns j <= i (rows and columns share positions — the
+    chunk sits after the paged prefix, so the cross terms live in
+    :func:`paged_flash_prefix_partial`). q (B,T,H,D), k/v (B,T,K,hd)
+    already storage-roundtripped; returns (o f32, m, l) shaped like
+    :func:`paged_flash_prefix_partial` for one :func:`merge_partials` call.
+    For T=1 this degenerates to the fused decode step's analytic fresh-token
+    partial: m = q·k·scale, l = 1, o = v.
+    """
+    b, t, h, d = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    scale = sm_scale or 1.0 / np.sqrt(d)
+    qg = q.reshape(b, t, n_kv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bikgd,bjkd->bikgj", qg, kf) * scale     # (B,T,K,G,T)
+    mask = (jnp.arange(t)[:, None] >= jnp.arange(t)[None, :])
+    mask = mask[None, :, None, None, :]                     # (1,T,1,1,T)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, -1, keepdims=True)                       # diag always live
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, -1, keepdims=True)
+    o = jnp.einsum("bikgj,bjkd->bikgd", p, vf)
+    return (o.reshape(b, t, h, d), m.reshape(b, t, h, 1),
+            l.reshape(b, t, h, 1))

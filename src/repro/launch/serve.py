@@ -3,6 +3,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 16 --int8-kv          # fused jit decode (default)
     PYTHONPATH=src python -m repro.launch.serve --legacy   # per-layer loop
+    PYTHONPATH=src python -m repro.launch.serve \
+        --speculate ngram --spec-depth 8     # prompt-lookup speculation
+    PYTHONPATH=src python -m repro.launch.serve \
+        --speculate draft:qwen1.5-0.5b       # draft-model speculation
 """
 import argparse
 
@@ -30,6 +34,13 @@ def main():
     ap.add_argument("--mixed-lens", default=None,
                     help="comma-separated prompt lengths cycled over the "
                          "burst, e.g. 16,64,24 (overrides --prompt-len)")
+    ap.add_argument("--speculate", default="off",
+                    help="speculative decoding proposer: off | ngram | "
+                         "draft:<config> (draft shares the tokenizer; "
+                         "smoke targets get smoke drafts)")
+    ap.add_argument("--spec-depth", type=int, default=4,
+                    help="max proposed tokens per verify round (adaptive "
+                         "back-off may use less)")
     grp = ap.add_mutually_exclusive_group()
     grp.add_argument("--fused", dest="mode", action="store_const",
                      const="fused", help="jit-compiled decode step (default)")
@@ -47,7 +58,8 @@ def main():
                  n_blocks=args.n_blocks, block_size=args.block_size,
                  kv_quant="int8" if args.int8_kv else "none",
                  mode=args.mode,
-                 prefill_chunk=args.prefill_chunk or None)
+                 prefill_chunk=args.prefill_chunk or None,
+                 speculate=args.speculate, spec_depth=args.spec_depth)
     eng.warmup(max(lens or [args.prompt_len]) + args.max_new)
     for i, p in enumerate(serving_requests(args.requests, cfg.vocab_size,
                                            prompt_len=args.prompt_len,

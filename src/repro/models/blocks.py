@@ -21,7 +21,7 @@ import numpy as np
 from repro.core.config import ArchConfig
 from repro.models import layers as L
 from repro.models.params import spec
-from repro.models.ssd import ssd_chunked, ssd_decode_step
+from repro.models.ssd import ssd_chunked, ssd_decode_scan, ssd_decode_step
 
 
 def _constrain(ctx, x, kind):
@@ -438,6 +438,59 @@ def ssm_apply(x, p, cfg: ArchConfig, ctx, *, cache: Optional[Dict] = None,
     y = _constrain(ctx, y, "act_ssm")
     out = L.dense(y, p["out_proj"])
     return x + _constrain(ctx, out, "hidden"), new_cache
+
+
+def ssm_apply_spec(x, p, cfg: ArchConfig, ctx, *, cache: Dict,
+                   valid) -> Tuple[jax.Array, Dict]:
+    """Speculative-verify SSM block: T tokens through the *decode-path*
+    math, with every intermediate (conv, state) snapshot emitted.
+
+    Semantically this is T sequential ``ssm_apply`` decode calls (per-token
+    conv window einsum + :func:`ssd_decode_scan` recurrence — NOT the
+    grouping-sensitive ``ssd_chunked`` form), which is what makes spec-on
+    greedy decode token-exact versus spec-off: the verify forward scores a
+    proposed window with bit-identical state updates to the fused decode
+    step that would otherwise consume it one token at a time. Position-
+    independent projections (in_proj, conv einsum inputs, gating, out_proj)
+    still run once for the whole window, so weights are read once per layer.
+
+    ``valid`` (B, T) bool masks per-row right-padding (and rows that are
+    not speculating at all): invalid positions keep the prior (conv,
+    state) and their outputs are garbage. Returns
+    ``(x_out, {"conv": (T,B,W-1,C), "state": (T,B,H,P,N)})`` — the cache
+    after each token; the caller rolls back to the accepted prefix by
+    indexing the leading axis.
+    """
+    di, g, ns, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
+    b, t = x.shape[0], x.shape[1]
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    zxbcdt = L.dense(h, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * g * ns]
+    dt = zxbcdt[..., di + di + 2 * g * ns:]
+
+    # per-token causal conv through the carried window (decode semantics)
+    def conv_step(cs, inp):
+        xt, vt = inp                                        # (B, C), (B,)
+        buf = jnp.concatenate([cs, xt[:, None]], axis=1)    # (B, W, C)
+        y = jnp.einsum("bwc,wc->bc", buf, p["conv_w"]) + p["conv_b"][None]
+        ncs = jnp.where(vt[:, None, None], buf[:, 1:], cs)
+        return ncs, (y, ncs)
+
+    _, (ys, conv_states) = jax.lax.scan(
+        conv_step, cache["conv"], (xbc.transpose(1, 0, 2), valid.T))
+    xbc = L.silu(ys.transpose(1, 0, 2))                     # (B, T, C)
+    xs = xbc[..., :di].reshape(b, t, nh, cfg.ssm_headdim)
+    Bs = xbc[..., di: di + g * ns].reshape(b, t, g, ns)
+    Cs = xbc[..., di + g * ns:].reshape(b, t, g, ns)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    y, ssd_states = ssd_decode_scan(xs, Bs, Cs, dt, a, p["d_skip"],
+                                    cache["state"], valid=valid)
+    y = y.reshape(b, t, di)
+    y = L.rmsnorm(y * L.silu(z), p["norm"], cfg.norm_eps)
+    out = L.dense(y, p["out_proj"])
+    return x + out, {"conv": conv_states, "state": ssd_states}
 
 
 def ssm_init_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Dict:

@@ -120,6 +120,36 @@ def ssd_chunked(x, B, C, dt, A, D, chunk: int = 256, impl: str = "ref",
                            init_state=init_state)
 
 
+def ssd_decode_scan(x, B, C, dt, A, D, state, valid=None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """T sequential :func:`ssd_decode_step` recurrences in one call.
+
+    x (B,T,H,P), B/C (B,T,G,N), dt (B,T,H) f32, state (B,H,P,N) f32.
+    Returns (y (B,T,H,P), states (T,B,H,P,N)) — the state *after* every
+    token, so a speculative verifier can roll a partially-accepted window
+    back to any prefix without recomputation. ``valid`` (B, T) bool masks
+    per-row right-padding: an invalid position keeps the prior state (its
+    y is garbage and must be discarded by the caller).
+
+    Unlike :func:`ssd_chunked`, which groups the recurrence into
+    MXU-friendly blocks (grouping-sensitive in low precision), this is
+    bitwise-identical to T separate decode steps — the property the
+    spec-on == spec-off greedy-parity contract rests on."""
+    if valid is None:
+        valid = jnp.ones(x.shape[:2], bool)
+
+    def step(s, inp):
+        xt, Bt, Ct, dtt, vt = inp
+        y, s_new = ssd_decode_step(xt, Bt, Ct, dtt, A, D, s)
+        s_new = jnp.where(vt[:, None, None, None], s_new, s)
+        return s_new, (y, s_new)
+
+    xs = (x.transpose(1, 0, 2, 3), B.transpose(1, 0, 2, 3),
+          C.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2), valid.T)
+    _, (ys, states) = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), states
+
+
 def ssd_decode_step(x, B, C, dt, A, D, state
                     ) -> Tuple[jax.Array, jax.Array]:
     """Single-token recurrence. x (B,H,P), B/C (B,G,N), dt (B,H),

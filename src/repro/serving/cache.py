@@ -200,6 +200,35 @@ def append_slots(table: jax.Array, positions: jax.Array, block_size: int,
     return blk, positions % block_size
 
 
+def truncate_slots(state: Dict[str, jax.Array], block_ids,
+                   keep_tokens: int, block_size: int) -> Dict[str, jax.Array]:
+    """Rewind ONE sequence's pages to a shorter valid prefix: every token
+    slot at position >= ``keep_tokens`` within the sequence's blocks is
+    reset to the never-written state (k/v zeroed, int8 scales restored to
+    1.0) across all layers.
+
+    Speculative decoding's exact-rollback contract rests on this: a
+    rejected proposal must leave the cache bit-identical to a run that
+    never speculated. The verify step already routes rejected appends to
+    the null-write sentinel, so its pages never need scrubbing; this is
+    the host-side API for the remaining rewind paths — recompute-style
+    preemption scrubs the victim's pages before the allocator reuses them
+    (``keep_tokens=0``), and tests use it as the rollback oracle."""
+    ids = np.asarray(block_ids, np.int32)
+    total = len(ids) * block_size
+    if keep_tokens >= total:
+        return state
+    pos = np.arange(keep_tokens, total)
+    blk = jnp.asarray(ids[pos // block_size])
+    off = jnp.asarray(pos % block_size, np.int32)
+    out = dict(state)
+    for key in state:
+        fill = 1.0 if key.endswith("_scale") else 0.0
+        out[key] = state[key].at[:, blk, off].set(
+            jnp.asarray(fill, state[key].dtype))
+    return out
+
+
 def gather(state: Dict[str, jax.Array], layer: int, block_table: jax.Array,
            dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
     """Dense per-batch view: block_table (B, max_blocks) int32 ->
@@ -266,6 +295,10 @@ class PagedKVCache:
                     block_ids: jax.Array, offsets: jax.Array) -> None:
         self.state = write_token(self.state, self.cfg.kv_quant,
                                  layer_kv, block_ids, offsets)
+
+    def truncate_slots(self, block_ids, keep_tokens: int) -> None:
+        self.state = truncate_slots(self.state, block_ids, keep_tokens,
+                                    self.cfg.block_size)
 
     def gather(self, layer: int, block_table: jax.Array,
                dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:

@@ -42,8 +42,29 @@ jit cache holds at most one executable per (batch, table-bucket) pair;
 **Preemption.** Block tables grow lazily (scheduler.ensure_blocks); when the
 pool runs dry the youngest active request is evicted and re-queued with its
 generated prefix, then re-prefilled on re-admission (recompute preemption).
-``Engine.stats()`` surfaces the resulting latency distributions: TTFT, TPOT
-and queue-time percentiles plus the preemption count.
+A victim's pages are scrubbed (cache.truncate_slots) before release, so a
+preempted-then-resumed schedule leaves storage bit-identical to an
+uncontended one. ``Engine.stats()`` surfaces the resulting latency
+distributions: TTFT, TPOT and queue-time percentiles plus the preemption
+count.
+
+**Speculative decoding** (``speculate="ngram" | "draft:<config>"`` or any
+proposer object; serving/speculate.py). Decode re-reads every weight per
+token; speculation amortizes that read: a proposer guesses up to
+``spec_depth`` continuation tokens per running request and ONE jit-compiled
+*verify* step scores every request's window in a single multi-token forward
+— the fused step's layer body with the attention read generalized to T
+query rows (paged prefix partial + fresh-window causal partial, LSE-merged
+via kernels/flash_decode.merge_partials). Proposals are accepted while they
+equal the verify forward's own argmax, so greedy output is token-identical
+to spec-off decode, and every row emits >= 1 token (the model's own bonus
+token at the first disagreement). Rollback on rejection is exact: rejected
+KV appends route to the null-write sentinel and SSM layers run a per-token
+scan (blocks.ssm_apply_spec) emitting every intermediate (conv, state)
+snapshot, from which the accepted prefix's state is selected. Per-request
+speculation depth adapts to acceptance (Speculator back-off), and
+``stats()`` reports accept_rate, proposed/accepted counters and the
+verify-round depth histogram.
 
 **Legacy decode** (``mode="legacy"``) keeps the paper-baseline per-layer
 Python hot loop: per-layer eager dispatch, dense block gather, naive
@@ -71,6 +92,7 @@ from repro.models.lm import LM
 from repro.serving import cache as C
 from repro.serving.cache import PagedKVCache, PagedKVConfig
 from repro.serving.scheduler import RUNNING, Request, Scheduler
+from repro.serving.speculate import build_speculator
 from repro.kernels import flash_decode as fd
 
 __all__ = ["Engine", "Request"]
@@ -88,9 +110,14 @@ class Engine:
                  n_blocks: int = 64, block_size: int = 16,
                  kv_quant: str = "none", greedy: bool = True,
                  mode: str = "fused", prefill_chunk: Optional[int] = None,
+                 speculate=None, spec_depth: int = 4,
                  clock=time.monotonic):
         if mode not in ("fused", "legacy"):
             raise ValueError(f"mode must be 'fused' or 'legacy', got {mode!r}")
+        self.spec = build_speculator(speculate, cfg, depth=spec_depth)
+        if self.spec is not None and mode != "fused":
+            raise ValueError("speculative decoding requires mode='fused' "
+                             "(the verify step shares the fused layer body)")
         self.cfg = cfg
         self.model = LM(cfg)
         self.params = params
@@ -130,6 +157,12 @@ class Engine:
                                    donate_argnums=(1, 2))
         self._chunk_step = jax.jit(self._chunk_step_impl,
                                    donate_argnums=(1, 2))
+        self._verify_step = jax.jit(self._verify_step_impl,
+                                    donate_argnums=(1, 2))
+        # recompute-style preemption scrubs the victim's pages before the
+        # allocator reuses them, so a preempted-then-resumed schedule leaves
+        # the KV storage bit-identical to an uncontended one
+        self.sched.on_preempt = self._scrub_preempted
         # whole-prompt prefill is jit-compiled too (one executable per
         # (group, length) shape): besides the speedup, compiled-vs-eager
         # bf16 fusion differences would otherwise make whole-prompt and
@@ -237,6 +270,79 @@ class Engine:
             self.prefill_tokens += t
 
     # ------------------------------------------------------------------
+    # Shared layer body. The fused decode step, the chunked-prefill step
+    # and the speculative verify step scan the SAME body over the layer
+    # stack; each caller parameterizes only
+    #   * the attention read path (``attn_read``): paged flash partial +
+    #     fresh-token partial + LSE merge for fused decode and verify,
+    #     dense page view + naive causal for the chunk step, and
+    #   * the SSM cache plumbing (``ssm_step``): T=1 decode with an
+    #     active-slot mask, T>1 chunk-continue, or the per-token verify
+    #     scan that emits every intermediate state for exact rollback.
+    # Everything else — the encode-as-stored KV contract (attend to the
+    # fresh tokens exactly as the cache will store them, reuse the encoded
+    # form for the post-scan page-out), the scan ys collection, and the
+    # moe/ffn dispatch — is written once here. Divergence used to be
+    # caught only by the parity tests; now it cannot happen.
+    # ------------------------------------------------------------------
+
+    def _make_stack_body(self, *, positions, attn_read, ssm_step):
+        cfg, model = self.cfg, self.model
+        quant = self.kv_cfg.kv_quant
+
+        def body(x, xs):
+            lp, kv_slice, ssm_slice = xs
+            new_kv: Dict[str, list] = {}
+            new_ssm: Dict[str, Any] = {}
+            r = 0
+            for pos in range(model.period):
+                pp = lp[f"pos{pos}"]
+                if model.kinds[pos] == "attn":
+                    h = L.rmsnorm(x, pp["mix"]["ln"], cfg.norm_eps)
+                    q, k, v = B._qkv(h, pp["mix"], cfg, None,
+                                     positions=positions)   # (B, T, H, hd)
+                    kq, ks = C.quant_encode(k, quant)
+                    vq, vs = C.quant_encode(v, quant)
+                    out = attn_read(q, (kq, ks, vq, vs), k.dtype,
+                                    kv_slice, r)
+                    y = L.dense(out, pp["mix"]["wo"], n_in=2)
+                    x = x + y
+                    new_kv.setdefault("k", []).append(kq)
+                    new_kv.setdefault("v", []).append(vq)
+                    if ks is not None:
+                        new_kv.setdefault("k_scale", []).append(ks)
+                        new_kv.setdefault("v_scale", []).append(vs)
+                    r += 1
+                else:
+                    x, nc = ssm_step(x, pp["mix"], ssm_slice[f"pos{pos}"])
+                    new_ssm[f"pos{pos}"] = nc
+                if model.fkinds[pos] == "moe":
+                    x, _ = B.moe_apply(x, pp["ffn"], cfg, None,
+                                       capacity_mult=4.0)
+                else:
+                    x = B.ffn_apply(x, pp["ffn"], cfg, None)
+            kv_ys = {kk: jnp.stack(vv) for kk, vv in new_kv.items()}
+            return x, (kv_ys, new_ssm)
+
+        return body
+
+    def _kv_xs(self, kv_state):
+        """(L, ...) storage -> (n_periods, attn-per-period, ...) scan xs."""
+        n_attn_pp = len(self._attn_pos)
+        if not n_attn_pp:
+            return {}
+        return {kk: vv.reshape((self.model.n_periods, n_attn_pp)
+                               + vv.shape[1:])
+                for kk, vv in kv_state.items()}
+
+    def _collect_enc(self, kv_ys):
+        """Scan ys (n_periods, R, B, T, ...) -> storage-ready
+        (L, B*T, ...) for one all-layer write_token_encoded scatter."""
+        n_l = self.model.n_periods * len(self._attn_pos)
+        return {kk: vv.reshape((n_l, -1) + vv.shape[4:])
+                for kk, vv in kv_ys.items()}
+
+    # ------------------------------------------------------------------
     # Chunked prefill: one jit-compiled step pages `prefill_chunk` context
     # tokens of ONE sequence through its block table. Attention runs
     # against the sequence's own pages (dense per-layer view + the fresh
@@ -249,18 +355,11 @@ class Engine:
 
     def _chunk_step_impl(self, params, kv_state, ssm_states, tokens, ctx,
                          n_valid, table, slot):
-        # NOTE: the layer-body structure (encode-as-stored KV contract, scan
-        # ys collection, moe/ffn dispatch) mirrors _fused_step_impl and the
-        # two must evolve together — only the attention read path (dense
-        # page view + naive causal here, paged flash partial + analytic
-        # merge there) and the SSM cache plumbing differ. Divergence is
-        # caught by the chunked-vs-whole and fused-vs-legacy parity tests.
         cn = int(tokens.shape[1])
         mbb = int(table.shape[1])
         # runs only when jit (re)traces: bounded-compile accounting
         self.trace_counts[("chunk", cn, mbb)] += 1
         cfg, model = self.cfg, self.model
-        period, n_periods = model.period, model.n_periods
         bs = self.block_size
         quant = self.kv_cfg.kv_quant
         n_attn_pp = len(self._attn_pos)
@@ -269,78 +368,47 @@ class Engine:
 
         x = model._embed_in(params, tokens)                  # (1, C, d)
         positions = ctx + jnp.arange(cn, dtype=jnp.int32)[None, :]
-
-        if n_attn_pp:
-            kv_xs = {kk: vv.reshape((n_periods, n_attn_pp) + vv.shape[1:])
-                     for kk, vv in kv_state.items()}
-        else:
-            kv_xs = {}
+        kv_xs = self._kv_xs(kv_state)
         ssm_xs = jax.tree_util.tree_map(
             lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
             ssm_states)
         table0 = table[0]
 
-        def body(x, xs):
-            lp, kv_slice, ssm_slice = xs
-            new_kv: Dict[str, list] = {}
-            new_ssm: Dict[str, Any] = {}
-            r = 0
-            for pos in range(period):
-                pp = lp[f"pos{pos}"]
-                if model.kinds[pos] == "attn":
-                    h = L.rmsnorm(x, pp["mix"]["ln"], cfg.norm_eps)
-                    q, k, v = B._qkv(h, pp["mix"], cfg, None,
-                                     positions=positions)   # (1, C, H, hd)
-                    # encode once: attend to the chunk as the cache will
-                    # store it (int8 roundtrip under kv_quant) and reuse
-                    # the encoded form for the post-scan page-out
-                    kq, ks = C.quant_encode(k, quant)
-                    vq, vs = C.quant_encode(v, quant)
-                    ka = C.quant_decode(kq, ks, k.dtype)
-                    va = C.quant_decode(vq, vs, v.dtype)
-                    # dense view of this layer's pages, extended by C slots
-                    # and overlaid with the fresh chunk at its true
-                    # positions; everything past ctx + n_valid is masked by
-                    # the causal q_offset mask, so garbage pages behind
-                    # padded table entries are unreachable from valid rows
-                    kd = kv_slice["k"][r][table0]        # (MB, bs, K, hd)
-                    vd = kv_slice["v"][r][table0]
-                    ksd = (kv_slice["k_scale"][r][table0]
-                           if quant == "int8" else None)
-                    vsd = (kv_slice["v_scale"][r][table0]
-                           if quant == "int8" else None)
-                    kd = C.quant_decode(kd, ksd, k.dtype).reshape(
-                        1, mbb * bs, n_kv, hd)
-                    vd = C.quant_decode(vd, vsd, v.dtype).reshape(
-                        1, mbb * bs, n_kv, hd)
-                    pad = jnp.zeros((1, cn, n_kv, hd), k.dtype)
-                    k_full = jax.lax.dynamic_update_slice_in_dim(
-                        jnp.concatenate([kd, pad], axis=1), ka, ctx, axis=1)
-                    v_full = jax.lax.dynamic_update_slice_in_dim(
-                        jnp.concatenate([vd, pad], axis=1), va, ctx, axis=1)
-                    out = L.attention(q, k_full, v_full, mode="naive",
-                                      causal=True, q_offset=ctx)
-                    y = L.dense(out, pp["mix"]["wo"], n_in=2)
-                    x = x + y
-                    new_kv.setdefault("k", []).append(kq[0])
-                    new_kv.setdefault("v", []).append(vq[0])
-                    if ks is not None:
-                        new_kv.setdefault("k_scale", []).append(ks[0])
-                        new_kv.setdefault("v_scale", []).append(vs[0])
-                    r += 1
-                else:
-                    st = ssm_slice[f"pos{pos}"]
-                    x, nc = B.ssm_apply(x, pp["mix"], cfg, None, cache=st,
-                                        n_valid=n_valid)
-                    new_ssm[f"pos{pos}"] = nc
-                if model.fkinds[pos] == "moe":
-                    x, _ = B.moe_apply(x, pp["ffn"], cfg, None,
-                                       capacity_mult=4.0)
-                else:
-                    x = B.ffn_apply(x, pp["ffn"], cfg, None)
-            kv_ys = {kk: jnp.stack(vv) for kk, vv in new_kv.items()}
-            return x, (kv_ys, new_ssm)
+        def attn_read(q, enc, kdtype, kv_slice, r):
+            kq, ks, vq, vs = enc
+            # attend to the chunk as the cache will store it (int8
+            # roundtrip under kv_quant)
+            ka = C.quant_decode(kq, ks, kdtype)
+            va = C.quant_decode(vq, vs, kdtype)
+            # dense view of this layer's pages, extended by C slots and
+            # overlaid with the fresh chunk at its true positions;
+            # everything past ctx + n_valid is masked by the causal
+            # q_offset mask, so garbage pages behind padded table entries
+            # are unreachable from valid rows
+            kd = kv_slice["k"][r][table0]        # (MB, bs, K, hd)
+            vd = kv_slice["v"][r][table0]
+            ksd = (kv_slice["k_scale"][r][table0]
+                   if quant == "int8" else None)
+            vsd = (kv_slice["v_scale"][r][table0]
+                   if quant == "int8" else None)
+            kd = C.quant_decode(kd, ksd, kdtype).reshape(
+                1, mbb * bs, n_kv, hd)
+            vd = C.quant_decode(vd, vsd, kdtype).reshape(
+                1, mbb * bs, n_kv, hd)
+            pad = jnp.zeros((1, cn, n_kv, hd), kdtype)
+            k_full = jax.lax.dynamic_update_slice_in_dim(
+                jnp.concatenate([kd, pad], axis=1), ka, ctx, axis=1)
+            v_full = jax.lax.dynamic_update_slice_in_dim(
+                jnp.concatenate([vd, pad], axis=1), va, ctx, axis=1)
+            return L.attention(q, k_full, v_full, mode="naive",
+                               causal=True, q_offset=ctx)
 
+        def ssm_step(x, pp_mix, st):
+            return B.ssm_apply(x, pp_mix, cfg, None, cache=st,
+                               n_valid=n_valid)
+
+        body = self._make_stack_body(positions=positions,
+                                     attn_read=attn_read, ssm_step=ssm_step)
         x, (kv_ys, new_ssm) = jax.lax.scan(
             body, x, (params["blocks"], kv_xs, ssm_xs))
 
@@ -349,9 +417,7 @@ class Engine:
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
 
         if n_attn_pp:
-            n_l = n_periods * n_attn_pp
-            enc = {kk: vv.reshape((n_l,) + vv.shape[2:])
-                   for kk, vv in kv_ys.items()}   # (periods, R, C, ...) -> (L, C, ...)
+            enc = self._collect_enc(kv_ys)
             tok_pos = ctx + jnp.arange(cn, dtype=jnp.int32)
             valid = jnp.arange(cn) < n_valid
             blk, off = C.append_slots(
@@ -407,98 +473,57 @@ class Engine:
         # runs only when jit (re)traces: bounded-compile accounting
         self.trace_counts[(int(tokens.shape[0]), int(table.shape[1]))] += 1
         cfg, model = self.cfg, self.model
-        period, n_periods = model.period, model.n_periods
         bs = self.block_size
         quant = self.kv_cfg.kv_quant
         n_attn_pp = len(self._attn_pos)
-        bsz = tokens.shape[0]
-        hq, hd = cfg.n_heads, cfg.head_dim
-        n_kv = self.kv_cfg.n_kv_heads
-        g = hq // max(n_kv, 1)
-        sm_scale = 1.0 / float(np.sqrt(hd))
+        sm_scale = 1.0 / float(np.sqrt(max(cfg.head_dim, 1)))
 
         x = model._embed_in(params, tokens[:, None])
         positions = lengths[:, None]
-
-        if n_attn_pp:
-            kv_xs = {kk: vv.reshape((n_periods, n_attn_pp) + vv.shape[1:])
-                     for kk, vv in kv_state.items()}
-        else:
-            kv_xs = {}
+        kv_xs = self._kv_xs(kv_state)
         ssm_xs = ssm_states
 
-        def body(x, xs):
-            lp, kv_slice, ssm_slice = xs
-            new_kv: Dict[str, list] = {}
-            new_ssm: Dict[str, Any] = {}
-            r = 0
-            for pos in range(period):
-                pp = lp[f"pos{pos}"]
-                if model.kinds[pos] == "attn":
-                    h = L.rmsnorm(x, pp["mix"]["ln"], cfg.norm_eps)
-                    q, k, v = B._qkv(h, pp["mix"], cfg, None,
-                                     positions=positions)
-                    q0, k0, v0 = q[:, 0], k[:, 0], v[:, 0]
-                    o_c, m_c, l_c = fd.paged_flash_decode_partial(
-                        q0, kv_slice["k"][r], kv_slice["v"][r], table,
-                        lengths,
-                        k_scale=(kv_slice["k_scale"][r]
-                                 if quant == "int8" else None),
-                        v_scale=(kv_slice["v_scale"][r]
-                                 if quant == "int8" else None),
-                        impl=self._paged_impl, sm_scale=sm_scale)
-                    # the fresh token attends to itself via an analytic
-                    # single-position partial, LSE-merged with the cache —
-                    # its KV lands in the pages AFTER the scan, in one
-                    # batched all-layer scatter. Attend to the token as the
-                    # cache will store it (int8 roundtrip under kv_quant),
-                    # so this step and every later one see the same values;
-                    # the encoded form doubles as the scan output so the
-                    # post-scan scatter never re-quantizes.
-                    kq0, ks0 = C.quant_encode(k0, quant)
-                    vq0, vs0 = C.quant_encode(v0, quant)
-                    k0a = C.quant_decode(kq0, ks0, jnp.float32)
-                    v0a = C.quant_decode(vq0, vs0, jnp.float32)
-                    qg = q0.reshape(bsz, n_kv, g, hd).astype(jnp.float32)
-                    s_new = jnp.einsum("bkgd,bkd->bkg", qg, k0a) * sm_scale
-                    m_n = s_new.reshape(bsz, hq, 1)
-                    l_n = jnp.ones((bsz, hq, 1), jnp.float32)
-                    o_n = jnp.broadcast_to(
-                        v0a[:, :, None],
-                        (bsz, n_kv, g, hd)).reshape(bsz, hq, hd)
-                    out = fd.merge_partials(
-                        [(o_c, m_c, l_c), (o_n, m_n, l_n)]).astype(x.dtype)
-                    y = L.dense(out.reshape(bsz, 1, hq, hd), pp["mix"]["wo"],
-                                n_in=2)
-                    x = x + y
-                    new_kv.setdefault("k", []).append(kq0)
-                    new_kv.setdefault("v", []).append(vq0)
-                    if ks0 is not None:
-                        new_kv.setdefault("k_scale", []).append(ks0)
-                        new_kv.setdefault("v_scale", []).append(vs0)
-                    r += 1
-                else:
-                    st = ssm_slice[f"pos{pos}"]
-                    x, nc = B.ssm_apply(x, pp["mix"], cfg, None, cache=st)
-                    # inactive slots keep their state: a slot mid-way
-                    # through chunked prefill must not have its carried
-                    # (conv, ssd) state advanced by the running batch's
-                    # decode steps (the SSM analogue of the null-write
-                    # block for inactive KV appends)
-                    nc = jax.tree_util.tree_map(
-                        lambda new, old: jnp.where(
-                            active.reshape((-1,) + (1,) * (new.ndim - 1)),
-                            new, old),
-                        nc, st)
-                    new_ssm[f"pos{pos}"] = nc
-                if model.fkinds[pos] == "moe":
-                    x, _ = B.moe_apply(x, pp["ffn"], cfg, None,
-                                       capacity_mult=4.0)
-                else:
-                    x = B.ffn_apply(x, pp["ffn"], cfg, None)
-            kv_ys = {kk: jnp.stack(vv) for kk, vv in new_kv.items()}
-            return x, (kv_ys, new_ssm)
+        def attn_read(q, enc, kdtype, kv_slice, r):
+            kq, ks, vq, vs = enc
+            o_c, m_c, l_c = fd.paged_flash_decode_partial(
+                q[:, 0], kv_slice["k"][r], kv_slice["v"][r], table,
+                lengths,
+                k_scale=(kv_slice["k_scale"][r]
+                         if quant == "int8" else None),
+                v_scale=(kv_slice["v_scale"][r]
+                         if quant == "int8" else None),
+                impl=self._paged_impl, sm_scale=sm_scale)
+            # the fresh token attends to itself via a single-position
+            # causal partial, LSE-merged with the cache — its KV lands in
+            # the pages AFTER the scan, in one batched all-layer scatter.
+            # Attend to the token as the cache will store it (int8
+            # roundtrip under kv_quant), so this step and every later one
+            # see the same values; the encoded form doubles as the scan
+            # output so the post-scan scatter never re-quantizes.
+            ka = C.quant_decode(kq, ks, jnp.float32)
+            va = C.quant_decode(vq, vs, jnp.float32)
+            o_n, m_n, l_n = fd.causal_self_partial(q, ka, va,
+                                                   sm_scale=sm_scale)
+            out = fd.merge_partials(
+                [(o_c[:, None], m_c[:, None], l_c[:, None]),
+                 (o_n, m_n, l_n)])
+            return out.astype(q.dtype)
 
+        def ssm_step(x, pp_mix, st):
+            x, nc = B.ssm_apply(x, pp_mix, cfg, None, cache=st)
+            # inactive slots keep their state: a slot mid-way through
+            # chunked prefill must not have its carried (conv, ssd) state
+            # advanced by the running batch's decode steps (the SSM
+            # analogue of the null-write block for inactive KV appends)
+            nc = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(
+                    active.reshape((-1,) + (1,) * (new.ndim - 1)),
+                    new, old),
+                nc, st)
+            return x, nc
+
+        body = self._make_stack_body(positions=positions,
+                                     attn_read=attn_read, ssm_step=ssm_step)
         x, (kv_ys, new_ssm) = jax.lax.scan(
             body, x, (params["blocks"], kv_xs, ssm_xs))
 
@@ -506,9 +531,7 @@ class Engine:
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
         if n_attn_pp:
-            n_l = n_periods * n_attn_pp
-            enc = {kk: vv.reshape((n_l,) + vv.shape[2:])
-                   for kk, vv in kv_ys.items()}   # (periods, R, ...) -> (L, ...)
+            enc = self._collect_enc(kv_ys)
             # inactive slots -> block id n_blocks: a dropped null write
             blk, off = C.append_slots(table, lengths, bs,
                                       self.kv_cfg.n_blocks, active)
@@ -539,6 +562,185 @@ class Engine:
             self._ssm_states = ssm_states
         self._finish_step(live, np.asarray(next_tokens))
 
+    # ------------------------------------------------------------------
+    # Speculative decoding: a proposer (serving/speculate.py) guesses up
+    # to K continuation tokens per running request and ONE jit-compiled
+    # verify forward scores every request's whole window — the multi-
+    # token generalization of the fused decode step over the shared
+    # layer body (paged prefix partial + fresh-window causal partial,
+    # LSE-merged via kernels/flash_decode.merge_partials). A row with no
+    # proposals runs the window at depth 0, which IS a fused decode row,
+    # so spec mode keeps one device dispatch per engine step.
+    # Proposals are accepted while they equal the verify forward's own
+    # argmax, so greedy output is token-identical to non-speculative
+    # decode; the first disagreement contributes the model's own (bonus)
+    # token, so every row emits >= 1 token per step. Exact rollback on
+    # partial acceptance: rejected KV appends route to the null-write
+    # sentinel (they are never stored), and SSM layers run the per-token
+    # verify scan (blocks.ssm_apply_spec) that emits every intermediate
+    # (conv, state) snapshot, so the state after the accepted prefix is
+    # selected — never recomputed, never contaminated by rejections.
+    # ------------------------------------------------------------------
+
+    def _verify_step_impl(self, params, kv_state, ssm_states, tokens, ctx,
+                          n_valid, table, active):
+        cn = int(tokens.shape[1])        # 1 + spec depth (padded, fixed)
+        mbb = int(table.shape[1])
+        # runs only when jit (re)traces: bounded-compile accounting
+        self.trace_counts[("verify", cn, mbb)] += 1
+        cfg, model = self.cfg, self.model
+        bs = self.block_size
+        quant = self.kv_cfg.kv_quant
+        n_attn_pp = len(self._attn_pos)
+        bsz = tokens.shape[0]
+        sm_scale = 1.0 / float(np.sqrt(max(cfg.head_dim, 1)))
+
+        x = model._embed_in(params, tokens)                  # (B, T, d)
+        positions = ctx[:, None] + jnp.arange(cn, dtype=jnp.int32)[None, :]
+        kv_xs = self._kv_xs(kv_state)
+        ssm_xs = ssm_states
+        # per-row validity: [last token, proposals...] then padding; an
+        # inactive slot has n_valid == 0 (whole row inert)
+        valid_rows = jnp.arange(cn)[None, :] < n_valid[:, None]
+
+        def attn_read(q, enc, kdtype, kv_slice, r):
+            kq, ks, vq, vs = enc
+            o_c, m_c, l_c = fd.paged_flash_prefix_partial(
+                q, kv_slice["k"][r], kv_slice["v"][r], table, ctx,
+                k_scale=(kv_slice["k_scale"][r]
+                         if quant == "int8" else None),
+                v_scale=(kv_slice["v_scale"][r]
+                         if quant == "int8" else None),
+                sm_scale=sm_scale)
+            ka = C.quant_decode(kq, ks, jnp.float32)
+            va = C.quant_decode(vq, vs, jnp.float32)
+            o_n, m_n, l_n = fd.causal_self_partial(q, ka, va,
+                                                   sm_scale=sm_scale)
+            out = fd.merge_partials([(o_c, m_c, l_c), (o_n, m_n, l_n)])
+            return out.astype(q.dtype)
+
+        def ssm_step(x, pp_mix, st):
+            return B.ssm_apply_spec(x, pp_mix, cfg, None, cache=st,
+                                    valid=valid_rows)
+
+        body = self._make_stack_body(positions=positions,
+                                     attn_read=attn_read, ssm_step=ssm_step)
+        x, (kv_ys, new_ssm) = jax.lax.scan(
+            body, x, (params["blocks"], kv_xs, ssm_xs))
+
+        logits = model._head(params, x)                      # (B, T, V)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # acceptance: the proposals are the input tokens shifted left;
+        # count the leading run where proposal == the model's own argmax
+        match = jnp.logical_and(
+            tokens[:, 1:] == greedy[:, :-1],
+            jnp.arange(cn - 1)[None, :] < (n_valid - 1)[:, None])
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                        axis=1)                              # (B,)
+
+        if n_attn_pp:
+            enc = self._collect_enc(kv_ys)          # rows: (B, T) C-order
+            tok_pos = (ctx[:, None]
+                       + jnp.arange(cn, dtype=jnp.int32)[None, :])
+            # rejected proposals and inactive slots -> the null-write
+            # sentinel: their KV is never stored, so no post-hoc
+            # truncation is needed
+            accepted = jnp.logical_and(
+                jnp.arange(cn)[None, :] <= n_acc[:, None],
+                active[:, None])
+            blk, off = C.append_slots(
+                jnp.repeat(table, cn, axis=0), tok_pos.reshape(-1), bs,
+                self.kv_cfg.n_blocks, accepted.reshape(-1))
+            kv_state = C.write_token_encoded(kv_state, enc, blk, off)
+        if self._ssm_pos:
+            # new_ssm leaves are (n_periods, T, B, ...): the state after
+            # every token of the window; roll each row back to its
+            # accepted prefix by selecting index n_acc[b] (the state
+            # after inputs 0..n_acc). Inactive rows never advanced, so
+            # any index returns their carried state unchanged.
+            def sel(st):
+                idx = n_acc.reshape((1, 1, bsz) + (1,) * (st.ndim - 3))
+                idx = jnp.broadcast_to(idx, (st.shape[0], 1) + st.shape[2:])
+                return jnp.take_along_axis(st, idx, axis=1)[:, 0]
+
+            ssm_states = jax.tree_util.tree_map(sel, new_ssm)
+        return kv_state, ssm_states, greedy, n_acc
+
+    def _decode_spec(self, live: List[Request]) -> None:
+        """One batched verify round over every live request: gather
+        proposals, grow block tables for the speculative appends, run the
+        verify step, emit accepted+bonus tokens. A request the proposer
+        is silent on (or whose speculative growth would require evicting
+        an elder) rides along at depth 0 — plain decode semantics."""
+        if not live:
+            return
+        bsz = self.max_batch
+        t = self.spec.depth + 1
+        tokens = np.zeros((bsz, t), np.int32)
+        ctx = np.zeros((bsz,), np.int32)
+        n_valid = np.zeros((bsz,), np.int32)
+        active = np.zeros((bsz,), bool)
+        n_props: Dict[int, int] = {}
+        rows: List[Request] = []
+        for r in sorted(live, key=lambda r: (r.arrival, r.rid)):
+            if r.state != RUNNING:      # preempted by an elder's growth
+                continue
+            budget = r.max_new_tokens - len(r.output) - 1
+            k = self.spec.depth_for(r, budget) if budget >= 1 else 0
+            props = self.spec.propose(r, k) if k >= 1 else []
+            # the verify window appends up to len(props)+1 tokens of KV;
+            # iteration is oldest-first, so growth can only preempt rows
+            # not yet gathered (strictly younger requests)
+            if props and not self.sched.ensure_blocks(
+                    r, r.length + len(props)):
+                props = []
+            tokens[r.slot, 0] = r.output[-1]
+            tokens[r.slot, 1: 1 + len(props)] = props
+            ctx[r.slot] = r.length - 1          # current KV length
+            n_valid[r.slot] = 1 + len(props)
+            active[r.slot] = True
+            n_props[r.rid] = len(props)
+            rows.append(r)
+        if not rows:
+            return
+        mbb = _next_pow2(max(len(r.blocks) for r in rows))
+        table = np.zeros((bsz, mbb), np.int32)
+        for r in rows:
+            table[r.slot, : len(r.blocks)] = r.blocks
+        # window width bucketed to powers of two, capped at depth+1: when
+        # back-off shrinks every row's proposals, the step pays for a
+        # narrow executable instead of the full-depth window. Bounded
+        # compile: one executable per (window-bucket, table-bucket) pair.
+        t = min(_next_pow2(int(np.max(n_valid))), self.spec.depth + 1)
+        kv_state, ssm_states, greedy, n_acc = self._verify_step(
+            self.params, self.kv.state, self._ssm_states,
+            jnp.asarray(tokens[:, :t]), jnp.asarray(ctx),
+            jnp.asarray(n_valid), jnp.asarray(table), jnp.asarray(active))
+        self.kv.state = kv_state
+        if self._ssm_pos:
+            self._ssm_states = ssm_states
+        greedy = np.asarray(greedy)
+        n_acc = np.asarray(n_acc)
+        now = self.clock()
+        for r in rows:
+            j = int(n_acc[r.slot])
+            emitted = [int(tok) for tok in greedy[r.slot, : j + 1]]
+            r.output.extend(emitted)
+            self.decode_tokens += len(emitted)
+            if n_props[r.rid]:
+                self.spec.record(r, proposed=n_props[r.rid], accepted=j)
+            if len(r.output) >= r.max_new_tokens:
+                self.sched.finish(r, now)
+                self.finished.append(r)
+
+    def _scrub_preempted(self, victim: Request) -> None:
+        """Zero a preemption victim's pages before the allocator reuses
+        them (cache.truncate_slots): partial overwrites by the next owner
+        then can't leave stale bytes, so a preempted-then-resumed schedule
+        keeps the storage bit-identical to an uncontended one."""
+        if self._attn_pos and victim.blocks:
+            self.kv.truncate_slots(victim.blocks, 0)
+
     def warmup(self, max_seq_len: int) -> None:
         """Pre-compile the jitted steps for the table bucket implied by
         ``max_seq_len`` (prompt + generation budget), the way a serving
@@ -547,7 +749,7 @@ class Engine:
         bsz = self.max_batch
         # the steps donate their state args: hand them throwaway copies so
         # the live cache buffers survive the discarded warmup calls
-        if self.mode == "fused":
+        if self.mode == "fused" and self.spec is None:
             out = self._fused_step(
                 self.params,
                 jax.tree_util.tree_map(jnp.copy, self.kv.state),
@@ -564,6 +766,16 @@ class Engine:
                 jnp.zeros((1, cn), jnp.int32),
                 jnp.asarray(0, jnp.int32), jnp.asarray(cn, jnp.int32),
                 jnp.zeros((1, mbb), jnp.int32), jnp.asarray(0, jnp.int32))
+            jax.block_until_ready(out)
+        if self.spec is not None:
+            t = self.spec.depth + 1
+            out = self._verify_step(
+                self.params,
+                jax.tree_util.tree_map(jnp.copy, self.kv.state),
+                jax.tree_util.tree_map(jnp.copy, self._ssm_states),
+                jnp.zeros((bsz, t), jnp.int32), jnp.zeros((bsz,), jnp.int32),
+                jnp.zeros((bsz,), jnp.int32),
+                jnp.zeros((bsz, mbb), jnp.int32), jnp.zeros((bsz,), bool))
             jax.block_until_ready(out)
 
     # ------------------------------------------------------------------
@@ -693,10 +905,12 @@ class Engine:
                 if r is not None and r.state == RUNNING
                 and r.rid not in deferred]
         t0 = self.clock()
-        if self.mode == "fused":
-            self._decode_fused(live)
-        else:
+        if self.mode != "fused":
             self._decode_batch(live)
+        elif self.spec is not None:
+            self._decode_spec(live)
+        else:
+            self._decode_fused(live)
         self.decode_time += self.clock() - t0
         self.steps += 1
 
@@ -719,6 +933,8 @@ class Engine:
         self.decode_time = 0.0
         self.prefill_time = 0.0
         self.sched.n_preemptions = 0
+        if self.spec is not None:
+            self.spec.reset()
 
     def stats(self) -> Dict[str, float]:
         done = self.finished
@@ -733,7 +949,9 @@ class Engine:
         def pct(a, p):
             return float(np.percentile(a, p)) if a else 0.0
 
+        spec_stats = self.spec.stats() if self.spec is not None else {}
         return {
+            **spec_stats,
             "requests": len(done),
             "throughput_tok_s": toks / wall if wall > 0 else 0.0,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,

@@ -69,6 +69,11 @@ class Request:
     slot: int = -1
     prefilled: int = 0          # context tokens already paged out
     n_preemptions: int = 0
+    # adaptive speculation depth (serving/speculate.py): 0 = not yet
+    # initialized; the Speculator seeds it with the configured depth on
+    # first use and backs it off as acceptance drops. Survives preemption
+    # — an evicted request resumes with its learned depth.
+    spec_depth: int = 0
 
     @property
     def length(self) -> int:
@@ -123,6 +128,9 @@ class Scheduler:
         self.waiting: deque = deque()
         self.running: List[Optional[Request]] = [None] * max_batch
         self.n_preemptions = 0
+        # optional hook invoked with the victim BEFORE its blocks are
+        # released (the engine scrubs the victim's pages through it)
+        self.on_preempt = None
 
     # ------------------------------------------------------------------
     def _blocks_for(self, n_tokens: int) -> int:
@@ -206,6 +214,8 @@ class Scheduler:
     def preempt(self, victim: Request) -> None:
         """Evict an active request: free its blocks and slot, re-queue it at
         the front of the waiting queue with its generated prefix intact."""
+        if self.on_preempt is not None:
+            self.on_preempt(victim)
         self.alloc.release(victim.blocks)
         victim.blocks = []
         self.running[victim.slot] = None

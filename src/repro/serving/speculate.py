@@ -1,0 +1,204 @@
+"""Speculative decoding: pluggable proposers + the acceptance/depth policy.
+
+Decode is memory-bandwidth-bound — every generated token re-reads the whole
+weight set and KV cache (paper §VI; LLM-Inference-Bench, arXiv:2411.00136,
+reports speculation as the highest-leverage serving knob across
+accelerators). Speculative decoding amortizes one weight read over several
+tokens: a cheap *proposer* guesses K continuation tokens and the target
+model *verifies* all K+1 in ONE multi-token forward
+(``Engine._verify_step_impl`` — the chunk step's paged multi-token
+attention path over the shared layer body). Greedy acceptance keeps output
+token-exact versus non-speculative decode: proposals are accepted while
+they equal the verify forward's own argmax, and the first disagreement
+position contributes the model's own (bonus) token, so every verify round
+emits at least one token and at most K+1.
+
+Built-in proposers:
+
+  * :class:`NGramProposer` — prompt-lookup decoding: match the tail n-gram
+    of (prompt + generated) against the earlier context and propose the
+    continuation of the most recent match. No extra weights, no extra
+    forwards; pays off on repetitive traces (code, extraction, chat with
+    quoting) and on any greedy loop the target model itself falls into,
+    since generated tokens join the lookup corpus.
+  * :class:`DraftModelProposer` — a smaller config from ``repro/configs``
+    sharing the target tokenizer, decoded greedily for K tokens. This
+    build recomputes the draft forward from the full context each round —
+    stateless, so scheduler preemption needs no draft-cache bookkeeping;
+    a persistent paged draft cache is the ROADMAP follow-up.
+
+Anything with ``.propose(request, k) -> list[int]`` plugs in (tests use
+scripted proposers to force exact acceptance patterns).
+
+The :class:`Speculator` owns the per-request **adaptive depth** policy:
+each request starts at the configured depth; a fully-accepted round grows
+it back toward the cap, a fully-rejected round halves it, and a partial
+round settles at accepted+1 — so a request whose acceptance collapses
+stops paying for wide verify windows (it never drops below 1: one
+proposed token costs the same forward as plain decode). It also keeps the
+engine-level counters ``Engine.stats()`` reports: proposed/accepted token
+totals, acceptance rate, and the histogram of per-round proposal depths.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class NGramProposer:
+    """Prompt-lookup proposer: continuation of the most recent earlier
+    occurrence of the context's tail n-gram (longest n first)."""
+
+    name = "ngram"
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, req, k: int) -> List[int]:
+        ctx = np.asarray(req.tokens + req.output, np.int64)
+        t = len(ctx)
+        for n in range(self.max_ngram, self.min_ngram - 1, -1):
+            if t <= n:
+                continue
+            tail = ctx[-n:]
+            # candidate windows end strictly before the tail itself, so a
+            # match always has at least one continuation token
+            win = np.lib.stride_tricks.sliding_window_view(ctx[:-1], n)
+            hits = np.nonzero((win == tail).all(axis=1))[0]
+            if hits.size == 0:
+                continue
+            start = int(hits[-1]) + n          # most recent match
+            return ctx[start: start + k].astype(np.int64).tolist()
+        return []
+
+
+class DraftModelProposer:
+    """Greedy K-token continuation from a smaller draft model.
+
+    ``cfg`` is any :class:`repro.core.config.ArchConfig` whose vocabulary
+    matches the target's (same tokenizer); ``params`` defaults to a fresh
+    init — callers with trained draft weights inject them, and passing the
+    *target's* params self-drafts (the mechanical upper bound used by the
+    benchmark). Each round re-prefills the full context — see the module
+    docstring for why.
+    """
+
+    name = "draft"
+
+    def __init__(self, cfg, params=None, *, seed: int = 1):
+        import jax
+
+        from repro.models.lm import LM
+
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed)))
+
+    def propose(self, req, k: int) -> List[int]:
+        import jax.numpy as jnp
+
+        ctx = req.tokens + req.output
+        logits, cache, lengths = self.model.prefill(
+            self.params, {"tokens": jnp.asarray([ctx], jnp.int32)},
+            max_len=len(ctx) + k)
+        out = [int(jnp.argmax(logits[0]))]
+        for _ in range(k - 1):
+            logits, cache = self.model.decode_step(
+                self.params, cache, jnp.asarray([[out[-1]]], jnp.int32),
+                lengths)
+            lengths = lengths + 1
+            out.append(int(jnp.argmax(logits[0])))
+        return out
+
+
+class Speculator:
+    """Proposer wrapper + adaptive per-request depth + counters."""
+
+    def __init__(self, proposer, *, depth: int = 4):
+        if depth < 1:
+            raise ValueError("spec_depth must be >= 1")
+        self.proposer = proposer
+        self.depth = depth
+        self.reset()
+
+    def reset(self) -> None:
+        self.n_rounds = 0
+        self.proposed_tokens = 0
+        self.accepted_tokens = 0
+        self.depth_hist: Counter = Counter()
+
+    # ------------------------------------------------------------------
+    def depth_for(self, req, budget: int) -> int:
+        """Proposal width for this round: the request's adaptive depth,
+        clipped so a fully-accepted round (+1 bonus token) cannot exceed
+        its remaining generation budget."""
+        if req.spec_depth <= 0:
+            req.spec_depth = self.depth
+        return min(req.spec_depth, budget)
+
+    def propose(self, req, k: int) -> List[int]:
+        return list(self.proposer.propose(req, k))[:k]
+
+    def record(self, req, *, proposed: int, accepted: int) -> None:
+        self.n_rounds += 1
+        self.proposed_tokens += proposed
+        self.accepted_tokens += accepted
+        self.depth_hist[proposed] += 1
+        # back-off: full acceptance creeps back toward the cap, full
+        # rejection halves, partial settles just past the accepted run
+        if accepted >= proposed:
+            req.spec_depth = min(self.depth, req.spec_depth + 1)
+        elif accepted == 0:
+            req.spec_depth = max(1, req.spec_depth // 2)
+        else:
+            req.spec_depth = max(1, min(self.depth, accepted + 1))
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict:
+        return {
+            "spec_rounds": self.n_rounds,
+            "spec_proposed_tokens": self.proposed_tokens,
+            "spec_accepted_tokens": self.accepted_tokens,
+            "accept_rate": (self.accepted_tokens
+                            / max(self.proposed_tokens, 1)),
+            "spec_depth_hist": {str(k): v for k, v
+                                in sorted(self.depth_hist.items())},
+        }
+
+
+def build_speculator(spec, target_cfg, *, depth: int = 4
+                     ) -> Optional[Speculator]:
+    """Resolve an Engine ``speculate=`` argument.
+
+    ``None``/``"off"`` -> no speculation; ``"ngram"`` -> prompt lookup;
+    ``"draft:<config>"`` -> draft model from the registry (reduced when the
+    target is a ``-smoke`` config, so CPU engines get CPU drafts); any
+    object with ``.propose`` is wrapped as-is.
+    """
+    if spec is None or spec == "off":
+        return None
+    if hasattr(spec, "propose"):
+        return Speculator(spec, depth=depth)
+    if spec == "ngram":
+        return Speculator(NGramProposer(), depth=depth)
+    if isinstance(spec, str) and spec.startswith("draft:"):
+        from repro.configs import get_config
+
+        name = spec.split(":", 1)[1]
+        dcfg = get_config(name.removesuffix("-smoke"),
+                          reduced=target_cfg.name.endswith("-smoke"))
+        if dcfg.vocab_size != target_cfg.vocab_size:
+            raise ValueError(
+                f"draft config {dcfg.name!r} has vocab {dcfg.vocab_size}, "
+                f"target {target_cfg.name!r} has {target_cfg.vocab_size}: "
+                "speculation requires a shared tokenizer")
+        return Speculator(DraftModelProposer(dcfg), depth=depth)
+    raise ValueError(
+        f"unknown speculate spec {spec!r}; expected 'off', 'ngram', "
+        "'draft:<config>' or a proposer object")
