@@ -20,12 +20,18 @@ Scenarios (smoke-scale honesty notes inline):
     serving stacks. Whole-prompt prefill compiles one executable per
     (group size, prompt length) the trace discovers; chunked prefill
     compiles one chunk executable per block-table bucket — fewer
-    executables, though each is individually pricier to build (the chunk
-    graph carries the dense page view), so neither schedule dominates this
-    scenario at smoke scale.
+    executables, and since the chunk step reads its prefix through the
+    paged multi-query kernel family (no dense per-layer page view in the
+    graph anymore) each one is also cheaper to build than it was.
   * ``chunked_block_pressure`` — an undersized block pool with long
     generations: preemption fires and every request still completes; the
     TTFT/TPOT tails price the evictions.
+  * ``whole_prefill_long`` / ``chunked_prefill_long`` — the chunk-prefill
+    read-path rows: a long-prompt trace where the prefix grows to many
+    table columns, exactly where the old dense (max_blocks*block) page
+    view hurt. ``prefill_tok_s`` on these rows tracks the paged chunk
+    read across PRs (the ``chunk_read_path`` field records which read the
+    build used; PR <= 3 values were measured on the dense read).
 """
 import json
 import os
@@ -42,12 +48,14 @@ from repro.serving.engine import Engine, Request
 N_REQUESTS = int(os.environ.get("BENCH_LATENCY_REQUESTS", 32))
 RATE_RPS = float(os.environ.get("BENCH_LATENCY_RATE", 200.0))
 PROMPT_LENS = (16, 64, 16, 32)      # mixed trace: short interactive + long
+LONG_LENS = (32, 128, 64, 128)      # chunk-read stressor: many-column prefixes
 MAX_NEW = 8
 CHUNK = 16
 OUT_PATH = os.environ.get("BENCH_LATENCY_JSON", "BENCH_latency.json")
 
 ENGINE_KW = dict(max_batch=4, n_blocks=32, block_size=8)
 PRESSURE_KW = dict(max_batch=4, n_blocks=12, block_size=8)
+LONG_KW = dict(max_batch=4, n_blocks=96, block_size=8)
 
 
 def _drive(eng: Engine, prompts, arrivals, max_new: int) -> None:
@@ -71,13 +79,14 @@ def _drive(eng: Engine, prompts, arrivals, max_new: int) -> None:
             break
 
 
-def _warm_prefill_shapes(eng: Engine, cfg, max_new: int) -> None:
+def _warm_prefill_shapes(eng: Engine, cfg, max_new: int,
+                         prompt_lens) -> None:
     """Build every whole-prefill executable the trace can demand: one
     grouped forward per (group size, prompt length) combination that
     admission could ever form (groups the block budget forbids here are
     forbidden identically during the measured pass)."""
     rid = 10_000
-    for t in sorted(set(PROMPT_LENS)):
+    for t in sorted(set(prompt_lens)):
         for g in range(1, eng.max_batch + 1):
             for p in serving_requests(g, cfg.vocab_size, prompt_len=t,
                                       seed=7):
@@ -87,16 +96,16 @@ def _warm_prefill_shapes(eng: Engine, cfg, max_new: int) -> None:
 
 
 def _measure(cfg, params, *, prefill_chunk, warm=True, engine_kw=None,
-             max_new=MAX_NEW) -> dict:
+             max_new=MAX_NEW, prompt_lens=PROMPT_LENS) -> dict:
     engine_kw = engine_kw or ENGINE_KW
     eng = Engine(cfg, params, prefill_chunk=prefill_chunk, **engine_kw)
     prompts = serving_requests(N_REQUESTS, cfg.vocab_size, seed=0,
-                               prompt_lens=PROMPT_LENS)
+                               prompt_lens=prompt_lens)
     arrivals = poisson_arrivals(N_REQUESTS, RATE_RPS, seed=1)
     if warm:
-        eng.warmup(max(PROMPT_LENS) + max_new)
+        eng.warmup(max(prompt_lens) + max_new)
         if prefill_chunk is None:   # chunked engines never call _prefill_fwd
-            _warm_prefill_shapes(eng, cfg, max_new)
+            _warm_prefill_shapes(eng, cfg, max_new, prompt_lens)
         _drive(eng, prompts, arrivals, max_new)  # warm decode/chunk buckets
         eng.reset_stats()
     _drive(eng, prompts, arrivals, max_new)      # measured pass
@@ -105,6 +114,8 @@ def _measure(cfg, params, *, prefill_chunk, warm=True, engine_kw=None,
     return {
         "completed": int(st["requests"]),
         "throughput_tok_s": round(st["throughput_tok_s"], 2),
+        "prefill_tok_s": round(st["prefill_tokens"]
+                               / max(st["prefill_time_s"], 1e-9), 2),
         "p50_ttft_s": round(st["p50_ttft_s"], 5),
         "p95_ttft_s": round(st["p95_ttft_s"], 5),
         "p99_ttft_s": round(st["p99_ttft_s"], 5),
@@ -127,12 +138,24 @@ def run():
         "chunked_prefill_coldstart": dict(prefill_chunk=CHUNK, warm=False),
         "chunked_block_pressure": dict(prefill_chunk=CHUNK,
                                        engine_kw=PRESSURE_KW, max_new=24),
+        # chunk-read stressors: long prefixes spanning many table columns
+        "whole_prefill_long": dict(prefill_chunk=None,
+                                   prompt_lens=LONG_LENS,
+                                   engine_kw=LONG_KW),
+        "chunked_prefill_long": dict(prefill_chunk=CHUNK,
+                                     prompt_lens=LONG_LENS,
+                                     engine_kw=LONG_KW),
     }
     results = {
         "arch": cfg.name, "backend": jax.default_backend(),
         "rate_rps": RATE_RPS, "n_requests": N_REQUESTS,
-        "prompt_lens": list(PROMPT_LENS), "max_new": MAX_NEW,
+        "prompt_lens": list(PROMPT_LENS), "long_prompt_lens": list(LONG_LENS),
+        "max_new": MAX_NEW,
         "engine": dict(ENGINE_KW), "pressure_engine": dict(PRESSURE_KW),
+        "long_engine": dict(LONG_KW),
+        # which attention read the chunk step used this build: "paged"
+        # (multi-query kernel family) since PR 4; "dense" through PR 3
+        "chunk_read_path": "paged",
         "prefill_chunk": CHUNK, "runs": {},
     }
     for name, kw in scenarios.items():
@@ -141,7 +164,8 @@ def run():
         emit(f"bench_latency/{name}", r["p95_ttft_s"] * 1e6,
              f"p50_ttft_s={r['p50_ttft_s']};p99_ttft_s={r['p99_ttft_s']};"
              f"p95_tpot_s={r['p95_tpot_s']};preempt={r['preemptions']};"
-             f"tok_s={r['throughput_tok_s']}")
+             f"tok_s={r['throughput_tok_s']};"
+             f"prefill_tok_s={r['prefill_tok_s']}")
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
 

@@ -5,7 +5,11 @@ smoke scale, with per-request latency lines and the aggregate CDF summary.
 Scheduler v2 knobs: ``--prefill-chunk N`` pages prompts out N tokens per
 step (interleaved with decode), and an undersized ``--n-blocks`` pool
 demonstrates preemption — evicted requests re-queue with their generated
-prefix and still finish:
+prefix and still finish. Every mode here — fused decode, chunked prefill,
+speculative verify — reads the paged cache through one multi-query
+attention family (T query rows share each page fetch; Pallas kernel on
+TPU, bounded column loop elsewhere), so the knobs change the window
+width, never the read algebra:
 
     PYTHONPATH=src python examples/serve_continuous_batching.py
     PYTHONPATH=src python examples/serve_continuous_batching.py \

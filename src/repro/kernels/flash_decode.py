@@ -13,11 +13,22 @@ Two kernel families live here:
     (B, max_blocks*block, K, hd) gather never materializes. Int8 KV
     (LightLLM 'Int8KV' analogue) dequantizes block-wise in VMEM via the
     per-(block, position, head) scale tensors.
+  * :func:`paged_flash_prefix_partial` — the **multi-query** generalization:
+    T query rows per sequence against the same paged prefix. The serving
+    engine runs fused decode (T=1), chunked prefill and speculative verify
+    through this one family; the Pallas kernel packs all T rows of a kv
+    group into one row tile so a page is fetched into VMEM exactly once
+    per (sequence, kv head) and dotted against every query row.
 
-The paged variant also ships an XLA fallback (`impl="xla"`) with identical
-partial semantics — a lax.scan over table columns that gathers one block
-per sequence per step — used on backends where Pallas would run in
-interpret mode (see kernels/ops.default_interpret).
+The paged variants also ship an XLA fallback (`impl="xla"`) with identical
+partial semantics — a column loop over the block table that gathers one
+block per sequence per step — used on backends where Pallas would run in
+interpret mode (see kernels/ops.default_interpret). Both fallbacks bound
+the loop at ``ceil(max(lengths)/block)`` live columns instead of scanning
+every table column; the skipped tail is provably a bitwise no-op (masked
+scores contribute exp-weight 0 and a max/correction of exactly 1.0), and
+``bound_scan=False`` keeps the unbounded scan around as the regression
+oracle for that contract.
 """
 from __future__ import annotations
 
@@ -192,14 +203,24 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
         l_ref[0, 0] = ll_ref[...]
 
 
-def _paged_partial_pallas(q, k_pages, v_pages, table, lengths, k_scale,
-                          v_scale, *, sm_scale, interpret):
-    b, h, d = q.shape
+def _paged_mq_pallas(q, k_pages, v_pages, table, lengths, k_scale,
+                     v_scale, *, sm_scale, interpret):
+    """Pallas multi-query paged partials: q (B, T, H, D) against the paged
+    prefix. All T rows (times their G heads per kv group) are packed into
+    ONE row tile, so the grid stays (B, K, table columns) and each page
+    tile is fetched into VMEM exactly once per (sequence, kv head) and
+    shared by the whole query window — the kernel body itself
+    (:func:`_paged_kernel`) is row-count-agnostic and is reused unchanged.
+    T=1 degenerates bitwise to the original single-query layout."""
+    b, tq, h, d = q.shape
     nb, bs, n_kv, _ = k_pages.shape
     g = h // n_kv
+    rows = tq * g
     mb = table.shape[1]
     quant = k_scale is not None
-    qg = q.reshape(b, n_kv, g, d)
+    # group query rows by kv head: (B, K, T*G, D), T-major within a group
+    qg = q.reshape(b, tq, n_kv, g, d).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b, n_kv, rows, d)
     kernel = functools.partial(_paged_kernel, bs=bs, n_tblk=mb, quant=quant,
                                scale=(sm_scale or 1.0 / np.sqrt(d)))
 
@@ -215,7 +236,7 @@ def _paged_partial_pallas(q, k_pages, v_pages, table, lengths, k_scale,
         return (b_, k_, 0, 0)
 
     in_specs = [
-        pl.BlockSpec((1, 1, g, d), q_idx),
+        pl.BlockSpec((1, 1, rows, d), q_idx),
         pl.BlockSpec((1, bs, 1, d), page_idx),
         pl.BlockSpec((1, bs, 1, d), page_idx),
     ]
@@ -229,33 +250,58 @@ def _paged_partial_pallas(q, k_pages, v_pages, table, lengths, k_scale,
         grid=(b, n_kv, mb),
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, 1, g, d), out_idx),
-            pl.BlockSpec((1, 1, g, 1), out_idx),
-            pl.BlockSpec((1, 1, g, 1), out_idx),
+            pl.BlockSpec((1, 1, rows, d), out_idx),
+            pl.BlockSpec((1, 1, rows, 1), out_idx),
+            pl.BlockSpec((1, 1, rows, 1), out_idx),
         ],
         scratch_shapes=[
-            pltpu.VMEM((g, d), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
         ],
     )
     o, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((b, n_kv, g, d), jnp.float32),
-            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
-            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, rows, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, rows, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, rows, 1), jnp.float32),
         ],
         interpret=interpret,
     )(table, lengths, *inputs)
-    return (o.reshape(b, h, d), m.reshape(b, h, 1), l.reshape(b, h, 1))
+
+    def unpack(a):
+        last = a.shape[-1]
+        a = a.reshape(b, n_kv, tq, g, last).transpose(0, 2, 1, 3, 4)
+        return a.reshape(b, tq, h, last)
+
+    return unpack(o), unpack(m), unpack(l)
+
+
+def _paged_partial_pallas(q, k_pages, v_pages, table, lengths, k_scale,
+                          v_scale, *, sm_scale, interpret):
+    o, m, l = _paged_mq_pallas(q[:, None], k_pages, v_pages, table, lengths,
+                               k_scale, v_scale, sm_scale=sm_scale,
+                               interpret=interpret)
+    return o[:, 0], m[:, 0], l[:, 0]
+
+
+def _live_cols(lengths, bs: int, mb: int):
+    """Leading table columns any row can still touch: ceil(max(len)/block).
+    Every later column is fully masked for every row, which makes it a
+    bitwise no-op in the online-softmax recurrence (p == 0 exactly,
+    correction == exp(0) == 1.0 exactly), so the loop can stop there."""
+    mx = jnp.max(lengths.astype(jnp.int32))
+    return jnp.minimum(jnp.asarray(mb, jnp.int32), (mx + bs - 1) // bs)
 
 
 def _paged_partial_xla(q, k_pages, v_pages, table, lengths, k_scale,
-                       v_scale, *, sm_scale):
-    """Same contract in pure XLA: scan over table columns, gathering one
-    (B, block, K, hd) page tile per step — memory stays O(B * block)."""
+                       v_scale, *, sm_scale, bound_scan: bool = True):
+    """Same contract in pure XLA: loop over table columns, gathering one
+    (B, block, K, hd) page tile per step — memory stays O(B * block). The
+    loop covers only the live columns (see :func:`_live_cols`) unless
+    ``bound_scan=False`` forces the full-width regression oracle."""
     b, h, d = q.shape
     nb, bs, n_kv, _ = k_pages.shape
     g = h // n_kv
@@ -263,7 +309,7 @@ def _paged_partial_xla(q, k_pages, v_pages, table, lengths, k_scale,
     scale = sm_scale or 1.0 / np.sqrt(d)
     qg = q.reshape(b, n_kv, g, d).astype(jnp.float32) * scale
 
-    def step(carry, j):
+    def col(j, carry):
         m, l, acc = carry
         blk = table[:, j]                                   # (B,)
         k = k_pages[blk].astype(jnp.float32)                # (B, bs, K, hd)
@@ -283,19 +329,21 @@ def _paged_partial_xla(q, k_pages, v_pages, table, lengths, k_scale,
         corr = jnp.exp(m - m_new)
         l = l * corr + jnp.sum(p, -1)
         acc = acc * corr[..., None] + jnp.einsum("bkgs,bskd->bkgd", p, v)
-        return (m_new, l, acc), None
+        return (m_new, l, acc)
 
     init = (jnp.full((b, n_kv, g), NEG_INF, jnp.float32),
             jnp.zeros((b, n_kv, g), jnp.float32),
             jnp.zeros((b, n_kv, g, d), jnp.float32))
-    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(mb))
+    upper = _live_cols(lengths, bs, mb) if bound_scan else mb
+    m, l, acc = jax.lax.fori_loop(0, upper, col, init)
     return (acc.reshape(b, h, d), m.reshape(b, h, 1), l.reshape(b, h, 1))
 
 
 def paged_flash_decode_partial(q, k_pages, v_pages, table, lengths, *,
                                k_scale=None, v_scale=None, impl: str = "auto",
                                interpret: Optional[bool] = None,
-                               sm_scale: float = None):
+                               sm_scale: float = None,
+                               bound_scan: bool = True):
     """Single-token attention against ONE layer's paged KV storage.
 
     q: (B, H, D); k_pages/v_pages: (n_blocks, block, K, hd) storage;
@@ -303,9 +351,11 @@ def paged_flash_decode_partial(q, k_pages, v_pages, table, lengths, *,
     lengths (the fresh token is NOT in the pages — merge it with
     :func:`merge_partials`). Returns unnormalized (o f32, m, l).
 
-    impl: "pallas" (block-indexed BlockSpec kernel), "xla" (scan fallback),
-    or "auto" — pallas on TPU, xla elsewhere. The pallas path wants
-    128-aligned head_dim on real hardware; interpret mode takes any shape.
+    impl: "pallas" (block-indexed BlockSpec kernel), "xla" (bounded column
+    loop fallback), or "auto" — pallas on TPU, xla elsewhere. The pallas
+    path wants 128-aligned head_dim on real hardware; interpret mode takes
+    any shape. ``bound_scan=False`` (xla only) forces the unbounded
+    full-table scan — the regression oracle for the bounded contract.
     """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -315,7 +365,8 @@ def paged_flash_decode_partial(q, k_pages, v_pages, table, lengths, *,
                                      interpret=_default_interpret(interpret))
     if impl == "xla":
         return _paged_partial_xla(q, k_pages, v_pages, table, lengths,
-                                  k_scale, v_scale, sm_scale=sm_scale)
+                                  k_scale, v_scale, sm_scale=sm_scale,
+                                  bound_scan=bound_scan)
     raise ValueError(f"unknown paged decode impl {impl!r}")
 
 
@@ -331,32 +382,22 @@ def paged_flash_decode(q, k_pages, v_pages, table, lengths, *,
 
 
 # ==========================================================================
-# Multi-token paged reads: T query rows against one paged prefix. The
-# speculative-decoding verify step scores K+1 proposed tokens in ONE
-# forward — each page tile is gathered once and dotted against every
-# query row, so the HBM traffic per accepted token shrinks by the
-# acceptance count (the whole point of speculation on a bandwidth-bound
-# decode). XLA scan implementation; a Pallas multi-query variant of
-# _paged_kernel is the TPU follow-up (ROADMAP).
+# Multi-token paged reads: T query rows against one paged prefix. ONE
+# read family serves fused decode (T=1), chunked prefill (T=chunk) and
+# speculative verify (T=window) — each page tile is gathered once and
+# dotted against every query row, so the HBM traffic per token shrinks
+# by the window width (the whole point of speculation and chunking on a
+# bandwidth-bound read path). Pallas packs the rows into one VMEM tile
+# (:func:`_paged_mq_pallas`); the XLA fallback loops over live table
+# columns with identical partial semantics.
 # ==========================================================================
 
 
-def paged_flash_prefix_partial(q, k_pages, v_pages, table, lengths, *,
-                               k_scale=None, v_scale=None,
-                               sm_scale: float = None):
-    """Attention partials of a T-token chunk against ONE layer's paged KV.
-
-    q: (B, T, H, D); k_pages/v_pages: (n_blocks, block, K, hd) storage;
-    table: (B, max_blocks) int32; lengths: (B,) valid prefix lengths —
-    every row of the chunk attends the same [0, lengths[b]) prefix (the
-    chunk's own tokens are NOT in the pages; merge their causal
-    self-attention via :func:`causal_self_partial` + :func:`merge_partials`).
-    Returns unnormalized (o (B,T,H,D) f32, m (B,T,H,1), l (B,T,H,1)).
-
-    Same online-softmax block scan as the T=1 XLA fallback
-    (:func:`_paged_partial_xla`): one (B, block, K, hd) page tile is
-    gathered per step and reused by all T query rows.
-    """
+def _paged_prefix_xla(q, k_pages, v_pages, table, lengths, k_scale,
+                      v_scale, *, sm_scale, bound_scan: bool = True):
+    """XLA fallback: same online-softmax column loop as
+    :func:`_paged_partial_xla`, T query rows wide. One (B, block, K, hd)
+    page tile is gathered per step and reused by all T rows."""
     b, tq, h, d = q.shape
     nb, bs, n_kv, _ = k_pages.shape
     g = h // n_kv
@@ -364,7 +405,7 @@ def paged_flash_prefix_partial(q, k_pages, v_pages, table, lengths, *,
     scale = sm_scale or 1.0 / np.sqrt(d)
     qg = q.reshape(b, tq, n_kv, g, d).astype(jnp.float32) * scale
 
-    def step(carry, j):
+    def col(j, carry):
         m, l, acc = carry
         blk = table[:, j]                                   # (B,)
         k = k_pages[blk].astype(jnp.float32)                # (B, bs, K, hd)
@@ -383,14 +424,48 @@ def paged_flash_prefix_partial(q, k_pages, v_pages, table, lengths, *,
         corr = jnp.exp(m - m_new)
         l = l * corr + jnp.sum(p, -1)
         acc = acc * corr[..., None] + jnp.einsum("btkgs,bskd->btkgd", p, v)
-        return (m_new, l, acc), None
+        return (m_new, l, acc)
 
     init = (jnp.full((b, tq, n_kv, g), NEG_INF, jnp.float32),
             jnp.zeros((b, tq, n_kv, g), jnp.float32),
             jnp.zeros((b, tq, n_kv, g, d), jnp.float32))
-    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(mb))
+    upper = _live_cols(lengths, bs, mb) if bound_scan else mb
+    m, l, acc = jax.lax.fori_loop(0, upper, col, init)
     return (acc.reshape(b, tq, h, d), m.reshape(b, tq, h, 1),
             l.reshape(b, tq, h, 1))
+
+
+def paged_flash_prefix_partial(q, k_pages, v_pages, table, lengths, *,
+                               k_scale=None, v_scale=None,
+                               impl: str = "auto",
+                               interpret: Optional[bool] = None,
+                               sm_scale: float = None,
+                               bound_scan: bool = True):
+    """Attention partials of a T-token window against ONE layer's paged KV.
+
+    q: (B, T, H, D); k_pages/v_pages: (n_blocks, block, K, hd) storage;
+    table: (B, max_blocks) int32; lengths: (B,) valid prefix lengths —
+    every row of the window attends the same [0, lengths[b]) prefix (the
+    window's own tokens are NOT in the pages; merge their causal
+    self-attention via :func:`causal_self_partial` + :func:`merge_partials`).
+    Returns unnormalized (o (B,T,H,D) f32, m (B,T,H,1), l (B,T,H,1)).
+
+    impl: "pallas" (the multi-query row-packed kernel), "xla" (bounded
+    column loop), or "auto" — pallas on TPU, xla elsewhere.
+    ``bound_scan=False`` (xla only) forces the unbounded full-table scan,
+    the regression oracle for the bounded-loop bitwise contract.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        return _paged_mq_pallas(q, k_pages, v_pages, table, lengths,
+                                k_scale, v_scale, sm_scale=sm_scale,
+                                interpret=_default_interpret(interpret))
+    if impl == "xla":
+        return _paged_prefix_xla(q, k_pages, v_pages, table, lengths,
+                                 k_scale, v_scale, sm_scale=sm_scale,
+                                 bound_scan=bound_scan)
+    raise ValueError(f"unknown paged prefix impl {impl!r}")
 
 
 def causal_self_partial(q, k, v, *, sm_scale: float = None):

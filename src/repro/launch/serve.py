@@ -1,8 +1,17 @@
 """Serving launcher CLI: continuous-batching engine over synthetic bursts.
 
+Fused decode, chunked prefill and speculative verify all read the KV
+cache through ONE paged multi-query attention family
+(kernels/flash_decode.paged_flash_prefix_partial): T query rows per
+sequence share each page-tile fetch — the Pallas kernel on TPU, a
+bounded column loop elsewhere — so every mode below exercises the same
+read path at a different window width.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 16 --int8-kv          # fused jit decode (default)
     PYTHONPATH=src python -m repro.launch.serve --legacy   # per-layer loop
+    PYTHONPATH=src python -m repro.launch.serve \
+        --prefill-chunk 16                   # paged chunked prefill
     PYTHONPATH=src python -m repro.launch.serve \
         --speculate ngram --spec-depth 8     # prompt-lookup speculation
     PYTHONPATH=src python -m repro.launch.serve \
@@ -30,7 +39,9 @@ def main():
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="page prompts out N tokens per step, interleaved "
-                         "with decode (0 = whole-prompt prefill)")
+                         "with decode (0 = whole-prompt prefill); the "
+                         "chunk reads its paged prefix through the "
+                         "multi-query kernel, no dense page view")
     ap.add_argument("--mixed-lens", default=None,
                     help="comma-separated prompt lengths cycled over the "
                          "burst, e.g. 16,64,24 (overrides --prompt-len)")

@@ -22,8 +22,10 @@ densely — LSE-merges the fresh token's contribution analytically
 (cache.write_token_encoded) after the scan. Inactive batch slots route their
 append to block id ``n_blocks`` (a dropped null write), so they can never
 corrupt live pages. Block-table width is bucketed to powers of two, so the
-jit cache holds at most one executable per (batch, table-bucket) pair;
-``trace_counts`` records every retrace for the bounded-compile invariant.
+jit cache holds at most one executable per (kind, T, table-bucket) triple
+— kind is "decode" (T=1), "chunk" or "verify", all three running the same
+paged multi-query attention read; ``trace_counts`` records every retrace
+for the bounded-compile invariant.
 
 **Prefill** comes in two schedules:
 
@@ -31,13 +33,17 @@ jit cache holds at most one executable per (batch, table-bucket) pair;
     context length and run through the model as one forward per group, then
     paged out with one all-layer scatter per sequence (the v1 behavior);
   * chunked (``prefill_chunk=N``): one jit-compiled chunk step pages N
-    prompt tokens per engine step through the block table — attention runs
-    against the request's own pages (dense per-layer view, causal within
-    the chunk via ``q_offset``), SSM layers carry (conv, state) across
-    chunks (blocks.ssm_apply T>1-with-cache), and the chunk's KV lands with
-    one all-layer scatter whose padded tail routes to the null-write block.
-    Decode for the running batch proceeds in the *same* engine step, so a
-    long prompt no longer stalls every decoding request.
+    prompt tokens per engine step through the block table — the already-
+    paged prefix is read with the *multi-query paged* kernel family
+    (kernels/flash_decode.paged_flash_prefix_partial: every chunk row
+    shares one page-tile fetch, no dense per-layer page view), the fresh
+    chunk attends itself causally (causal_self_partial) and the partials
+    LSE-merge — the same read algebra as fused decode and verify. SSM
+    layers carry (conv, state) across chunks (blocks.ssm_apply
+    T>1-with-cache), and the chunk's KV lands with one all-layer scatter
+    whose padded tail routes to the null-write block. Decode for the
+    running batch proceeds in the *same* engine step, so a long prompt no
+    longer stalls every decoding request.
 
 **Preemption.** Block tables grow lazily (scheduler.ensure_blocks); when the
 pool runs dry the youngest active request is evicted and re-queued with its
@@ -105,6 +111,19 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _pct(samples, p: float) -> float:
+    """Percentile that is safe on empty and singleton samples: an empty
+    window (e.g. right after ``reset_stats``, or when no request has two
+    output tokens yet so every tpot() is None) reports 0.0 instead of
+    raising, and a single sample reports itself for every percentile."""
+    samples = [s for s in samples if s is not None]
+    if not samples:
+        return 0.0
+    if len(samples) == 1:
+        return float(samples[0])
+    return float(np.percentile(samples, p))
+
+
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  n_blocks: int = 64, block_size: int = 16,
@@ -146,8 +165,8 @@ class Engine:
         self._ssm_states = self._init_ssm_states()
         self._paged_impl = ("pallas" if jax.default_backend() == "tpu"
                             else "xla")
-        # one executable per (batch, table-bucket) pair — plus one per
-        # ("chunk", chunk, table-bucket) for chunked prefill; trace_counts
+        # one executable per (kind, T, table-bucket) triple — kinds are
+        # "decode" (T=1), "chunk" and "verify"; trace_counts
         # observes every (re)trace of the jitted steps. KV/SSM state buffers
         # are donated: the caller always rebinds to the returned state, so
         # the cache is updated in place instead of copied every token
@@ -273,9 +292,9 @@ class Engine:
     # Shared layer body. The fused decode step, the chunked-prefill step
     # and the speculative verify step scan the SAME body over the layer
     # stack; each caller parameterizes only
-    #   * the attention read path (``attn_read``): paged flash partial +
-    #     fresh-token partial + LSE merge for fused decode and verify,
-    #     dense page view + naive causal for the chunk step, and
+    #   * the attention read path (``attn_read``): paged multi-query
+    #     prefix partial + fresh-window causal partial + LSE merge for
+    #     all three (fused decode is the T=1 window), and
     #   * the SSM cache plumbing (``ssm_step``): T=1 decode with an
     #     active-slot mask, T>1 chunk-continue, or the per-token verify
     #     scan that emits every intermediate state for exact rollback.
@@ -344,13 +363,17 @@ class Engine:
 
     # ------------------------------------------------------------------
     # Chunked prefill: one jit-compiled step pages `prefill_chunk` context
-    # tokens of ONE sequence through its block table. Attention runs
-    # against the sequence's own pages (dense per-layer view + the fresh
-    # chunk placed at its true positions, causal via q_offset); SSM layers
-    # carry (conv, state) across chunks. Ragged tails are right-padded to
-    # the chunk size so the jit cache stays one executable per
-    # (chunk, table-bucket): padded KV routes to the null-write block and
-    # padded SSM positions are dt-masked (state-neutral).
+    # tokens of ONE sequence through its block table. The already-paged
+    # prefix [0, ctx) is read THROUGH the table with the multi-query
+    # paged partial (all chunk rows share each page-tile fetch — no dense
+    # per-layer page view); the fresh chunk attends itself causally and
+    # the partials LSE-merge, the same read algebra as fused decode and
+    # verify. SSM layers carry (conv, state) across chunks. Ragged tails
+    # are right-padded to the chunk size so the jit cache stays one
+    # executable per (chunk, table-bucket): padded KV routes to the
+    # null-write block and padded SSM positions are dt-masked
+    # (state-neutral); padded attention rows compute garbage that nothing
+    # reads (the next token comes from row n_valid - 1).
     # ------------------------------------------------------------------
 
     def _chunk_step_impl(self, params, kv_state, ssm_states, tokens, ctx,
@@ -363,8 +386,7 @@ class Engine:
         bs = self.block_size
         quant = self.kv_cfg.kv_quant
         n_attn_pp = len(self._attn_pos)
-        n_kv = self.kv_cfg.n_kv_heads
-        hd = self.kv_cfg.head_dim
+        sm_scale = 1.0 / float(np.sqrt(max(cfg.head_dim, 1)))
 
         x = model._embed_in(params, tokens)                  # (1, C, d)
         positions = ctx + jnp.arange(cn, dtype=jnp.int32)[None, :]
@@ -376,32 +398,21 @@ class Engine:
 
         def attn_read(q, enc, kdtype, kv_slice, r):
             kq, ks, vq, vs = enc
-            # attend to the chunk as the cache will store it (int8
-            # roundtrip under kv_quant)
-            ka = C.quant_decode(kq, ks, kdtype)
-            va = C.quant_decode(vq, vs, kdtype)
-            # dense view of this layer's pages, extended by C slots and
-            # overlaid with the fresh chunk at its true positions;
-            # everything past ctx + n_valid is masked by the causal
-            # q_offset mask, so garbage pages behind padded table entries
-            # are unreachable from valid rows
-            kd = kv_slice["k"][r][table0]        # (MB, bs, K, hd)
-            vd = kv_slice["v"][r][table0]
-            ksd = (kv_slice["k_scale"][r][table0]
-                   if quant == "int8" else None)
-            vsd = (kv_slice["v_scale"][r][table0]
-                   if quant == "int8" else None)
-            kd = C.quant_decode(kd, ksd, kdtype).reshape(
-                1, mbb * bs, n_kv, hd)
-            vd = C.quant_decode(vd, vsd, kdtype).reshape(
-                1, mbb * bs, n_kv, hd)
-            pad = jnp.zeros((1, cn, n_kv, hd), kdtype)
-            k_full = jax.lax.dynamic_update_slice_in_dim(
-                jnp.concatenate([kd, pad], axis=1), ka, ctx, axis=1)
-            v_full = jax.lax.dynamic_update_slice_in_dim(
-                jnp.concatenate([vd, pad], axis=1), va, ctx, axis=1)
-            return L.attention(q, k_full, v_full, mode="naive",
-                               causal=True, q_offset=ctx)
+            o_c, m_c, l_c = fd.paged_flash_prefix_partial(
+                q, kv_slice["k"][r], kv_slice["v"][r], table, ctx[None],
+                k_scale=(kv_slice["k_scale"][r]
+                         if quant == "int8" else None),
+                v_scale=(kv_slice["v_scale"][r]
+                         if quant == "int8" else None),
+                impl=self._paged_impl, sm_scale=sm_scale)
+            # attend to the fresh chunk as the cache will store it (int8
+            # roundtrip under kv_quant), causal within the chunk
+            ka = C.quant_decode(kq, ks, jnp.float32)
+            va = C.quant_decode(vq, vs, jnp.float32)
+            o_n, m_n, l_n = fd.causal_self_partial(q, ka, va,
+                                                   sm_scale=sm_scale)
+            out = fd.merge_partials([(o_c, m_c, l_c), (o_n, m_n, l_n)])
+            return out.astype(q.dtype)
 
         def ssm_step(x, pp_mix, st):
             return B.ssm_apply(x, pp_mix, cfg, None, cache=st,
@@ -470,8 +481,11 @@ class Engine:
 
     def _fused_step_impl(self, params, kv_state, ssm_states, tokens,
                          lengths, table, active):
-        # runs only when jit (re)traces: bounded-compile accounting
-        self.trace_counts[(int(tokens.shape[0]), int(table.shape[1]))] += 1
+        # runs only when jit (re)traces: bounded-compile accounting.
+        # Keys are uniform (kind, T, table-bucket) across the three step
+        # kinds; fused decode is the T=1 member of the read family (batch
+        # is pinned to max_batch, so it never varies a key).
+        self.trace_counts[("decode", 1, int(table.shape[1]))] += 1
         cfg, model = self.cfg, self.model
         bs = self.block_size
         quant = self.kv_cfg.kv_quant
@@ -611,7 +625,7 @@ class Engine:
                          if quant == "int8" else None),
                 v_scale=(kv_slice["v_scale"][r]
                          if quant == "int8" else None),
-                sm_scale=sm_scale)
+                impl=self._paged_impl, sm_scale=sm_scale)
             ka = C.quant_decode(kq, ks, jnp.float32)
             va = C.quant_decode(vq, vs, jnp.float32)
             o_n, m_n, l_n = fd.causal_self_partial(q, ka, va,
@@ -768,15 +782,22 @@ class Engine:
                 jnp.zeros((1, mbb), jnp.int32), jnp.asarray(0, jnp.int32))
             jax.block_until_ready(out)
         if self.spec is not None:
-            t = self.spec.depth + 1
-            out = self._verify_step(
-                self.params,
-                jax.tree_util.tree_map(jnp.copy, self.kv.state),
-                jax.tree_util.tree_map(jnp.copy, self._ssm_states),
-                jnp.zeros((bsz, t), jnp.int32), jnp.zeros((bsz,), jnp.int32),
-                jnp.zeros((bsz,), jnp.int32),
-                jnp.zeros((bsz, mbb), jnp.int32), jnp.zeros((bsz,), bool))
-            jax.block_until_ready(out)
+            # build every (window-bucket, table-bucket) executable the
+            # depth policy can demand: pow2 window widths capped at
+            # depth+1 (adaptive back-off narrows the verify window)
+            widths = sorted({min(_next_pow2(k), self.spec.depth + 1)
+                             for k in range(1, self.spec.depth + 2)})
+            for t in widths:
+                out = self._verify_step(
+                    self.params,
+                    jax.tree_util.tree_map(jnp.copy, self.kv.state),
+                    jax.tree_util.tree_map(jnp.copy, self._ssm_states),
+                    jnp.zeros((bsz, t), jnp.int32),
+                    jnp.zeros((bsz,), jnp.int32),
+                    jnp.zeros((bsz,), jnp.int32),
+                    jnp.zeros((bsz, mbb), jnp.int32),
+                    jnp.zeros((bsz,), bool))
+                jax.block_until_ready(out)
 
     # ------------------------------------------------------------------
     # Legacy decode: the paper-baseline per-layer Python hot loop (eager
@@ -945,10 +966,7 @@ class Engine:
         wall = max((r.finish_time or 0) for r in done) - \
             min(r.arrival for r in done) if done else 0.0
         toks = sum(len(r.output) for r in done)
-
-        def pct(a, p):
-            return float(np.percentile(a, p)) if a else 0.0
-
+        pct = _pct
         spec_stats = self.spec.stats() if self.spec is not None else {}
         return {
             **spec_stats,

@@ -189,6 +189,125 @@ def test_paged_flash_decode_int8(impl):
 
 
 # --------------------------------------------------------------------------
+# paged multi-query kernel: T query rows per sequence share one page-tile
+# fetch. One contract for fused decode (T=1), chunked prefill and
+# speculative verify — Pallas (interpret mode: the fast lane) vs the
+# bounded XLA fallback vs a dense softmax oracle.
+# --------------------------------------------------------------------------
+
+
+def _prefix_oracle(q, k_dense, v_dense, lengths):
+    """Dense oracle: every window row attends the whole [0, lengths[b])
+    prefix (no causal structure — the window's own tokens live in
+    causal_self_partial, not here). Zero-length rows attend nothing."""
+    b, t, h, d = q.shape
+    n_kv = k_dense.shape[2]
+    g = h // n_kv
+    want = np.zeros((b, t, h, d), np.float32)
+    for bi in range(b):
+        ln = int(lengths[bi])
+        if ln == 0:
+            continue
+        qg = np.asarray(q[bi], np.float32).reshape(t, n_kv, g, d)
+        kk = np.asarray(k_dense[bi, :ln], np.float32)
+        vv = np.asarray(v_dense[bi, :ln], np.float32)
+        s = np.einsum("tkgd,skd->tkgs", qg, kk) / np.sqrt(d)
+        p = np.asarray(jax.nn.softmax(jnp.asarray(s), axis=-1))
+        want[bi] = np.einsum("tkgs,skd->tkgd", p, vv).reshape(t, h, d)
+    return want
+
+
+@pytest.mark.parametrize("t", [1, 4, 8])
+@pytest.mark.parametrize("quant", [False, True])
+@pytest.mark.parametrize("h,kv", [(4, 2), (4, 1)])
+def test_paged_mq_kernel_contract(t, quant, h, kv):
+    """The Pallas multi-query kernel and the XLA fallback agree partial-
+    for-partial, and their normalized output matches the dense oracle —
+    across window widths, a padded table bucket (live columns < bucket),
+    int8 in-kernel dequant, GQA groups, and a zero-length row."""
+    from repro.serving import cache as C
+    from repro.kernels import flash_decode as fd
+    b, bs, mb, n_blocks, d = 3, 4, 4, 16, 16
+    s = bs * mb
+    q = rand(0, (b, t, h, d), jnp.float32)
+    k = rand(1, (b, s, kv, d), jnp.float32)
+    v = rand(2, (b, s, kv, d), jnp.float32)
+    # full row / short row (trailing bucket columns dead) / zero-length row
+    lengths = jnp.asarray([s, bs + 2, 0], jnp.int32)
+    table = np.asarray([[5, 2, 9, 1], [3, 7, 0, 0], [0, 0, 0, 0]], np.int32)
+    k_pages, v_pages = _paginate(k, v, table, bs, n_blocks)
+    ks = vs = None
+    if quant:
+        k_pages, ks = C.quant_encode(k_pages, "int8")
+        v_pages, vs = C.quant_encode(v_pages, "int8")
+    got = {}
+    for impl in ("pallas", "xla"):
+        got[impl] = fd.paged_flash_prefix_partial(
+            q, k_pages, v_pages, jnp.asarray(table), lengths,
+            k_scale=ks, v_scale=vs, impl=impl, interpret=True)
+    for a, b_ in zip(got["pallas"], got["xla"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-6, atol=1e-6)
+    o, m, l = got["xla"]
+    out = np.asarray(o / jnp.maximum(l, 1e-30))
+    # the oracle reads the same (dequantized) pages through the table, so
+    # tolerances stay tight even under int8
+    kd = C.quant_decode(k_pages, ks, jnp.float32)[table].reshape(b, s, kv, d)
+    vd = C.quant_decode(v_pages, vs, jnp.float32)[table].reshape(b, s, kv, d)
+    want = _prefix_oracle(q, kd, vd, lengths)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_paged_prefix_t1_matches_decode_partial(impl):
+    """The multi-query read at T=1 IS the fused decode read: partials are
+    bitwise-identical to paged_flash_decode_partial on both impls."""
+    from repro.kernels import flash_decode as fd
+    b, h, kv, bs, mb, n_blocks, d = 2, 4, 2, 8, 2, 8, 32
+    s = bs * mb
+    q = rand(0, (b, h, d), jnp.float32)
+    k = rand(1, (b, s, kv, d), jnp.float32)
+    v = rand(2, (b, s, kv, d), jnp.float32)
+    lengths = jnp.asarray([s - 3, bs + 1], jnp.int32)
+    table = np.asarray([[3, 1], [6, 4]], np.int32)
+    k_pages, v_pages = _paginate(k, v, table, bs, n_blocks)
+    one = fd.paged_flash_decode_partial(
+        q, k_pages, v_pages, jnp.asarray(table), lengths, impl=impl,
+        interpret=True)
+    mq = fd.paged_flash_prefix_partial(
+        q[:, None], k_pages, v_pages, jnp.asarray(table), lengths,
+        impl=impl, interpret=True)
+    for a, b_ in zip(one, mq):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_[:, 0]))
+
+
+@pytest.mark.parametrize("t", [None, 3])
+def test_paged_bounded_scan_bitwise(t):
+    """Bounding the XLA fallback at ceil(max(lengths)/block) live columns
+    is bitwise-invisible: every partial equals the unbounded full-table
+    scan (the skipped columns are provable no-ops), for the single-query
+    (t=None) and multi-query paths alike."""
+    from repro.kernels import flash_decode as fd
+    b, h, kv, bs, mb, n_blocks, d = 2, 4, 2, 4, 8, 16, 16
+    s = bs * mb
+    qshape = (b, h, d) if t is None else (b, t, h, d)
+    q = rand(0, qshape, jnp.float32)
+    k = rand(1, (b, s, kv, d), jnp.float32)
+    v = rand(2, (b, s, kv, d), jnp.float32)
+    # all lengths end far before the last table column (and one row is 0)
+    lengths = jnp.asarray([bs + 1, 0], jnp.int32)
+    table = np.asarray([list(range(1, 9)), list(range(8, 0, -1))], np.int32)
+    k_pages, v_pages = _paginate(k, v, table, bs, n_blocks)
+    fn = (fd.paged_flash_decode_partial if t is None
+          else fd.paged_flash_prefix_partial)
+    outs = {bound: fn(q, k_pages, v_pages, jnp.asarray(table), lengths,
+                      impl="xla", bound_scan=bound)
+            for bound in (True, False)}
+    for a, b_ in zip(outs[True], outs[False]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+# --------------------------------------------------------------------------
 # SSD
 # --------------------------------------------------------------------------
 

@@ -27,13 +27,18 @@ def _prompts(cfg, lens, seed=0):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("arch,chunk,lens", [
-    ("qwen1.5-0.5b", 5, (12, 7, 9)),        # ragged chunk tails
-    ("mamba2-130m", 32, (40, 56, 33)),      # ssm_chunk-aligned chunks
+@pytest.mark.parametrize("arch,chunk,lens,kv_quant", [
+    ("qwen1.5-0.5b", 5, (12, 7, 9), "none"),     # ragged chunk tails
+    ("qwen1.5-0.5b", 5, (12, 7, 9), "int8"),     # int8 pages on the paged
+                                                 # multi-query chunk read
+    ("mamba2-130m", 32, (40, 56, 33), "none"),   # pure SSM, aligned chunks
+    pytest.param("jamba-v0.1-52b", 32, (40, 33), "none",
+                 marks=pytest.mark.slow),        # hybrid attn+ssm+moe
 ])
-def test_chunked_prefill_matches_whole_prompt(arch, chunk, lens):
+def test_chunked_prefill_matches_whole_prompt(arch, chunk, lens, kv_quant):
     """Paging a prompt out chunk-by-chunk (interleaved with decode) emits
-    the same greedy tokens as one whole-prompt forward. For SSD stacks the
+    the same greedy tokens as one whole-prompt forward — now through the
+    paged multi-query prefix read (no dense page view). For SSD stacks the
     chunk must be a multiple of cfg.ssm_chunk so both schedules group the
     recurrence identically (bf16 rounding is grouping-sensitive)."""
     cfg = get_config(arch, reduced=True)
@@ -42,7 +47,7 @@ def test_chunked_prefill_matches_whole_prompt(arch, chunk, lens):
     outs = {}
     for pf in (None, chunk):
         eng = Engine(cfg, params, max_batch=2, n_blocks=64, block_size=8,
-                     prefill_chunk=pf)
+                     prefill_chunk=pf, kv_quant=kv_quant)
         for rid, p in enumerate(prompts):
             eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=5))
         done = eng.run(max_steps=300)
@@ -112,21 +117,32 @@ def test_preemption_lifecycle_completes_all(prefill_chunk):
     assert evicted                           # a victim survived to finish
 
 
-def test_preemption_keeps_generated_prefix_and_ttft():
+@pytest.mark.parametrize("speculate", [None, "ngram"])
+def test_preemption_keeps_generated_prefix_and_ttft(speculate):
     """An evicted request resumes with its generated prefix (output tokens
-    are never discarded) and its first_token_time is not reset."""
+    are never discarded) and its first_token_time is pinned: the re-prefill
+    on re-admission must never overwrite it (a victim that already emitted
+    tokens would otherwise report a fake, late TTFT). Also exercised with
+    speculation, where a victim can be evicted mid-verify-round."""
+    from repro.data.pipeline import repetitive_requests
     cfg = get_config("qwen1.5-0.5b", reduced=True)
     params = _params(cfg)
-    prompts = _prompts(cfg, (8, 8, 8, 8), seed=1)
+    prompts = [repetitive_requests(1, cfg.vocab_size, prompt_len=8,
+                                   pattern_len=4, seed=s)[0]
+               for s in range(4)]
     eng = Engine(cfg, params, max_batch=3, n_blocks=6, block_size=4,
-                 prefill_chunk=4)
+                 prefill_chunk=4, speculate=speculate, spec_depth=4)
     for rid, p in enumerate(prompts):
         eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=6))
     seen_outputs = {}
+    first_seen = {}
     witnessed_resume = False
     while eng.sched.has_work and eng.steps < 500:
         eng.step()
         for r in list(eng.waiting) + [x for x in eng.running if x]:
+            if r.first_token_time is not None:
+                prev = first_seen.setdefault(r.rid, r.first_token_time)
+                assert r.first_token_time == prev   # never overwritten
             if r.n_preemptions and r.output:
                 prev = seen_outputs.get(r.rid)
                 if prev is not None:
@@ -134,7 +150,11 @@ def test_preemption_keeps_generated_prefix_and_ttft():
                     witnessed_resume = True
                 seen_outputs[r.rid] = list(r.output)
     assert witnessed_resume
+    assert eng.sched.n_preemptions > 0
+    if speculate:
+        assert eng.stats()["spec_rounds"] > 0   # verify rounds really ran
     for r in eng.finished:
+        assert r.first_token_time == first_seen[r.rid]
         if r.n_preemptions:
             assert r.first_token_time is not None
             assert r.first_token_time <= r.finish_time

@@ -156,9 +156,9 @@ def test_fused_matches_legacy_tokens(arch, kv_quant):
 
 
 def test_fused_step_compiles_once_per_bucket():
-    """The fused step retraces at most once per (batch, table-bucket) pair:
-    same-footprint requests reuse the executable; a larger block-table
-    bucket triggers exactly one more trace."""
+    """The fused step retraces at most once per (kind, T, table-bucket)
+    triple: same-footprint requests reuse the executable; a larger
+    block-table bucket triggers exactly one more trace."""
     cfg = get_config("qwen1.5-0.5b", reduced=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -167,25 +167,27 @@ def test_fused_step_compiles_once_per_bucket():
     # bucket 1: prompt 4 + 4 new -> 2 blocks -> table width 2
     eng.submit(Request(rid=0, tokens=list(range(1, 5)), max_new_tokens=4))
     eng.run(max_steps=50)
-    assert dict(eng.trace_counts) == {(2, 2): 1}
+    assert dict(eng.trace_counts) == {("decode", 1, 2): 1}
     # same footprint again (and a second concurrent request): cache hit
     eng.submit(Request(rid=1, tokens=list(range(1, 5)), max_new_tokens=4))
     eng.submit(Request(rid=2, tokens=list(range(2, 6)), max_new_tokens=4))
     eng.run(max_steps=50)
-    assert dict(eng.trace_counts) == {(2, 2): 1}
+    assert dict(eng.trace_counts) == {("decode", 1, 2): 1}
     # larger footprint: 16 + 8 -> 6 blocks -> bucket 8 -> one new trace
     eng.submit(Request(rid=3, tokens=list(range(1, 17)), max_new_tokens=8))
     eng.run(max_steps=80)
-    assert dict(eng.trace_counts) == {(2, 2): 1, (2, 8): 1}
+    assert dict(eng.trace_counts) == {("decode", 1, 2): 1,
+                                      ("decode", 1, 8): 1}
     assert len(eng.finished) == 4
     # warmup pre-compiles a bucket without mutating engine state
     eng2 = Engine(cfg, params, max_batch=2, n_blocks=64, block_size=4,
                   mode="fused")
     eng2.warmup(8)
-    assert dict(eng2.trace_counts) == {(2, 2): 1}
+    assert dict(eng2.trace_counts) == {("decode", 1, 2): 1}
     eng2.submit(Request(rid=0, tokens=list(range(1, 5)), max_new_tokens=4))
     eng2.run(max_steps=50)
-    assert dict(eng2.trace_counts) == {(2, 2): 1}   # served from warm cache
+    # served from the warm cache
+    assert dict(eng2.trace_counts) == {("decode", 1, 2): 1}
 
 
 def test_engine_admission_control_under_block_pressure():

@@ -245,6 +245,32 @@ def test_spec_with_chunked_prefill_parity(arch, chunk, lens):
 
 
 @pytest.mark.slow
+def test_spec_hybrid_arch_greedy_parity():
+    """Hybrid attn+ssm+moe stack (jamba) through the unified paged read:
+    spec-on output stays token-identical to spec-off. The n-gram proposer
+    is silent on this arch's non-periodic greedy stream, so a scripted
+    proposer forces partial-acceptance verify rounds to actually fire."""
+    cfg = get_config("jamba-v0.1-52b", reduced=True)
+    params = _params(cfg)
+    prompts = _repetitive_prompts(cfg, (18, 25))
+
+    def run(spec):
+        eng = Engine(cfg, params, max_batch=3, n_blocks=64, block_size=8,
+                     speculate=spec, spec_depth=4)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=10))
+        done = eng.run(max_steps=400)
+        assert len(done) == len(prompts)
+        assert eng.alloc.n_free == eng.alloc.n_blocks
+        return eng, {r.rid: r.output for r in done}
+
+    _, ref = run(None)
+    eng, out = run(ScriptedProposer(ref, good=2))
+    assert eng.stats()["spec_rounds"] > 0      # verify rounds really ran
+    assert out == ref
+
+
+@pytest.mark.slow
 def test_spec_draft_greedy_parity():
     """A draft model with *different* (random) weights proposes mostly
     wrong tokens; acceptance filtering must still leave the target's
@@ -386,6 +412,83 @@ def test_spec_bounded_compile_and_stats():
     # reset_stats clears the speculation counters too
     eng.reset_stats()
     assert eng.stats()["spec_rounds"] == 0
+
+
+def test_tpot_counts_all_spec_accepted_tokens():
+    """tpot() divides by every emitted token, not by engine steps: with a
+    fully-accepting proposer the same generation takes ~1/(depth+1) the
+    steps, and under a tick-per-call fake clock the per-token time must
+    shrink accordingly. A step-counting tpot would stay equal."""
+    import itertools
+
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    prompt = list(range(1, 9))
+
+    def run(spec):
+        tick = itertools.count()
+        eng = Engine(cfg, params, max_batch=1, n_blocks=32, block_size=8,
+                     speculate=spec, spec_depth=4,
+                     clock=lambda: float(next(tick)))
+        eng.submit(Request(rid=0, tokens=list(prompt), max_new_tokens=9))
+        done = eng.run(max_steps=100)
+        return eng, done[0]
+
+    eng_off, r_off = run(None)
+    eng_on, r_on = run(ScriptedProposer(list(r_off.output), good=8))
+    assert r_on.output == r_off.output
+    assert eng_on.steps < eng_off.steps       # several tokens per step
+    # same token count over fewer clock ticks -> strictly smaller tpot
+    assert r_on.tpot() < r_off.tpot()
+    # the denominator is every emitted token after the prefill token
+    assert r_on.tpot() == ((r_on.finish_time - r_on.first_token_time)
+                           / (len(r_on.output) - 1))
+
+
+def test_stats_roundtrip_after_reset():
+    """warmup -> warm burst -> reset_stats -> measured window: stats()
+    reflects ONLY the measured window (request count, token counters,
+    spec proposed/accepted counters and the depth histogram all restart),
+    and the percentile fields stay finite on the empty and singleton
+    windows either side of the reset."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    eng = Engine(cfg, params, max_batch=2, n_blocks=64, block_size=8,
+                 speculate="ngram", spec_depth=4)
+    eng.warmup(32)
+    st0 = eng.stats()                     # empty window: zeros, no raise
+    assert st0["requests"] == 0 and st0["p99_ttft_s"] == 0.0
+    assert st0["spec_rounds"] == 0 and st0["spec_depth_hist"] == {}
+    prompts = _repetitive_prompts(cfg, (12, 16), seed=3)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=8))
+    eng.run(max_steps=300)
+    warm = eng.stats()
+    assert warm["requests"] == 2 and warm["spec_rounds"] > 0
+    traces_before = dict(eng.trace_counts)
+    eng.reset_stats()
+    st1 = eng.stats()
+    assert st1["requests"] == 0 and st1["decode_tokens"] == 0
+    assert st1["prefill_tokens"] == 0 and st1["preemptions"] == 0
+    assert st1["spec_rounds"] == 0 and st1["spec_proposed_tokens"] == 0
+    assert st1["spec_accepted_tokens"] == 0
+    assert st1["spec_depth_hist"] == {}
+    for k in ("p50_ttft_s", "p99_ttft_s", "p50_tpot_s", "p99_tpot_s"):
+        assert st1[k] == 0.0
+    # singleton measured window (same footprint as the warm burst, so it
+    # reuses its executables): percentiles degenerate to the sample
+    eng.submit(Request(rid=9, tokens=list(prompts[0]), max_new_tokens=8))
+    eng.run(max_steps=100)
+    st2 = eng.stats()
+    assert st2["requests"] == 1
+    assert st2["p50_ttft_s"] == st2["p99_ttft_s"] > 0.0
+    assert st2["decode_tokens"] == 7      # 8 output - 1 prefill token
+    assert sum(st2["spec_depth_hist"].values()) == st2["spec_rounds"]
+    # reset kept the compiled executables: no warm-window executable is
+    # ever retraced (a previously-unseen narrow bucket may still compile)
+    for key, n in traces_before.items():
+        assert eng.trace_counts[key] == n
+    assert all(n == 1 for n in eng.trace_counts.values())
 
 
 def test_adaptive_depth_backoff_and_recovery():
