@@ -31,14 +31,26 @@ forward; each ``spec_off_bs*`` row is the identical-workload baseline):
     decode dispatches per round), so wall-clock is dominated by the
     proposer, not the verify forward — the recorded value tracks that
     overhead until the draft gets its own jitted cache (ROADMAP).
+
+Model-parallel rows (``tp{N}_bs4``): the fused decode scenario sharded
+over a forced 8-device CPU mesh at TP in {1, 2, 4, 8} — each degree runs
+in a fresh subprocess (``--model-parallel N`` on this module) because
+``--xla_force_host_platform_device_count`` must be set before the jax
+backend initializes, and forcing it in the parent would distort the
+single-device rows. On CPU smoke these rows measure the *sharding seam
+overhead* (GSPMD psum/all-gather per step on one physical socket), not a
+speedup: smoke-scale math is far below the collective launch cost, so
+tok/s drops as TP rises. The row the TPU deployment cares about is that
+the one-dispatch-per-step contract and token parity hold at every degree.
 """
 import json
 import os
+import sys
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, run_model_parallel_rows
 from repro.configs import get_config
 from repro.data.pipeline import repetitive_requests, serving_requests
 from repro.models.lm import LM
@@ -51,12 +63,14 @@ SPEC_PROMPT_LEN = 24
 SPEC_MAX_NEW = 128
 SPEC_REQUESTS = 6        # 1 unmeasured warmup + 5 measured
 SPEC_PATTERN_SEED = 2
+TP_DEGREES = (1, 2, 4, 8)
+TP_FORCED_DEVICES = 8
 OUT_PATH = os.environ.get("BENCH_DECODE_JSON", "BENCH_decode.json")
 
 
-def _measure(cfg, params, *, max_batch: int, mode: str) -> dict:
+def _measure(cfg, params, *, max_batch: int, mode: str, mesh=None) -> dict:
     eng = Engine(cfg, params, max_batch=max_batch, n_blocks=64,
-                 block_size=8, mode=mode)
+                 block_size=8, mode=mode, mesh=mesh)
     eng.warmup(PROMPT_LEN + MAX_NEW)
     prompts = serving_requests(3 * max_batch, cfg.vocab_size,
                                prompt_len=PROMPT_LEN, seed=0)
@@ -125,6 +139,29 @@ def _measure_spec(cfg, params, *, speculate, spec_depth: int,
     return out
 
 
+def _measure_model_parallel(tp: int) -> dict:
+    """One TP row, meant to run inside a subprocess with the device count
+    already forced (see run()). Token parity with TP=1 is pinned by
+    tests/test_sharded_serving.py; this row records the throughput cost of
+    the sharding seam at each degree."""
+    from repro.launch.mesh import make_local_mesh
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    mesh = make_local_mesh(model=tp, data=1) if tp > 1 else None
+    r = _measure(cfg, params, max_batch=4, mode="fused", mesh=mesh)
+    r["model_parallel"] = tp
+    r["devices"] = len(jax.devices())
+    return r
+
+
+def _run_tp_rows(results: dict) -> None:
+    for tp, r in run_model_parallel_rows("benchmarks.bench_decode",
+                                         TP_DEGREES, TP_FORCED_DEVICES):
+        results["runs"][f"tp{tp}_bs4"] = r
+        emit(f"bench_decode/tp{tp}_bs4", r["decode_time_s"] * 1e6,
+             f"decode_tok_s={r['decode_tok_s']};devices={r['devices']}")
+
+
 def run(spec_depth: int = 8):
     cfg = get_config("qwen1.5-0.5b", reduced=True)
     model = LM(cfg)
@@ -175,10 +212,16 @@ def run(spec_depth: int = 8):
         emit(f"bench_decode/speedup_spec_ngram_{bs_tag}", 0,
              f"{results['runs'][f'speedup_spec_ngram_{bs_tag}']}"
              "x_ngram_over_plain")
+    # --- model-parallel rows: one subprocess per TP degree (forced mesh) ---
+    _run_tp_rows(results)
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
 
 
 if __name__ == "__main__":
-    print("name,us_per_call,derived")
-    run()
+    if "--model-parallel" in sys.argv:
+        tp = int(sys.argv[sys.argv.index("--model-parallel") + 1])
+        print(json.dumps(_measure_model_parallel(tp)))
+    else:
+        print("name,us_per_call,derived")
+        run()

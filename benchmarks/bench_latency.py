@@ -32,14 +32,21 @@ Scenarios (smoke-scale honesty notes inline):
     view hurt. ``prefill_tok_s`` on these rows tracks the paged chunk
     read across PRs (the ``chunk_read_path`` field records which read the
     build used; PR <= 3 values were measured on the dense read).
+  * ``chunked_prefill_tp{N}`` — the chunked scenario on a model-axis-
+    sharded engine (forced 8-device CPU mesh, one subprocess per degree
+    via ``--model-parallel N`` so the device-count flag lands before jax
+    initializes). On one physical socket these price the per-step GSPMD
+    collective seam in the TTFT/TPOT tails — the scheduler behaves
+    identically (host-global policy), so any tail shift is pure seam.
 """
 import json
 import os
+import sys
 import time
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, run_model_parallel_rows
 from repro.configs import get_config
 from repro.data.pipeline import poisson_arrivals, serving_requests
 from repro.models.lm import LM
@@ -56,6 +63,8 @@ OUT_PATH = os.environ.get("BENCH_LATENCY_JSON", "BENCH_latency.json")
 ENGINE_KW = dict(max_batch=4, n_blocks=32, block_size=8)
 PRESSURE_KW = dict(max_batch=4, n_blocks=12, block_size=8)
 LONG_KW = dict(max_batch=4, n_blocks=96, block_size=8)
+TP_DEGREES = (2, 4)      # TP=1 is the plain chunked_prefill row
+TP_FORCED_DEVICES = 8
 
 
 def _drive(eng: Engine, prompts, arrivals, max_new: int) -> None:
@@ -96,14 +105,16 @@ def _warm_prefill_shapes(eng: Engine, cfg, max_new: int,
 
 
 def _measure(cfg, params, *, prefill_chunk, warm=True, engine_kw=None,
-             max_new=MAX_NEW, prompt_lens=PROMPT_LENS) -> dict:
+             max_new=MAX_NEW, prompt_lens=PROMPT_LENS, mesh=None) -> dict:
     engine_kw = engine_kw or ENGINE_KW
-    eng = Engine(cfg, params, prefill_chunk=prefill_chunk, **engine_kw)
+    eng = Engine(cfg, params, prefill_chunk=prefill_chunk, mesh=mesh,
+                 **engine_kw)
     prompts = serving_requests(N_REQUESTS, cfg.vocab_size, seed=0,
                                prompt_lens=prompt_lens)
     arrivals = poisson_arrivals(N_REQUESTS, RATE_RPS, seed=1)
     if warm:
-        eng.warmup(max(prompt_lens) + max_new)
+        eng.warmup(max(prompt_lens) + max_new,
+                   prompt_lens=list(prompt_lens))
         if prefill_chunk is None:   # chunked engines never call _prefill_fwd
             _warm_prefill_shapes(eng, cfg, max_new, prompt_lens)
         _drive(eng, prompts, arrivals, max_new)  # warm decode/chunk buckets
@@ -125,6 +136,29 @@ def _measure(cfg, params, *, prefill_chunk, warm=True, engine_kw=None,
         "mean_queue_s": round(st["mean_queue_s"], 5),
         "preemptions": int(st["preemptions"]),
     }
+
+
+def _measure_model_parallel(tp: int) -> dict:
+    """chunked_prefill scenario on a model-axis-sharded engine; runs in a
+    subprocess with the forced device count (see _run_tp_rows)."""
+    from repro.launch.mesh import make_local_mesh
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    mesh = make_local_mesh(model=tp, data=1) if tp > 1 else None
+    r = _measure(cfg, params, prefill_chunk=CHUNK, mesh=mesh)
+    r["model_parallel"] = tp
+    r["devices"] = len(jax.devices())
+    return r
+
+
+def _run_tp_rows(results: dict) -> None:
+    for tp, r in run_model_parallel_rows("benchmarks.bench_latency",
+                                         TP_DEGREES, TP_FORCED_DEVICES):
+        results["runs"][f"chunked_prefill_tp{tp}"] = r
+        emit(f"bench_latency/chunked_prefill_tp{tp}",
+             r["p95_ttft_s"] * 1e6,
+             f"p50_ttft_s={r['p50_ttft_s']};p95_tpot_s={r['p95_tpot_s']};"
+             f"tok_s={r['throughput_tok_s']};devices={r['devices']}")
 
 
 def run():
@@ -166,10 +200,15 @@ def run():
              f"p95_tpot_s={r['p95_tpot_s']};preempt={r['preemptions']};"
              f"tok_s={r['throughput_tok_s']};"
              f"prefill_tok_s={r['prefill_tok_s']}")
+    _run_tp_rows(results)
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
 
 
 if __name__ == "__main__":
-    print("name,us_per_call,derived")
-    run()
+    if "--model-parallel" in sys.argv:
+        tp = int(sys.argv[sys.argv.index("--model-parallel") + 1])
+        print(json.dumps(_measure_model_parallel(tp)))
+    else:
+        print("name,us_per_call,derived")
+        run()

@@ -25,3 +25,33 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def run_model_parallel_rows(module: str, degrees, forced_devices: int):
+    """Yield (tp, row_dict) for each TP degree by re-running ``module``
+    (a ``python -m``-able benchmark) in a subprocess with the CPU device
+    count forced. ``--xla_force_host_platform_device_count`` must land
+    before the jax backend initializes, and forcing it in the parent
+    would distort its single-device rows — hence one subprocess per
+    degree, each printing a single JSON line (its module's
+    ``--model-parallel`` branch). Failed degrees are reported to stderr
+    and skipped so a bench sweep never dies on the sharded rows."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{forced_devices}").strip()
+    for tp in degrees:
+        proc = subprocess.run(
+            [sys.executable, "-m", module, "--model-parallel", str(tp)],
+            capture_output=True, text=True, env=env)
+        lines = proc.stdout.splitlines()
+        if proc.returncode != 0 or not lines:
+            print(f"# {module} tp{tp} subprocess failed:\n"
+                  f"{proc.stderr[-2000:]}", file=sys.stderr)
+            continue
+        yield tp, json.loads(lines[-1])

@@ -7,10 +7,36 @@ touches jax device state.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+
+
+def ensure_host_devices(n: int) -> None:
+    """Make the CPU backend expose at least ``n`` devices (test / smoke
+    meshes, e.g. ``--model-parallel 8`` on a laptop). Sets
+    ``--xla_force_host_platform_device_count=n`` in XLA_FLAGS — raising an
+    existing smaller value in place — which only takes effect if the
+    backend has not initialized yet; raises with the manual incantation
+    when it is too late (some import already touched jax device state)."""
+    if n <= 1:
+        return
+    flag = "--xla_force_host_platform_device_count"
+    tokens = os.environ.get("XLA_FLAGS", "").split()
+    for t in tokens:                      # never LOWER an explicit count
+        if t.startswith(flag + "="):
+            try:
+                n = max(n, int(t.split("=", 1)[1]))
+            except ValueError:
+                pass
+    kept = [t for t in tokens if not t.startswith(flag)]
+    os.environ["XLA_FLAGS"] = " ".join(kept + [f"{flag}={n}"])
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"need {n} devices but the jax backend initialized with "
+            f"{len(jax.devices())}; relaunch with XLA_FLAGS={flag}={n}")
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,7 +50,9 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
 
 
 def make_local_mesh(model: int = 1, data: Optional[int] = None):
-    """Mesh over whatever devices exist (tests / CPU smoke runs)."""
+    """Mesh over whatever devices exist (tests / CPU smoke runs). The
+    serving engine uses ``make_local_mesh(model=N, data=1)``: a pure
+    model-parallel mesh — the batch is host-global, only tensors shard."""
     n = len(jax.devices())
     data = data or (n // model)
     assert data * model <= n, (data, model, n)

@@ -7,6 +7,19 @@ sequence share each page-tile fetch — the Pallas kernel on TPU, a
 bounded column loop elsewhere — so every mode below exercises the same
 read path at a different window width.
 
+``--model-parallel N`` shards the whole engine over the ``model`` axis
+of a local mesh (forcing N host devices on CPU when needed): parameters
+partition through the same ShardCtx specs training uses, the paged
+KV/SSM pools split on their head axes (each shard owns K/tp heads of
+every page — writes, truncation and null-writes stay shard-local), and
+every jitted step computes per-shard paged attention partials that
+LSE-merge shard-locally, with the model-axis psum/all-gather surfacing
+only at the row-parallel seams (wo, MLP down-proj, logits). The
+scheduler and block accounting stay host-global — policy is
+device-count-agnostic — and each engine step is still ONE dispatch.
+Greedy output is token-identical to --model-parallel 1 (sharded dense
+contractions accumulate in f32, see models/layers.dense).
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --requests 16 --int8-kv          # fused jit decode (default)
     PYTHONPATH=src python -m repro.launch.serve --legacy   # per-layer loop
@@ -16,20 +29,46 @@ read path at a different window width.
         --speculate ngram --spec-depth 8     # prompt-lookup speculation
     PYTHONPATH=src python -m repro.launch.serve \
         --speculate draft:qwen1.5-0.5b       # draft-model speculation
+    PYTHONPATH=src python -m repro.launch.serve \
+        --model-parallel 4                   # model-axis-sharded serving
 """
 import argparse
+from typing import List, Optional
 
-import jax
 
-from repro.configs import get_config, list_archs
-from repro.data.pipeline import serving_requests
-from repro.models.lm import LM
-from repro.serving.engine import Engine, Request
+def parse_mixed_lens(text: Optional[str]) -> Optional[List[int]]:
+    """Parse ``--mixed-lens`` ("16,64,24") into prompt lengths, rejecting
+    malformed input at the CLI boundary: empty entries ("16,,24"), junk
+    tokens and non-positive lengths used to surface as a bare ValueError
+    deep in ``int()`` — or worse, "0" built a degenerate empty-prompt
+    request that the engine only rejects many layers later."""
+    if text is None:
+        return None
+    lens: List[int] = []
+    for tok in text.split(","):
+        tok = tok.strip()
+        if not tok:
+            raise ValueError(
+                f"--mixed-lens {text!r}: empty entry (double or trailing "
+                f"comma?) — expected comma-separated positive ints")
+        try:
+            val = int(tok)
+        except ValueError:
+            raise ValueError(
+                f"--mixed-lens {text!r}: {tok!r} is not an integer") \
+                from None
+        if val < 1:
+            raise ValueError(
+                f"--mixed-lens {text!r}: prompt length {val} must be >= 1")
+        lens.append(val)
+    return lens
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
+    # import inside main: --model-parallel may need to force host devices
+    # before anything initializes the jax backend
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=8)
@@ -52,6 +91,11 @@ def main():
     ap.add_argument("--spec-depth", type=int, default=4,
                     help="max proposed tokens per verify round (adaptive "
                          "back-off may use less)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="shard the engine over a model-axis mesh of N "
+                         "devices (params via ShardCtx specs, paged KV/SSM "
+                         "pools on their head axes); forces N host devices "
+                         "on CPU. Greedy output is token-identical to N=1")
     grp = ap.add_mutually_exclusive_group()
     grp.add_argument("--fused", dest="mode", action="store_const",
                      const="fused", help="jit-compiled decode step (default)")
@@ -60,18 +104,44 @@ def main():
     ap.set_defaults(mode="fused")
     args = ap.parse_args()
 
+    if args.model_parallel > 1:
+        from repro.launch.mesh import ensure_host_devices
+        ensure_host_devices(args.model_parallel)
+
+    import jax
+
+    from repro.configs import get_config, list_archs
+    from repro.data.pipeline import serving_requests
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.lm import LM
+    from repro.serving.engine import Engine, Request
+
+    if args.arch not in list_archs():
+        ap.error(f"unknown --arch {args.arch!r} (choose from "
+                 f"{', '.join(list_archs())})")
+    try:
+        lens = parse_mixed_lens(args.mixed_lens)
+    except ValueError as e:
+        ap.error(str(e))
+    mesh = (make_local_mesh(model=args.model_parallel, data=1)
+            if args.model_parallel > 1 else None)
+
     cfg = get_config(args.arch, reduced=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    lens = ([int(t) for t in args.mixed_lens.split(",")]
-            if args.mixed_lens else None)
     eng = Engine(cfg, params, max_batch=args.max_batch,
                  n_blocks=args.n_blocks, block_size=args.block_size,
                  kv_quant="int8" if args.int8_kv else "none",
                  mode=args.mode,
                  prefill_chunk=args.prefill_chunk or None,
-                 speculate=args.speculate, spec_depth=args.spec_depth)
-    eng.warmup(max(lens or [args.prompt_len]) + args.max_new)
+                 speculate=args.speculate, spec_depth=args.spec_depth,
+                 mesh=mesh)
+    # warm every chunk-step table bucket the trace implies, not just the
+    # widest: each distinct prompt length compiles its own footprint bucket
+    # (a uniform trace still needs its prompt bucket, which can differ from
+    # the max-footprint bucket warmup's max_seq_len argument implies)
+    eng.warmup(max(lens or [args.prompt_len]) + args.max_new,
+               prompt_lens=lens or [args.prompt_len])
     for i, p in enumerate(serving_requests(args.requests, cfg.vocab_size,
                                            prompt_len=args.prompt_len,
                                            prompt_lens=lens)):

@@ -56,18 +56,25 @@ def attn_specs(cfg: ArchConfig, n_stack: int, cross: bool = False) -> Dict:
 
 
 def _qkv(x, p, cfg: ArchConfig, ctx, positions, rope: bool = True):
-    q = L.dense(x, p["wq"], bias=p.get("bq"))
-    k = L.dense(x, p["wk"], bias=p.get("bk"))
-    v = L.dense(x, p["wv"], bias=p.get("bv"))
+    # the projection -> norm -> rope chain runs as REAL f32 tensors with
+    # ONE rounding at the end (qk_headnorm and apply_rope are dtype-
+    # preserving, so f32 stays f32 throughout). Intermediate narrowing
+    # here is the excess-precision trap described in layers.swiglu: which
+    # rounds survive would depend on fusion shape, and q/k/v feed int8 KV
+    # quantization in the serving engine, where a one-ulp input flip moves
+    # a whole vector's scale.
+    q = L.dense(x, p["wq"], bias=p.get("bq"), out_dtype=jnp.float32)
+    k = L.dense(x, p["wk"], bias=p.get("bk"), out_dtype=jnp.float32)
+    v = L.dense(x, p["wv"], bias=p.get("bv"), out_dtype=jnp.float32)
     if cfg.qk_norm:
         q = L.qk_headnorm(q, p["q_norm"], cfg.norm_eps)
         k = L.qk_headnorm(k, p["k_norm"], cfg.norm_eps)
     if rope:
         q = L.apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
-    q = _constrain(ctx, q, "act_q")
-    k = _constrain(ctx, k, "act_kv")
-    v = _constrain(ctx, v, "act_kv")
+    q = _constrain(ctx, q.astype(x.dtype), "act_q")
+    k = _constrain(ctx, k.astype(x.dtype), "act_kv")
+    v = _constrain(ctx, v.astype(x.dtype), "act_kv")
     return q, k, v
 
 
@@ -187,10 +194,20 @@ def _route(h, router_w, cfg: ArchConfig):
 
 
 def _expert_ffn(xs, wg, wu, wd):
-    """xs: (E, C, D); weights (E, D, F)/(E, F, D). Batched SwiGLU."""
-    g = jnp.einsum("ecd,edf->ecf", xs, wg)
-    u = jnp.einsum("ecd,edf->ecf", xs, wu)
-    return jnp.einsum("ecf,efd->ecd", L.silu(g) * u, wd)
+    """xs: (E, C, D); weights (E, D, F)/(E, F, D). Batched SwiGLU.
+
+    Accumulates in f32 and keeps the gate activation in f32 into the down
+    projection, rounding once at the end — same rationale as
+    layers.swiglu: the EP shard_map boundary (and a TP-sharded mlp axis)
+    changes fusion shapes, and any bf16 materialization point that XLA's
+    excess-precision pass elides in one executable but not the other
+    breaks the EP-vs-local (and TP-vs-single-device) bitwise match."""
+    g = jnp.einsum("ecd,edf->ecf", xs, wg,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xs, wu,
+                   preferred_element_type=jnp.float32)
+    return jnp.einsum("ecf,efd->ecd", L.silu(g) * u, wd,
+                      preferred_element_type=jnp.float32).astype(xs.dtype)
 
 
 def _moe_local(h, p, cfg: ArchConfig, capacity_mult: float) -> Tuple[jax.Array, jax.Array]:
@@ -221,9 +238,11 @@ def _moe_local(h, p, cfg: ArchConfig, capacity_mult: float) -> Tuple[jax.Array, 
     ys = _expert_ffn(buf[:-1].reshape(e, cap, d), wg, wu, wd)   # (E,C,D)
     ys = jnp.concatenate([ys.reshape(e * cap, d),
                           jnp.zeros((1, d), h.dtype)])
-    gathered = ys[slot] * flat_w[:, None].astype(h.dtype)       # (n*k, D)
-    out = jnp.zeros((n, d), h.dtype).at[flat_t].add(
-        jnp.where(keep[:, None], gathered, 0))
+    # gate-weighted combine in f32, rounded once — must stay structurally
+    # identical to the _moe_ep tail (bitwise EP-vs-local contract)
+    gathered = ys[slot].astype(jnp.float32) * flat_w[:, None]   # (n*k, D)
+    out = jnp.zeros((n, d), jnp.float32).at[flat_t].add(
+        jnp.where(keep[:, None], gathered, 0.0)).astype(h.dtype)
     return out.reshape(orig_shape), aux
 
 
@@ -277,9 +296,10 @@ def _moe_ep(h, p, cfg: ArchConfig, ctx, capacity_mult: float):
         back = jax.lax.all_to_all(ys, maxis, 0, 0, tiled=False)
         back = jnp.concatenate([back.reshape(e * cap, d),
                                 jnp.zeros((1, d), hh.dtype)])
-        gathered = back[slot] * flat_w[:, None].astype(hh.dtype)
-        out = jnp.zeros((n, d), hh.dtype).at[flat_t].add(
-            jnp.where(keep[:, None], gathered, 0))
+        # f32 combine, rounded once — mirrors the _moe_local tail exactly
+        gathered = back[slot].astype(jnp.float32) * flat_w[:, None]
+        out = jnp.zeros((n, d), jnp.float32).at[flat_t].add(
+            jnp.where(keep[:, None], gathered, 0.0)).astype(hh.dtype)
         # aux loss: average over every mesh axis the input is split on
         aux = jax.lax.pmean(aux, maxis)
         for ax in (dp if isinstance(dp, tuple) else (dp,)):
@@ -352,9 +372,17 @@ def _ssm_pre(h, p, cfg: ArchConfig, conv_state=None, capture_tail=False,
     ``n_valid`` (scalar, chunked prefill only) marks the valid prefix of a
     right-padded chunk: dt is zeroed past it (a state-neutral no-op for the
     SSD recurrence) and the carried conv tail is taken from the last valid
-    inputs instead of the padding."""
+    inputs instead of the padding.
+
+    The whole pre-pipeline (in_proj output, conv, silu, splits) runs as
+    REAL f32 tensors — no narrowing convert between ops — and the conv
+    history cache stores f32 (see :func:`ssm_init_cache`), so the values
+    crossing the ssm_x/ssm_bc/ssm_dt sharding-constraint boundaries are
+    bit-identical in every compilation (eager legacy, jit fused, TP-
+    sharded); narrowing here is a fusion-dependent excess-precision trap,
+    see layers.swiglu."""
     di, g, ns, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
-    zxbcdt = L.dense(h, p["in_proj"])
+    zxbcdt = L.dense(h, p["in_proj"], out_dtype=jnp.float32)
     z = zxbcdt[..., :di]
     xbc = zxbcdt[..., di: di + di + 2 * g * ns]
     dt = zxbcdt[..., di + di + 2 * g * ns:]
@@ -436,7 +464,9 @@ def ssm_apply(x, p, cfg: ArchConfig, ctx, *, cache: Optional[Dict] = None,
     y = y.reshape(b, t, cfg.d_inner)
     y = L.rmsnorm(y * L.silu(z), p["norm"], cfg.norm_eps)
     y = _constrain(ctx, y, "act_ssm")
-    out = L.dense(y, p["out_proj"])
+    # f32 all the way through out_proj (row-parallel psum under TP), ONE
+    # rounding into the residual dtype
+    out = L.dense(y, p["out_proj"]).astype(x.dtype)
     return x + _constrain(ctx, out, "hidden"), new_cache
 
 
@@ -465,7 +495,9 @@ def ssm_apply_spec(x, p, cfg: ArchConfig, ctx, *, cache: Dict,
     b, t = x.shape[0], x.shape[1]
     h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
-    zxbcdt = L.dense(h, p["in_proj"])
+    # f32 pre-pipeline, mirroring _ssm_pre bit-for-bit (the verify scan
+    # must match sequential decode steps exactly)
+    zxbcdt = L.dense(h, p["in_proj"], out_dtype=jnp.float32)
     z = zxbcdt[..., :di]
     xbc = zxbcdt[..., di: di + di + 2 * g * ns]
     dt = zxbcdt[..., di + di + 2 * g * ns:]
@@ -489,14 +521,19 @@ def ssm_apply_spec(x, p, cfg: ArchConfig, ctx, *, cache: Dict,
                                     cache["state"], valid=valid)
     y = y.reshape(b, t, di)
     y = L.rmsnorm(y * L.silu(z), p["norm"], cfg.norm_eps)
-    out = L.dense(y, p["out_proj"])
+    out = L.dense(y, p["out_proj"]).astype(x.dtype)
     return x + out, {"conv": conv_states, "state": ssd_states}
 
 
-def ssm_init_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+def ssm_init_cache(cfg: ArchConfig, batch: int) -> Dict:
+    # both leaves are f32: the SSD state always was, and the conv history
+    # now stores the f32 pre-pipeline values unrounded — a bf16 conv cache
+    # would make a chunk-continued conv differ from the whole-prompt one
+    # at chunk boundaries (stored-rounded vs in-flight history) and break
+    # the bitwise chunk-carry contract. It is (B, W-1, C): tiny.
     conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
     return {
-        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.float32),
         "state": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_headdim,
                             cfg.ssm_state), jnp.float32),
     }

@@ -19,16 +19,25 @@ import numpy as np
 # --------------------------------------------------------------------------
 
 
-def dense(x: jax.Array, w, n_in: int = 1, bias=None, precision=None):
+def dense(x: jax.Array, w, n_in: int = 1, bias=None, precision=None,
+          out_dtype=None):
     """Contract the last ``n_in`` dims of ``x`` with the first ``n_in`` dims
-    of ``w``; output gets ``w``'s remaining dims. Dispatches on weight type."""
+    of ``w``; output gets ``w``'s remaining dims. Dispatches on weight type.
+
+    ``out_dtype=jnp.float32`` keeps the f32 accumulator as the output with
+    no narrowing convert at all — for callers that feed the result straight
+    into more f32 math (swiglu's gate chain, the SSM pre-pipeline) and want
+    the value that crosses a sharding-constraint or fusion boundary to be
+    identical in every compilation (see the swiglu comment)."""
     from repro.quant.qtensor import QTensor        # local import: no cycles
     from repro.peft.lora import LoRATensor
 
     if isinstance(w, LoRATensor):
-        y = dense(x, w.base, n_in=n_in, precision=precision)
+        y = dense(x, w.base, n_in=n_in, precision=precision,
+                  out_dtype=out_dtype)
         t = dense(x, w.a, n_in=n_in, precision=precision)      # (..., r)
-        y = y + w.scaling * dense(t, w.b, n_in=1, precision=precision)
+        y = y + w.scaling * dense(t, w.b, n_in=1, precision=precision,
+                                  out_dtype=out_dtype)
         if bias is not None:
             y = y + bias
         return y
@@ -40,8 +49,20 @@ def dense(x: jax.Array, w, n_in: int = 1, bias=None, precision=None):
     out_dims = w.shape[n_in:]
     x2 = x.reshape(in_shape + (k,))
     w2 = w.reshape((k,) + (int(np.prod(out_dims)) if out_dims else 1,))
+    # accumulate in f32 and round ONCE. For low-precision inputs this is
+    # what the backends do internally anyway (bitwise-identical output on
+    # an unsharded dot), but stating it in the graph matters under tensor
+    # parallelism: when GSPMD splits the contracted dim, the cross-shard
+    # psum now adds exact f32 partial sums instead of bf16-rounded ones,
+    # so a TP=N dense differs from TP=1 by f32 reorder noise (~1 ulp of
+    # f32) rather than 1 ulp of bf16 — which is what keeps model-parallel
+    # serving greedy-token-identical to single-device serving.
+    out_dt = out_dtype or jnp.result_type(x2.dtype, w2.dtype)
+    acc = (jnp.promote_types(jnp.float32, out_dt)
+           if jnp.issubdtype(out_dt, jnp.floating) else out_dt)
     y = jax.lax.dot_general(x2, w2, (((x2.ndim - 1,), (0,)), ((), ())),
-                            precision=precision)
+                            precision=precision,
+                            preferred_element_type=acc).astype(out_dt)
     y = y.reshape(in_shape + tuple(out_dims))
     if bias is not None:
         y = y + bias
@@ -72,12 +93,22 @@ def silu(x):
 
 
 def swiglu(x, w_gate, w_up, w_down, act_constraint=None):
-    g = dense(x, w_gate)
-    u = dense(x, w_up)
+    # the whole gate chain is REAL f32 tensors — no narrowing convert
+    # anywhere between the projections — with ONE rounding at the end.
+    # Any intermediate bf16 materialization here is a trap: a narrowing
+    # convert immediately re-widened by the next op is exactly the pair
+    # XLA's excess-precision pass may elide, and whether it elides depends
+    # on fusion shape — which differs between eager and jit (the legacy
+    # vs fused engine paths) and between TP=1 and TP=N (a sharding
+    # constraint on h breaks the fusion). Keeping the chain f32 gives
+    # every compilation the same values bit-for-bit; the final astype is
+    # a real op in all of them.
+    g = dense(x, w_gate, out_dtype=jnp.float32)
+    u = dense(x, w_up, out_dtype=jnp.float32)
     h = silu(g) * u
     if act_constraint is not None:
         h = act_constraint(h)
-    return dense(h, w_down)
+    return dense(h, w_down).astype(x.dtype)
 
 
 # --------------------------------------------------------------------------

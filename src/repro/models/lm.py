@@ -341,7 +341,7 @@ class LM:
             else:
                 c = jax.tree_util.tree_map(
                     lambda x: jnp.zeros((self.n_periods,) + x.shape, x.dtype),
-                    B.ssm_init_cache(cfg, batch, dtype))
+                    B.ssm_init_cache(cfg, batch))
             if cfg.n_enc_layers:
                 ckv = jnp.zeros((self.n_periods, batch, src_len,
                                  cfg.n_kv_heads, cfg.head_dim), dtype)

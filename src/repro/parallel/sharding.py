@@ -113,11 +113,29 @@ class ShardCtx:
         if kind == "head":
             return P(None, self._mdl(shape[1]))
         if kind == "kv_cache":
+            # head mode splits the KV-head axis (each shard owns K/tp heads
+            # of the whole sequence — matches head-sharded attention reads);
+            # seq mode — or a head count the degree does not divide — splits
+            # the sequence axis instead (context parallelism): an
+            # indivisible head axis must NOT fall back to replication, which
+            # would multiply per-device cache memory by the TP degree
+            if not seq and self._mdl(shape[2]) is not None:
+                return P(self._dp(shape[0]), None, self._mdl(shape[2]), None)
             return P(self._dp(shape[0]), self._mdl(shape[1]), None, None)
         if kind == "kv_cache_stack":
-            return P(None, self._dp(shape[1]), self._mdl(shape[2]), None, None)
+            if not seq and self._mdl(shape[3]) is not None:
+                return P(None, self._dp(shape[1]), None, self._mdl(shape[3]),
+                         None)
+            return P(None, self._dp(shape[1]), self._mdl(shape[2]),
+                     None, None)
         if kind == "tokens":
             return P(self._dp(shape[0]), None)
+        if kind == "kv_pool":
+            # paged serving storage (L, n_blocks, block, K, hd): split the
+            # KV-head axis so every shard owns K/tp heads of every page;
+            # block tables and the allocator stay host-global, and the
+            # engine's scatters/gathers are shard-local by construction
+            return P(None, None, None, self._mdl(shape[3]), None)
         raise KeyError(kind)
 
     def constrain(self, x: jax.Array, kind: str) -> jax.Array:
@@ -155,6 +173,29 @@ def make_shard_ctx(cfg: ArchConfig, technique: Technique,
         attn_mode = "head" if (cfg.n_heads == 0 or msize <= 1
                                or cfg.n_heads % msize == 0) else "seq"
     return ShardCtx(mesh, dp, model_axis, attn_mode, technique, cfg)
+
+
+def make_serving_ctx(cfg: ArchConfig, mesh: Mesh) -> ShardCtx:
+    """Model-axis TP context for the serving engine.
+
+    Serving shards only over the mesh's ``model`` axis: the scheduler,
+    block tables and batch slots are host-global (policy is device-count-
+    agnostic), so there is no data axis — the batch is replicated and every
+    collective the steps emit is a model-axis psum/all-gather at the
+    row-parallel seams (wo, MLP down-proj, logits). Attention is pinned to
+    head mode: the paged KV pool splits on the KV-head axis (``kv_pool``)
+    and each shard computes complete (o, m, l) partials for its own heads
+    — LSE-merging via merge_partials stays shard-local, never a collective.
+    Axes that don't divide the TP degree (e.g. 4 smoke KV heads at tp=8)
+    degrade to replication per tensor, not an error, exactly like training.
+    """
+    if mesh is None:
+        return None
+    if "model" not in mesh.axis_names:
+        raise ValueError(f"serving mesh needs a 'model' axis, got "
+                         f"{mesh.axis_names}")
+    return ShardCtx(mesh, dp_axes=(), model_axis="model", attn_mode="head",
+                    technique=Technique(tp=True), cfg=cfg)
 
 
 # ==========================================================================

@@ -54,20 +54,40 @@ class BlockAllocator:
 
     Contract: ``alloc(n)`` either returns exactly ``n`` block ids or raises
     :class:`OutOfBlocks` — it never returns ``None`` or a partial list.
+    ``release`` enforces the owned/free invariant: every id must be a real
+    block that is currently *owned* (allocated and not yet freed). A
+    double-release used to silently append the id to the free list twice,
+    after which two requests could be handed the same block and corrupt
+    each other's KV; now it raises ``ValueError`` at the offending call.
     """
 
     def __init__(self, n_blocks: int):
         self.free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._free_set = set(self.free)
         self.n_blocks = n_blocks
 
     def alloc(self, n: int) -> List[int]:
         if len(self.free) < n:
             raise OutOfBlocks(
                 f"requested {n} blocks, only {len(self.free)} free")
-        return [self.free.pop() for _ in range(n)]
+        out = [self.free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
+        return out
 
     def release(self, blocks: List[int]) -> None:
+        seen = set()
+        for b in blocks:
+            if b < 0 or b >= self.n_blocks:
+                raise ValueError(f"release of block {b} outside the pool "
+                                 f"[0, {self.n_blocks})")
+            if b in self._free_set or b in seen:
+                raise ValueError(
+                    f"double release of block {b}: it is already on the "
+                    f"free list (freed blocks may have been reallocated — "
+                    f"this would hand one page to two owners)")
+            seen.add(b)
         self.free.extend(blocks)
+        self._free_set.update(blocks)
 
     @property
     def n_free(self) -> int:
@@ -84,11 +104,19 @@ class BlockAllocator:
 
 def quant_encode(x: jax.Array, kv_quant: str
                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Encode activations for storage: identity, or int8 + per-vector scale."""
+    """Encode activations for storage: identity, or int8 + per-vector scale.
+
+    The scale multiplies by the f32 constant 1/127 instead of dividing by
+    127: XLA rewrites division-by-constant into reciprocal-multiplication
+    in some compilations and not others (fusion-context dependent), and a
+    one-f32-ulp scale difference between the eager legacy path and the
+    jitted fused step shifts dequantized attention reads enough to split
+    their greedy tokens. Stating the multiply makes every compilation —
+    eager, jit, TP-sharded — produce the same scale bits."""
     if kv_quant != "int8":
         return x, None
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-6) / 127.0
+    scale = jnp.maximum(amax, 1e-6) * np.float32(1.0 / 127.0)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
                  -127, 127).astype(jnp.int8)
     return q, scale
@@ -101,8 +129,16 @@ def quant_decode(q: jax.Array, scale: Optional[jax.Array],
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
-def init_state(cfg: PagedKVConfig, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
-    """Fresh storage pytree: k/v (L, n_blocks, block, K, hd) (+ scales)."""
+def init_state(cfg: PagedKVConfig, dtype=jnp.bfloat16,
+               sharding=None) -> Dict[str, jax.Array]:
+    """Fresh storage pytree: k/v (L, n_blocks, block, K, hd) (+ scales).
+
+    ``sharding`` (optional ``jax.sharding.Sharding``) places every leaf —
+    the model-parallel serving engine passes a NamedSharding that splits
+    the KV-head axis over the mesh's ``model`` axis, so each shard owns
+    ``K / tp`` heads of every page and all writes/reads stay shard-local
+    (the scale leaves share the same spec: their K axis lines up).
+    """
     store_dtype = jnp.int8 if cfg.kv_quant == "int8" else dtype
     shape = (cfg.n_layers, cfg.n_blocks, cfg.block_size,
              cfg.n_kv_heads, cfg.head_dim)
@@ -113,6 +149,8 @@ def init_state(cfg: PagedKVConfig, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
                   cfg.n_kv_heads, 1)
         state["k_scale"] = jnp.ones(sshape, jnp.float32)
         state["v_scale"] = jnp.ones(sshape, jnp.float32)
+    if sharding is not None:
+        state = jax.device_put(state, sharding)
     return state
 
 
@@ -255,11 +293,17 @@ def gather(state: Dict[str, jax.Array], layer: int, block_table: jax.Array,
 class PagedKVCache:
     """Device storage: (L, n_blocks, block, K, hd) per k/v (+ int8 scales).
     Thin stateful wrapper over the pure functions above: every method
-    rebinds ``self.state`` to the functionally-updated pytree."""
+    rebinds ``self.state`` to the functionally-updated pytree.
 
-    def __init__(self, cfg: PagedKVConfig, dtype=jnp.bfloat16):
+    ``sharding`` (see :func:`init_state`) lays the pool out over a mesh —
+    the model-parallel engine splits the KV-head axis so every shard holds
+    its heads of every page."""
+
+    def __init__(self, cfg: PagedKVConfig, dtype=jnp.bfloat16,
+                 sharding=None):
         self.cfg = cfg
-        self.state = init_state(cfg, dtype)
+        self.sharding = sharding
+        self.state = init_state(cfg, dtype, sharding)
 
     # attribute views kept for existing call sites / tests
     @property

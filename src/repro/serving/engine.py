@@ -72,6 +72,29 @@ speculation depth adapts to acceptance (Speculator back-off), and
 ``stats()`` reports accept_rate, proposed/accepted counters and the
 verify-round depth histogram.
 
+**Model-parallel sharding** (``mesh=``, a mesh with a ``model`` axis; see
+launch/serve.py ``--model-parallel``). One serving ShardCtx
+(parallel/sharding.make_serving_ctx) drives every placement: parameters
+partition through the same ``state_shardings`` resolver training uses,
+the paged KV pool splits its KV-head axis (``kv_pool`` spec — each shard
+owns K/tp heads of every page, so appends, truncation and the null-write
+sentinel stay shard-local), and the SSM pools split their conv-channel /
+SSD-head axes. All three jit steps then compute *per-shard* paged
+attention partials — head-sharded (o, m, l) merge shard-locally via
+merge_partials, never a collective — and GSPMD materializes the
+model-axis psum/all-gather at the row-parallel seams (wo, MLP down-proj,
+SSM out_proj, logits), so each engine step is still ONE dispatch and
+``trace_counts`` is degree-invariant. The scheduler, block tables and
+allocator stay host-global: policy is device-count-agnostic, which is
+what makes TP-vs-single-device scheduling (and therefore preemption
+behavior) identical. Greedy output is token-identical to the unsharded
+engine: sharded contractions accumulate in f32 (models/layers.dense) and
+every value crossing a constraint boundary is computed at an explicit
+precision (layers.swiglu, blocks._qkv/_ssm_pre/_expert_ffn,
+cache.quant_encode), so TP differences are f32 reorder noise instead of
+fusion-dependent bf16 rounding. The multi-host follow-up (a DCN axis
+over this same seam) is in ROADMAP.
+
 **Legacy decode** (``mode="legacy"``) keeps the paper-baseline per-layer
 Python hot loop: per-layer eager dispatch, dense block gather, naive
 attention. It exists as the measured baseline for benchmarks/bench_decode
@@ -90,11 +113,14 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.config import ArchConfig
 from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models.lm import LM
+from repro.parallel.sharding import make_serving_ctx, state_shardings, \
+    logical_by_path_of
 from repro.serving import cache as C
 from repro.serving.cache import PagedKVCache, PagedKVConfig
 from repro.serving.scheduler import RUNNING, Request, Scheduler
@@ -129,7 +155,7 @@ class Engine:
                  n_blocks: int = 64, block_size: int = 16,
                  kv_quant: str = "none", greedy: bool = True,
                  mode: str = "fused", prefill_chunk: Optional[int] = None,
-                 speculate=None, spec_depth: int = 4,
+                 speculate=None, spec_depth: int = 4, mesh=None,
                  clock=time.monotonic):
         if mode not in ("fused", "legacy"):
             raise ValueError(f"mode must be 'fused' or 'legacy', got {mode!r}")
@@ -137,8 +163,25 @@ class Engine:
         if self.spec is not None and mode != "fused":
             raise ValueError("speculative decoding requires mode='fused' "
                              "(the verify step shares the fused layer body)")
+        if mesh is not None and mode != "fused":
+            raise ValueError("model-parallel serving requires mode='fused' "
+                             "(the legacy per-layer loop stays the "
+                             "single-device parity oracle)")
         self.cfg = cfg
-        self.model = LM(cfg)
+        # model-axis sharding: one ShardCtx drives every placement — params
+        # through the training-side state_shardings resolver, activations
+        # through the blocks' constrain() calls, the paged KV pool through
+        # the "kv_pool" spec (KV-head axis split). The scheduler and block
+        # accounting stay host-global: policy is device-count-agnostic.
+        self.mesh = mesh
+        self._ctx = make_serving_ctx(cfg, mesh) if mesh is not None else None
+        self.tp_degree = int(mesh.shape["model"]) if mesh is not None else 1
+        self.model = LM(cfg, ctx=self._ctx)
+        if self._ctx is not None:
+            logical = logical_by_path_of(self.model.param_specs())
+            params = jax.device_put(
+                params, state_shardings(self._ctx, params, logical,
+                                        component="params"))
         self.params = params
         self.max_batch = max_batch
         self.block_size = block_size
@@ -157,13 +200,23 @@ class Engine:
             n_layers=max(n_attn, 1), n_kv_heads=max(cfg.n_kv_heads, 1),
             head_dim=max(cfg.head_dim, 1), n_blocks=n_blocks,
             block_size=block_size, kv_quant=kv_quant)
-        self.kv = PagedKVCache(self.kv_cfg)
+        kv_sharding = None
+        if self._ctx is not None:
+            pool_shape = (self.kv_cfg.n_layers, n_blocks, block_size,
+                          self.kv_cfg.n_kv_heads, self.kv_cfg.head_dim)
+            kv_sharding = NamedSharding(
+                mesh, self._ctx.spec_for("kv_pool", pool_shape))
+        self.kv = PagedKVCache(self.kv_cfg, sharding=kv_sharding)
         self.sched = Scheduler(max_batch=max_batch, n_blocks=n_blocks,
                                block_size=block_size,
                                prefill_chunk=prefill_chunk)
         self.finished: List[Request] = []
         self._ssm_states = self._init_ssm_states()
-        self._paged_impl = ("pallas" if jax.default_backend() == "tpu"
+        # under a mesh the XLA read partitions on the (sharded) KV-head
+        # axis of the pool out of the box; running the Pallas kernel
+        # per-shard needs a shard_map wrapper — the multi-host ROADMAP item
+        self._paged_impl = ("pallas"
+                            if jax.default_backend() == "tpu" and mesh is None
                             else "xla")
         # one executable per (kind, T, table-bucket) triple — kinds are
         # "decode" (T=1), "chunk" and "verify"; trace_counts
@@ -218,7 +271,48 @@ class Engine:
             states[f"pos{pos}"] = jax.tree_util.tree_map(
                 lambda x: jnp.zeros((model.n_periods,) + x.shape, x.dtype),
                 base)
+        sh = self._ssm_sharding_tree(states)
+        if sh is not None:
+            states = jax.device_put(states, sh)
         return states
+
+    def _ssm_sharding_tree(self, states):
+        """NamedSharding tree for the dense per-slot SSM pools: the model
+        axis splits the same feature dims the ssm weights shard under TP —
+        conv cache (n_periods, B, conv-1, channels) on its channel axis,
+        SSD state (n_periods, B, heads, headdim, state) on its head axis
+        (both the direct analogue of the KV pool's KV-head split; an
+        indivisible dim degrades to replication for that leaf)."""
+        if self._ctx is None or not states:
+            return None
+        mdl = self._ctx._mdl
+
+        def place(path, a):
+            name = getattr(path[-1], "key", None)
+            entries = [None] * a.ndim
+            if name == "conv":
+                entries[-1] = mdl(a.shape[-1])
+            elif name == "state":
+                entries[2] = mdl(a.shape[2])
+            return NamedSharding(self.mesh, P(*entries))
+
+        return jax.tree_util.tree_map_with_path(place, states)
+
+    def _constrain_state(self, kv_state, ssm_states):
+        """Pin the post-step pools to their resident layout inside jit, so
+        the donated buffers round-trip with stable shardings (no silent
+        re-layout between steps under GSPMD)."""
+        if self._ctx is None:
+            return kv_state, ssm_states
+        if kv_state:
+            kv_state = jax.tree_util.tree_map(
+                lambda a: jax.lax.with_sharding_constraint(
+                    a, self.kv.sharding), kv_state)
+        if ssm_states:
+            ssm_states = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, ssm_states,
+                self._ssm_sharding_tree(ssm_states))
+        return kv_state, ssm_states
 
     def _zero_ssm_slot(self, slot: int) -> None:
         """Reset one slot's SSM state (chunked prefill starts from zeros;
@@ -306,7 +400,7 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _make_stack_body(self, *, positions, attn_read, ssm_step):
-        cfg, model = self.cfg, self.model
+        cfg, model, ctx = self.cfg, self.model, self._ctx
         quant = self.kv_cfg.kv_quant
 
         def body(x, xs):
@@ -318,14 +412,27 @@ class Engine:
                 pp = lp[f"pos{pos}"]
                 if model.kinds[pos] == "attn":
                     h = L.rmsnorm(x, pp["mix"]["ln"], cfg.norm_eps)
-                    q, k, v = B._qkv(h, pp["mix"], cfg, None,
+                    q, k, v = B._qkv(h, pp["mix"], cfg, ctx,
                                      positions=positions)   # (B, T, H, hd)
+                    # pin q/k/v to their rounded bits: the quant encode,
+                    # the attention read and the post-scan scatter must
+                    # all consume the SAME values in every compilation.
+                    # Without the barrier, XLA's excess-precision pass may
+                    # elide the bf16 rounding for one consumer and not
+                    # another depending on fusion shape — which differs
+                    # between eager (legacy), jit (fused) and TP-sharded
+                    # executables, silently breaking token parity.
+                    q, k, v = jax.lax.optimization_barrier((q, k, v))
                     kq, ks = C.quant_encode(k, quant)
                     vq, vs = C.quant_encode(v, quant)
                     out = attn_read(q, (kq, ks, vq, vs), k.dtype,
                                     kv_slice, r)
+                    # head-sharded attention produces shard-complete heads
+                    # (partials LSE-merge locally); the row-parallel wo
+                    # contraction is where the model-axis psum materializes
+                    out = B._constrain(ctx, out, "act_q")
                     y = L.dense(out, pp["mix"]["wo"], n_in=2)
-                    x = x + y
+                    x = x + B._constrain(ctx, y, "hidden")
                     new_kv.setdefault("k", []).append(kq)
                     new_kv.setdefault("v", []).append(vq)
                     if ks is not None:
@@ -336,10 +443,10 @@ class Engine:
                     x, nc = ssm_step(x, pp["mix"], ssm_slice[f"pos{pos}"])
                     new_ssm[f"pos{pos}"] = nc
                 if model.fkinds[pos] == "moe":
-                    x, _ = B.moe_apply(x, pp["ffn"], cfg, None,
+                    x, _ = B.moe_apply(x, pp["ffn"], cfg, ctx,
                                        capacity_mult=4.0)
                 else:
-                    x = B.ffn_apply(x, pp["ffn"], cfg, None)
+                    x = B.ffn_apply(x, pp["ffn"], cfg, ctx)
             kv_ys = {kk: jnp.stack(vv) for kk, vv in new_kv.items()}
             return x, (kv_ys, new_ssm)
 
@@ -415,7 +522,7 @@ class Engine:
             return out.astype(q.dtype)
 
         def ssm_step(x, pp_mix, st):
-            return B.ssm_apply(x, pp_mix, cfg, None, cache=st,
+            return B.ssm_apply(x, pp_mix, cfg, self._ctx, cache=st,
                                n_valid=n_valid)
 
         body = self._make_stack_body(positions=positions,
@@ -440,6 +547,7 @@ class Engine:
                 lambda full, new: jax.lax.dynamic_update_slice_in_dim(
                     full, new, slot, axis=1),
                 ssm_states, new_ssm)
+        kv_state, ssm_states = self._constrain_state(kv_state, ssm_states)
         return kv_state, ssm_states, next_token
 
     def _prefill_chunk_tick(self) -> None:
@@ -524,7 +632,7 @@ class Engine:
             return out.astype(q.dtype)
 
         def ssm_step(x, pp_mix, st):
-            x, nc = B.ssm_apply(x, pp_mix, cfg, None, cache=st)
+            x, nc = B.ssm_apply(x, pp_mix, cfg, self._ctx, cache=st)
             # inactive slots keep their state: a slot mid-way through
             # chunked prefill must not have its carried (conv, ssd) state
             # advanced by the running batch's decode steps (the SSM
@@ -551,6 +659,7 @@ class Engine:
                                       self.kv_cfg.n_blocks, active)
             kv_state = C.write_token_encoded(kv_state, enc, blk, off)
         new_lengths = jnp.where(active, lengths + 1, lengths)
+        kv_state, new_ssm = self._constrain_state(kv_state, new_ssm)
         return kv_state, new_ssm, next_tokens, new_lengths
 
     def _decode_fused(self, live: List[Request]) -> None:
@@ -634,7 +743,7 @@ class Engine:
             return out.astype(q.dtype)
 
         def ssm_step(x, pp_mix, st):
-            return B.ssm_apply_spec(x, pp_mix, cfg, None, cache=st,
+            return B.ssm_apply_spec(x, pp_mix, cfg, self._ctx, cache=st,
                                     valid=valid_rows)
 
         body = self._make_stack_body(positions=positions,
@@ -678,6 +787,7 @@ class Engine:
                 return jnp.take_along_axis(st, idx, axis=1)[:, 0]
 
             ssm_states = jax.tree_util.tree_map(sel, new_ssm)
+        kv_state, ssm_states = self._constrain_state(kv_state, ssm_states)
         return kv_state, ssm_states, greedy, n_acc
 
     def _decode_spec(self, live: List[Request]) -> None:
@@ -755,10 +865,24 @@ class Engine:
         if self._attn_pos and victim.blocks:
             self.kv.truncate_slots(victim.blocks, 0)
 
-    def warmup(self, max_seq_len: int) -> None:
+    def warmup(self, max_seq_len: int,
+               prompt_lens: Optional[List[int]] = None) -> None:
         """Pre-compile the jitted steps for the table bucket implied by
         ``max_seq_len`` (prompt + generation budget), the way a serving
-        deployment compiles before taking traffic. No state is mutated."""
+        deployment compiles before taking traffic. No state is mutated.
+
+        ``prompt_lens`` (optional): the distinct prompt lengths of the
+        expected trace. Chunked prefill compiles one chunk executable per
+        *request-footprint* table bucket (``_prefill_chunk_tick`` pins the
+        table width to the request's own context bucket, not the global
+        max), so a mixed-length trace demands one executable per distinct
+        bucket — warming only the max length would leave every shorter
+        bucket to compile on the serving path. When ``prompt_lens`` is
+        given, every pow2 bucket between the smallest prompt bucket and
+        the max footprint is warmed, not just the buckets the prompts
+        themselves imply: a preemption victim re-prefills prompt PLUS
+        generated prefix, which lands in intermediate buckets no fresh
+        prompt uses."""
         mbb = _next_pow2(-(-max_seq_len // self.block_size))
         bsz = self.max_batch
         # the steps donate their state args: hand them throwaway copies so
@@ -773,14 +897,23 @@ class Engine:
             jax.block_until_ready(out)
         if self.prefill_chunk is not None:
             cn = self.prefill_chunk
-            out = self._chunk_step(
-                self.params,
-                jax.tree_util.tree_map(jnp.copy, self.kv.state),
-                jax.tree_util.tree_map(jnp.copy, self._ssm_states),
-                jnp.zeros((1, cn), jnp.int32),
-                jnp.asarray(0, jnp.int32), jnp.asarray(cn, jnp.int32),
-                jnp.zeros((1, mbb), jnp.int32), jnp.asarray(0, jnp.int32))
-            jax.block_until_ready(out)
+            buckets = {mbb}
+            if prompt_lens:
+                lo = min(_next_pow2(self.sched._blocks_for(t))
+                         for t in prompt_lens)
+                b = lo
+                while b <= mbb:     # cover re-prefill (victim) footprints
+                    buckets.add(b)
+                    b *= 2
+            for cb in sorted(buckets):
+                out = self._chunk_step(
+                    self.params,
+                    jax.tree_util.tree_map(jnp.copy, self.kv.state),
+                    jax.tree_util.tree_map(jnp.copy, self._ssm_states),
+                    jnp.zeros((1, cn), jnp.int32),
+                    jnp.asarray(0, jnp.int32), jnp.asarray(cn, jnp.int32),
+                    jnp.zeros((1, cb), jnp.int32), jnp.asarray(0, jnp.int32))
+                jax.block_until_ready(out)
         if self.spec is not None:
             # build every (window-bucket, table-bucket) executable the
             # depth policy can demand: pow2 window widths capped at
@@ -963,14 +1096,24 @@ class Engine:
         ttft = [t for t in (r.ttft() for r in done) if t is not None]
         tpot = [t for t in (r.tpot() for r in done) if t is not None]
         queue = [t for t in (r.queue_time() for r in done) if t is not None]
-        wall = max((r.finish_time or 0) for r in done) - \
-            min(r.arrival for r in done) if done else 0.0
+        # explicit empty-window guard: stats() must be safe right after
+        # reset_stats() and mid-burst (no finished request yet). The old
+        # one-line ternary was already short-circuit-safe (the condition
+        # evaluates before max()/min()), but only by operator-precedence
+        # subtlety — a refactor hazard. This spells the guard out and a
+        # regression test pins the zeroed-throughput behavior.
+        if done:
+            wall = (max((r.finish_time or 0.0) for r in done)
+                    - min(r.arrival for r in done))
+        else:
+            wall = 0.0
         toks = sum(len(r.output) for r in done)
         pct = _pct
         spec_stats = self.spec.stats() if self.spec is not None else {}
         return {
             **spec_stats,
             "requests": len(done),
+            "model_parallel": self.tp_degree,
             "throughput_tok_s": toks / wall if wall > 0 else 0.0,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
             "p50_latency_s": pct(lat, 50),

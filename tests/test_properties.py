@@ -132,3 +132,101 @@ def test_grad_compression_unbiased_with_error_feedback(seed, n):
     # residual error is bounded by one quantization step, not 4
     resid = float(jnp.linalg.norm(acc + err - 4 * g))
     assert resid < 1e-3 * float(jnp.linalg.norm(4 * g)) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Scheduler FCFS invariants (serving/scheduler.py)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(arrivals=st.lists(st.floats(0.0, 10.0, allow_nan=False,
+                                   allow_infinity=False),
+                         min_size=2, max_size=12),
+       seed=st.integers(0, 1000))
+def test_scheduler_priority_fcfs_tiebreak(arrivals, seed):
+    """_priority orders by arrival, with rid as the deterministic
+    tie-break: sorting any shuffled submission set is a stable FCFS order,
+    and equal arrivals order by rid."""
+    from repro.serving.scheduler import Request, _priority
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, tokens=[1], arrival=a)
+            for i, a in enumerate(arrivals)]
+    # duplicate one arrival to force a tie
+    reqs.append(Request(rid=len(reqs), tokens=[1], arrival=arrivals[0]))
+    shuffled = list(reqs)
+    rng.shuffle(shuffled)
+    ordered = sorted(shuffled, key=_priority)
+    for a, b in zip(ordered, ordered[1:]):
+        assert (a.arrival, a.rid) <= (b.arrival, b.rid)
+    ties = [r for r in ordered if r.arrival == arrivals[0]]
+    assert [r.rid for r in ties] == sorted(r.rid for r in ties)
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_scheduler_admit_never_inverts_priority(data):
+    """Randomized submit / admit / grow / finish sequences: admission is
+    always a priority-prefix of the waiting queue (no younger request is
+    admitted over a waiting elder), the waiting queue stays FCFS-sorted
+    through preemptions, and every preemption victim is strictly younger
+    than the request that grew."""
+    from repro.serving.scheduler import Scheduler, Request, _priority
+    from repro.serving.cache import OutOfBlocks
+
+    sched = Scheduler(max_batch=3, n_blocks=8, block_size=4,
+                      prefill_chunk=None)
+    preempt_log = []
+    orig = sched.preempt
+
+    def spy(victim):
+        preempt_log.append(victim)
+        orig(victim)
+
+    sched.preempt = spy
+    rid = 0
+    live = []
+    clock = 0.0
+    n_ops = data.draw(st.integers(5, 30))
+    for step in range(n_ops):
+        op = data.draw(st.sampled_from(["submit", "admit", "grow",
+                                        "finish"]))
+        if op == "submit":
+            # arrivals are nondecreasing (wall clock); a zero increment
+            # forces the equal-arrival rid tie-break
+            clock += float(data.draw(st.sampled_from([0.0, 0.5, 1.0])))
+            r = Request(rid=rid,
+                        tokens=[1] * data.draw(st.integers(1, 8)),
+                        max_new_tokens=data.draw(st.integers(1, 8)),
+                        arrival=clock)
+            rid += 1
+            try:
+                sched.submit(r)
+            except OutOfBlocks:
+                continue
+        elif op == "admit":
+            admitted = sched.admit(now=float(step))
+            # FIFO prefix: everything admitted outranks everything left
+            if admitted and sched.waiting:
+                worst_admitted = max(_priority(r) for r in admitted)
+                best_waiting = min(_priority(r) for r in sched.waiting)
+                assert worst_admitted <= best_waiting
+            live = [r for r in sched.running if r is not None]
+        elif op == "grow" and live:
+            grower = data.draw(st.sampled_from(live))
+            preempt_log.clear()
+            sched.ensure_blocks(grower, grower.length + 1)
+            for victim in preempt_log:
+                assert _priority(victim) > _priority(grower)
+            live = [r for r in sched.running if r is not None]
+        elif op == "finish" and live:
+            r = data.draw(st.sampled_from(live))
+            sched.finish(r, now=float(step))
+            live = [r for r in sched.running if r is not None]
+        # global invariants after every operation
+        wl = list(sched.waiting)
+        assert wl == sorted(wl, key=_priority)      # queue stays FCFS
+        held = [b for r in sched.running if r is not None
+                for b in r.blocks]
+        assert len(held) == len(set(held))          # no shared blocks
+        assert len(held) + sched.alloc.n_free == sched.alloc.n_blocks

@@ -1,0 +1,26 @@
+"""launch/serve.py CLI input validation: --mixed-lens must be rejected at
+parse time with an actionable message, never deep in the engine."""
+import pytest
+
+from repro.launch.serve import parse_mixed_lens
+
+
+def test_parse_mixed_lens_happy_path():
+    assert parse_mixed_lens("16,64,24") == [16, 64, 24]
+    assert parse_mixed_lens(" 8 , 9 ") == [8, 9]
+    assert parse_mixed_lens(None) is None
+
+
+@pytest.mark.parametrize("bad,msg", [
+    ("16,,24", "empty entry"),
+    (",16", "empty entry"),
+    ("16,", "empty entry"),
+    ("", "empty entry"),
+    ("16,abc", "not an integer"),
+    ("16,3.5", "not an integer"),
+    ("0", "must be >= 1"),
+    ("16,-4", "must be >= 1"),
+])
+def test_parse_mixed_lens_rejects_malformed(bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse_mixed_lens(bad)

@@ -220,3 +220,105 @@ def test_engine_batched_prefill_admits_group_in_one_forward():
         logits, _, _ = model.prefill(
             params, {"tokens": jnp.asarray([p], jnp.int32)})
         assert firsts[rid] == int(jnp.argmax(logits[0]))
+
+
+# ---------------------------------------------------------------------------
+# Bugfix sweep regressions (PR 5)
+# ---------------------------------------------------------------------------
+
+
+def test_block_allocator_rejects_double_release():
+    """The owned/free invariant: releasing a block that is already free (or
+    twice within one call, or outside the pool) raises instead of silently
+    corrupting the free list — a corrupted list hands one page to two
+    requests."""
+    from repro.serving.cache import BlockAllocator
+    a = BlockAllocator(8)
+    b = a.alloc(4)
+    a.release(b[:2])
+    with pytest.raises(ValueError, match="double release"):
+        a.release(b[:1])                    # already free
+    with pytest.raises(ValueError, match="double release"):
+        a.release([b[2], b[2]])             # duplicate within one call
+    with pytest.raises(ValueError, match="outside the pool"):
+        a.release([99])
+    # failed releases must not have mutated the free list
+    assert a.n_free == 2 + 4  # 2 released + 4 never allocated
+    got = a.alloc(6)
+    assert len(set(got)) == 6
+
+
+def test_release_invariant_through_preemption_path():
+    """Drive the real preempt -> scrub (truncate_slots) -> release path
+    under block pressure and assert the free list never collects a
+    duplicate id; afterwards, re-releasing a finished request's old blocks
+    raises (the double-free class of bug this PR guards against)."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, size=8).tolist()
+               for _ in range(4)]
+    eng = Engine(cfg, params, max_batch=3, n_blocks=6, block_size=4,
+                 prefill_chunk=4)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, tokens=p, max_new_tokens=6))
+    while eng.sched.has_work and eng.steps < 500:
+        eng.step()
+        free = eng.alloc.free
+        assert len(free) == len(set(free))          # no duplicates, ever
+    assert eng.sched.n_preemptions > 0
+    assert eng.alloc.n_free == eng.alloc.n_blocks
+    with pytest.raises(ValueError, match="double release"):
+        eng.alloc.release([0])                      # everything is free now
+
+
+def test_stats_safe_with_no_finished_requests():
+    """stats() must return zeroed throughput fields — not raise — on a
+    fresh engine, mid-burst before any request finishes, and right after
+    reset_stats(); with and without speculation."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    for speculate in (None, "ngram"):
+        eng = Engine(cfg, params, max_batch=2, n_blocks=32, block_size=8,
+                     speculate=speculate)
+        st = eng.stats()                            # fresh engine
+        assert st["requests"] == 0
+        assert st["throughput_tok_s"] == 0.0
+        assert st["p99_latency_s"] == 0.0
+        eng.submit(Request(rid=0, tokens=list(range(1, 9)),
+                           max_new_tokens=6))
+        eng.step()                                  # mid-burst: none done
+        assert eng.stats()["requests"] == 0
+        eng.run(max_steps=200)
+        assert eng.stats()["requests"] == 1
+        eng.reset_stats()                           # post-reset
+        st = eng.stats()
+        assert st["requests"] == 0
+        assert st["throughput_tok_s"] == 0.0
+        if speculate:
+            assert st["spec_rounds"] == 0
+
+
+def test_warmup_covers_every_mixed_len_chunk_bucket():
+    """warmup(prompt_lens=...) must pre-build one chunk executable per
+    distinct request-footprint table bucket, so a mixed-length burst
+    compiles nothing on the serving path."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    lens = [6, 16, 40]                  # 3 distinct pow2 block buckets
+    max_new = 4
+    eng = Engine(cfg, params, max_batch=3, n_blocks=64, block_size=4,
+                 prefill_chunk=4)
+    eng.warmup(max(lens) + max_new, prompt_lens=lens)
+    warm = dict(eng.trace_counts)
+    rng = np.random.default_rng(0)
+    for rid, t in enumerate(lens):
+        eng.submit(Request(rid=rid,
+                           tokens=rng.integers(1, cfg.vocab_size,
+                                               size=t).tolist(),
+                           max_new_tokens=max_new))
+    eng.run(max_steps=500)
+    chunk_traces_after_warmup = {
+        k: v for k, v in eng.trace_counts.items()
+        if k[0] == "chunk" and (k not in warm or v > warm[k])}
+    assert chunk_traces_after_warmup == {}, chunk_traces_after_warmup
