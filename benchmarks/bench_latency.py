@@ -32,6 +32,12 @@ Scenarios (smoke-scale honesty notes inline):
     view hurt. ``prefill_tok_s`` on these rows tracks the paged chunk
     read across PRs (the ``chunk_read_path`` field records which read the
     build used; PR <= 3 values were measured on the dense read).
+  * ``deadline_storm`` — every request carries a tight wall-clock
+    deadline under the same Poisson storm: the per-step sweep evicts
+    expired requests as ``timed_out``, and the row records how many met
+    the SLO vs. were shed. Every request still reaches a terminal state
+    and every block returns to the pool — the graceful-degradation
+    contract (engine "Failure semantics") priced as a benchmark row.
   * ``chunked_prefill_tp{N}`` — the chunked scenario on a model-axis-
     sharded engine (forced 8-device CPU mesh, one subprocess per degree
     via ``--model-parallel N`` so the device-count flag lands before jax
@@ -58,6 +64,9 @@ PROMPT_LENS = (16, 64, 16, 32)      # mixed trace: short interactive + long
 LONG_LENS = (32, 128, 64, 128)      # chunk-read stressor: many-column prefixes
 MAX_NEW = 8
 CHUNK = 16
+# deadline_storm SLO: tight enough that the tail of a 200 rps burst on a
+# max_batch-4 engine sheds load, loose enough that the head completes
+DEADLINE_S = float(os.environ.get("BENCH_LATENCY_DEADLINE", 0.5))
 OUT_PATH = os.environ.get("BENCH_LATENCY_JSON", "BENCH_latency.json")
 
 ENGINE_KW = dict(max_batch=4, n_blocks=32, block_size=8)
@@ -105,10 +114,11 @@ def _warm_prefill_shapes(eng: Engine, cfg, max_new: int,
 
 
 def _measure(cfg, params, *, prefill_chunk, warm=True, engine_kw=None,
-             max_new=MAX_NEW, prompt_lens=PROMPT_LENS, mesh=None) -> dict:
+             max_new=MAX_NEW, prompt_lens=PROMPT_LENS, mesh=None,
+             deadline_s=None) -> dict:
     engine_kw = engine_kw or ENGINE_KW
     eng = Engine(cfg, params, prefill_chunk=prefill_chunk, mesh=mesh,
-                 **engine_kw)
+                 default_deadline_s=deadline_s, **engine_kw)
     prompts = serving_requests(N_REQUESTS, cfg.vocab_size, seed=0,
                                prompt_lens=prompt_lens)
     arrivals = poisson_arrivals(N_REQUESTS, RATE_RPS, seed=1)
@@ -120,10 +130,15 @@ def _measure(cfg, params, *, prefill_chunk, warm=True, engine_kw=None,
         _drive(eng, prompts, arrivals, max_new)  # warm decode/chunk buckets
         eng.reset_stats()
     _drive(eng, prompts, arrivals, max_new)      # measured pass
+    # every request reaches a terminal state (timed_out counts as one)
+    # and every block comes back: graceful degradation, not leakage
     assert len(eng.finished) == N_REQUESTS
+    assert eng.alloc.n_free == eng.alloc.n_blocks
     st = eng.stats()
     return {
         "completed": int(st["requests"]),
+        "finished": int(st["finished"]),
+        "timed_out": int(st["timed_out"]),
         "throughput_tok_s": round(st["throughput_tok_s"], 2),
         "prefill_tok_s": round(st["prefill_tokens"]
                                / max(st["prefill_time_s"], 1e-9), 2),
@@ -172,6 +187,8 @@ def run():
         "chunked_prefill_coldstart": dict(prefill_chunk=CHUNK, warm=False),
         "chunked_block_pressure": dict(prefill_chunk=CHUNK,
                                        engine_kw=PRESSURE_KW, max_new=24),
+        # SLO-deadline storm: tight deadlines shed the burst's tail
+        "deadline_storm": dict(prefill_chunk=CHUNK, deadline_s=DEADLINE_S),
         # chunk-read stressors: long prefixes spanning many table columns
         "whole_prefill_long": dict(prefill_chunk=None,
                                    prompt_lens=LONG_LENS,
@@ -190,7 +207,7 @@ def run():
         # which attention read the chunk step used this build: "paged"
         # (multi-query kernel family) since PR 4; "dense" through PR 3
         "chunk_read_path": "paged",
-        "prefill_chunk": CHUNK, "runs": {},
+        "prefill_chunk": CHUNK, "deadline_s": DEADLINE_S, "runs": {},
     }
     for name, kw in scenarios.items():
         r = _measure(cfg, params, **kw)
@@ -199,7 +216,8 @@ def run():
              f"p50_ttft_s={r['p50_ttft_s']};p99_ttft_s={r['p99_ttft_s']};"
              f"p95_tpot_s={r['p95_tpot_s']};preempt={r['preemptions']};"
              f"tok_s={r['throughput_tok_s']};"
-             f"prefill_tok_s={r['prefill_tok_s']}")
+             f"prefill_tok_s={r['prefill_tok_s']};"
+             f"finished={r['finished']};timed_out={r['timed_out']}")
     _run_tp_rows(results)
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)

@@ -31,6 +31,19 @@ contractions accumulate in f32, see models/layers.dense).
         --speculate draft:qwen1.5-0.5b       # draft-model speculation
     PYTHONPATH=src python -m repro.launch.serve \
         --model-parallel 4                   # model-axis-sharded serving
+    PYTHONPATH=src python -m repro.launch.serve \
+        --deadline-s 2.0 --queue-cap 8       # SLO deadlines + load shedding
+    PYTHONPATH=src python -m repro.launch.serve \
+        --chaos 7                            # seeded fault injection
+
+Lifecycle flags (see the engine's "Failure semantics" docstring):
+``--deadline-s`` stamps every request with a wall-clock deadline — the
+engine's per-step sweep evicts expired requests as ``timed_out``;
+``--queue-cap`` bounds the waiting queue so overload sheds load
+(rejected requests are reported, not crashed on); ``--chaos <seed>``
+wires a seeded deterministic FaultInjector (serving/faults.py) into the
+run — block squeezes, forced allocator failures, delayed cancellations —
+and prints the injection log plus per-cause terminal counts at the end.
 """
 import argparse
 from typing import List, Optional
@@ -91,6 +104,19 @@ def main():
     ap.add_argument("--spec-depth", type=int, default=4,
                     help="max proposed tokens per verify round (adaptive "
                          "back-off may use less)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request wall-clock deadline in seconds; "
+                         "expired requests are evicted as timed_out by "
+                         "the per-step sweep (0 = no deadline)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bound the waiting queue: submissions beyond the "
+                         "cap are rejected (load shedding) instead of "
+                         "queueing unboundedly (0 = unbounded)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="seeded deterministic fault injection: block "
+                         "squeezes, forced allocator failures and delayed "
+                         "cancellations on a replayable schedule "
+                         "(serving/faults.py)")
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="shard the engine over a model-axis mesh of N "
                          "devices (params via ShardCtx specs, paged KV/SSM "
@@ -114,7 +140,8 @@ def main():
     from repro.data.pipeline import serving_requests
     from repro.launch.mesh import make_local_mesh
     from repro.models.lm import LM
-    from repro.serving.engine import Engine, Request
+    from repro.serving.engine import Engine, Rejected, Request
+    from repro.serving.faults import FaultInjector
 
     if args.arch not in list_archs():
         ap.error(f"unknown --arch {args.arch!r} (choose from "
@@ -129,13 +156,20 @@ def main():
     cfg = get_config(args.arch, reduced=True)
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    faults = (FaultInjector.from_seed(args.chaos,
+                                      rids=range(args.requests))
+              if args.chaos is not None else None)
+    if faults is not None and args.mode != "fused":
+        ap.error("--chaos requires the fused engine (drop --legacy)")
     eng = Engine(cfg, params, max_batch=args.max_batch,
                  n_blocks=args.n_blocks, block_size=args.block_size,
                  kv_quant="int8" if args.int8_kv else "none",
                  mode=args.mode,
                  prefill_chunk=args.prefill_chunk or None,
                  speculate=args.speculate, spec_depth=args.spec_depth,
-                 mesh=mesh)
+                 mesh=mesh, queue_cap=args.queue_cap or None,
+                 default_deadline_s=args.deadline_s or None,
+                 faults=faults)
     # warm every chunk-step table bucket the trace implies, not just the
     # widest: each distinct prompt length compiles its own footprint bucket
     # (a uniform trace still needs its prompt bucket, which can differ from
@@ -145,8 +179,17 @@ def main():
     for i, p in enumerate(serving_requests(args.requests, cfg.vocab_size,
                                            prompt_len=args.prompt_len,
                                            prompt_lens=lens)):
-        eng.submit(Request(rid=i, tokens=p, max_new_tokens=args.max_new))
+        try:
+            eng.submit(Request(rid=i, tokens=p,
+                               max_new_tokens=args.max_new))
+        except Rejected as e:
+            # load shedding is a reported outcome, not a launcher crash
+            print(f"{'rejected':>20s}: rid={i} ({e.reason})")
     eng.run()
+    if faults is not None:
+        faults.release_all(eng)     # return any still-squeezed blocks
+        for step, action, detail in faults.log:
+            print(f"{'chaos':>20s}: step {step:>3d} {action} {detail}")
     print(f"{'mode':>20s}: {args.mode}")
     for k, v in eng.stats().items():
         print(f"{k:>20s}: {v:.4f}" if isinstance(v, float) else

@@ -43,9 +43,13 @@ class PagedKVConfig:
 class OutOfBlocks(RuntimeError):
     """Raised by :meth:`BlockAllocator.alloc` when the free list is short.
 
-    Callers that want admission control must check :attr:`n_free` first and
-    treat this exception as a hard invariant violation (a racing second
-    allocator user), not as backpressure.
+    Callers that want admission control should check :attr:`n_free` first;
+    the scheduler additionally treats a raise from ``alloc`` itself as
+    *backpressure* (requeue / wait a step) rather than a crash, so an
+    allocator that runs dry mid-step — a racing co-user, or the
+    fault-injection hook :meth:`BlockAllocator.fail_next` — degrades the
+    schedule instead of taking the engine down (serving/faults.py drives
+    exactly this path in the chaos suite).
     """
 
 
@@ -59,14 +63,32 @@ class BlockAllocator:
     double-release used to silently append the id to the free list twice,
     after which two requests could be handed the same block and corrupt
     each other's KV; now it raises ``ValueError`` at the offending call.
+
+    :meth:`fail_next` is the deterministic fault-injection hook: the next
+    N calls to ``alloc`` raise :class:`OutOfBlocks` regardless of the free
+    list, without mutating it — the chaos harness (serving/faults.py) uses
+    it to prove the scheduler survives an allocator that runs dry mid-step.
     """
 
     def __init__(self, n_blocks: int):
         self.free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._free_set = set(self.free)
         self.n_blocks = n_blocks
+        self._fail_next = 0
+
+    def fail_next(self, n: int = 1) -> None:
+        """Arm ``n`` injected failures: each of the next ``n`` ``alloc``
+        calls raises :class:`OutOfBlocks` and leaves the free list intact."""
+        if n < 0:
+            raise ValueError("fail_next needs n >= 0")
+        self._fail_next += n
 
     def alloc(self, n: int) -> List[int]:
+        if self._fail_next > 0:
+            self._fail_next -= 1
+            raise OutOfBlocks(
+                f"injected allocator failure (requested {n} blocks, "
+                f"{len(self.free)} nominally free)")
         if len(self.free) < n:
             raise OutOfBlocks(
                 f"requested {n} blocks, only {len(self.free)} free")

@@ -100,6 +100,40 @@ Python hot loop: per-layer eager dispatch, dense block gather, naive
 attention. It exists as the measured baseline for benchmarks/bench_decode
 and benchmarks/fig6_serving (--legacy), and as the parity oracle in tests.
 
+**Failure semantics.** Every request ends in exactly one terminal state,
+and every terminal transition releases the request's blocks through the
+same scrub (``cache.truncate_slots``) → ``BlockAllocator.release`` path
+preemption uses, so no exit can leak pages or leave stale KV bytes:
+
+  * ``FINISHED`` — generation budget met (``Scheduler.finish``).
+  * ``TIMED_OUT`` — the request's ``deadline_s`` (or the engine-wide
+    ``default_deadline_s``) elapsed since arrival; a per-step sweep evicts
+    it whether it is queued, prefilling or decoding.
+  * ``CANCELLED`` — :meth:`Engine.cancel` revoked it; a request cancelled
+    mid-speculative-window rolls back exactly (rejected appends were
+    already null-writes, accepted ones are scrubbed with its pages).
+  * ``REJECTED`` — ``submit`` refused it with a machine-readable reason
+    (``empty_prompt`` / ``bad_max_new`` / ``unschedulable`` /
+    ``queue_full``). The bounded waiting queue (``queue_cap``) makes
+    overload shed load instead of queueing unboundedly; preemption
+    re-queues bypass the cap.
+  * ``FAILED`` — the step's in-jit non-finite-logit flag tripped for the
+    request's row: it is quarantined (evicted, pages scrubbed, blocks
+    freed) without disturbing the rest of the batch or adding a dispatch
+    — the flag rides inside the same jitted step.
+
+``Engine.run`` adds a no-progress watchdog: ``stall_limit`` consecutive
+steps in which no request advances (no token, no prefill progress, no
+admission, no terminal transition, no allocator movement) raise
+:class:`StallError` naming the stuck requests instead of silently looping
+to ``max_steps``. ``Engine.stats()`` reports per-cause terminal counts
+(``finished`` / ``timed_out`` / ``cancelled`` / ``rejected`` /
+``failed``). Deterministic fault injection — block squeezes, forced
+allocator failures, delayed cancellation, NaN poisoning, deadline storms
+— wires in through ``Engine(faults=FaultInjector(...))``
+(serving/faults.py) behind a no-op default; the ``--chaos <seed>`` flag
+of launch/serve.py drives it from the CLI.
+
 The paper's serving benchmarks (Figs. 6-10) drive this engine with burst
 arrivals and record per-request latency for CDFs plus aggregate throughput;
 benchmarks/bench_latency.py adds Poisson arrivals and SLO percentiles.
@@ -123,11 +157,30 @@ from repro.parallel.sharding import make_serving_ctx, state_shardings, \
     logical_by_path_of
 from repro.serving import cache as C
 from repro.serving.cache import PagedKVCache, PagedKVConfig
-from repro.serving.scheduler import RUNNING, Request, Scheduler
+from repro.serving.scheduler import (CANCELLED, FAILED, FINISHED, REJECTED,
+                                     RUNNING, TERMINAL_STATES, TIMED_OUT,
+                                     Rejected, Request, Scheduler)
 from repro.serving.speculate import build_speculator
 from repro.kernels import flash_decode as fd
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "Request", "Rejected", "StallError"]
+
+
+class StallError(RuntimeError):
+    """``Engine.run`` made no progress for ``stall_limit`` consecutive
+    steps while work remained: a livelock (e.g. the pool never comes back
+    from an injected squeeze, or an external co-user wedged the
+    allocator). Raised instead of silently spinning to ``max_steps``;
+    names every stuck request so the operator sees *who* is wedged."""
+
+    def __init__(self, idle_steps: int, stuck: List[Request]):
+        self.rids = [r.rid for r in stuck]
+        names = ", ".join(
+            f"rid={r.rid}({r.state}, prefilled={r.prefilled}, "
+            f"out={len(r.output)})" for r in stuck)
+        super().__init__(
+            f"engine stalled: {idle_steps} consecutive steps without "
+            f"progress; stuck requests: {names or '<none>'}")
 
 
 def _next_pow2(n: int) -> int:
@@ -156,9 +209,13 @@ class Engine:
                  kv_quant: str = "none", greedy: bool = True,
                  mode: str = "fused", prefill_chunk: Optional[int] = None,
                  speculate=None, spec_depth: int = 4, mesh=None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, queue_cap: Optional[int] = None,
+                 default_deadline_s: Optional[float] = None,
+                 faults=None, stall_limit: int = 200):
         if mode not in ("fused", "legacy"):
             raise ValueError(f"mode must be 'fused' or 'legacy', got {mode!r}")
+        if stall_limit < 1:
+            raise ValueError("stall_limit must be >= 1")
         self.spec = build_speculator(speculate, cfg, depth=spec_depth)
         if self.spec is not None and mode != "fused":
             raise ValueError("speculative decoding requires mode='fused' "
@@ -167,6 +224,10 @@ class Engine:
             raise ValueError("model-parallel serving requires mode='fused' "
                              "(the legacy per-layer loop stays the "
                              "single-device parity oracle)")
+        if faults is not None and mode != "fused":
+            raise ValueError("fault injection requires mode='fused' (the "
+                             "NaN mask and finite flags ride the jitted "
+                             "steps)")
         self.cfg = cfg
         # model-axis sharding: one ShardCtx drives every placement — params
         # through the training-side state_shardings resolver, activations
@@ -209,8 +270,23 @@ class Engine:
         self.kv = PagedKVCache(self.kv_cfg, sharding=kv_sharding)
         self.sched = Scheduler(max_batch=max_batch, n_blocks=n_blocks,
                                block_size=block_size,
-                               prefill_chunk=prefill_chunk)
+                               prefill_chunk=prefill_chunk,
+                               queue_cap=queue_cap)
         self.finished: List[Request] = []
+        # request-lifecycle hardening (PR 6): deadlines, load shedding,
+        # fault injection, watchdog — see "Failure semantics" above
+        self.default_deadline_s = default_deadline_s
+        self.faults = faults
+        self.stall_limit = stall_limit
+        self.n_rejected = 0
+        self.rejected_reasons: Counter = Counter()
+        # sweep deadlines only when someone armed one: the hot path of a
+        # deadline-free deployment stays untouched
+        self._deadlines_armed = default_deadline_s is not None
+        # (rid, layer period) scheduled for in-jit NaN poisoning during
+        # the CURRENT step's forward; consumed by whichever jitted step
+        # runs the rid's row, cleared at the end of the step
+        self._nan_plan: Optional[tuple] = None
         self._ssm_states = self._init_ssm_states()
         # under a mesh the XLA read partitions on the (sharded) KV-head
         # axis of the pool out of the box; running the Pallas kernel
@@ -327,8 +403,83 @@ class Engine:
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        """Enqueue a request, or raise :class:`Rejected` (validation or
+        load shedding — see scheduler.submit). Rejections are counted
+        per reason in ``stats()`` before re-raising."""
         req.arrival = req.arrival or self.clock()
-        self.sched.submit(req)
+        if req.deadline_s is None:
+            req.deadline_s = self.default_deadline_s
+        if req.deadline_s is not None:
+            self._deadlines_armed = True
+        try:
+            self.sched.submit(req)
+        except Rejected as e:
+            self.n_rejected += 1
+            self.rejected_reasons[e.reason] += 1
+            req.finish_time = req.finish_time or self.clock()
+            raise
+
+    # ------------------------------------------------------------------
+    # Request lifecycle: cancellation, deadlines, quarantine, injection
+    # ------------------------------------------------------------------
+
+    def live_requests(self) -> List[Request]:
+        """Every request still in the schedule (waiting or active)."""
+        return list(self.sched.waiting) + [r for r in self.sched.running
+                                           if r is not None]
+
+    def cancel(self, rid: int) -> bool:
+        """Revoke a request wherever it is — queued, prefilling, decoding
+        or mid-speculative-window. An active request leaves through the
+        scrub→release eviction path (its pages are zeroed before the
+        allocator reuses them, so a cancelled speculation window rolls
+        back exactly); a waiting one just leaves the queue. Returns False
+        when ``rid`` is not in the schedule (already terminal/unknown)."""
+        for r in self.live_requests():
+            if r.rid == rid:
+                self._evict_terminal(r, CANCELLED)
+                return True
+        return False
+
+    def arm_nan(self, rid: int, period: int) -> None:
+        """Schedule in-jit NaN poisoning of ``rid``'s hidden state at
+        layer-period ``period`` for the current step (fault injection)."""
+        if not 0 <= period < self.model.n_periods:
+            raise ValueError(f"period {period} outside "
+                             f"[0, {self.model.n_periods})")
+        self._nan_plan = (rid, period)
+
+    def arm_deadlines(self) -> None:
+        """Enable the per-step deadline sweep (used after deadlines are
+        stamped onto already-submitted requests, e.g. a deadline storm)."""
+        self._deadlines_armed = True
+
+    def _evict_terminal(self, req: Request, state: str) -> None:
+        """Move ``req`` to a terminal state through the preempt→scrub→
+        release path and account it with the finished cohort."""
+        if self.spec is not None and req.state == RUNNING:
+            self.spec.abandon(req)
+        self.sched.evict_terminal(req, state, self.clock())
+        self.finished.append(req)
+
+    def _sweep_deadlines(self, now: float) -> None:
+        for r in self.live_requests():
+            if r.deadline_s is not None and now - r.arrival >= r.deadline_s:
+                self._evict_terminal(r, TIMED_OUT)
+
+    def _inj_mask(self, bsz: int, rows) -> np.ndarray:
+        """(n_periods, bsz) NaN-injection mask for a step; ``rows`` yields
+        (batch-row index, request). All-False in normal operation — the
+        mask is a traced argument of every jitted step, so arming it never
+        retraces or adds a dispatch, and faulted/fault-free engines share
+        executables (their surviving rows stay bitwise-identical)."""
+        inj = np.zeros((self.model.n_periods, bsz), bool)
+        if self._nan_plan is not None:
+            rid, period = self._nan_plan
+            for b, r in rows:
+                if r.rid == rid:
+                    inj[period, b] = True
+        return inj
 
     # ------------------------------------------------------------------
     # Whole-prompt prefill: one forward per group of equal-length contexts;
@@ -372,8 +523,13 @@ class Engine:
                     lambda full, new: full.at[:, r.slot].set(new[:, g]),
                     st, c)
         next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+        row_ok = np.asarray(jnp.all(
+            jnp.isfinite(logits.astype(jnp.float32)), axis=-1))
         now = self.clock()
         for g, r in enumerate(group):
+            if not row_ok[g]:       # poisoned prompt forward: quarantine
+                self._evict_terminal(r, FAILED)
+                continue
             if not r.output:        # fresh request: this IS the first token
                 r.output.append(int(next_tok[g]))
                 r.first_token_time = now
@@ -404,7 +560,14 @@ class Engine:
         quant = self.kv_cfg.kv_quant
 
         def body(x, xs):
-            lp, kv_slice, ssm_slice = xs
+            lp, kv_slice, ssm_slice, inj = xs
+            # fault injection: poison selected rows' hidden state entering
+            # this layer period with NaN (inj is (B,) bool, all-False in
+            # normal operation — a traced select, never a retrace). The
+            # poisoned row's logits turn non-finite, tripping the step's
+            # quarantine flag; other rows are untouched (row-independent).
+            x = jnp.where(inj[:, None, None],
+                          jnp.asarray(jnp.nan, x.dtype), x)
             new_kv: Dict[str, list] = {}
             new_ssm: Dict[str, Any] = {}
             r = 0
@@ -484,7 +647,7 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _chunk_step_impl(self, params, kv_state, ssm_states, tokens, ctx,
-                         n_valid, table, slot):
+                         n_valid, table, slot, inj):
         cn = int(tokens.shape[1])
         mbb = int(table.shape[1])
         # runs only when jit (re)traces: bounded-compile accounting
@@ -528,11 +691,14 @@ class Engine:
         body = self._make_stack_body(positions=positions,
                                      attn_read=attn_read, ssm_step=ssm_step)
         x, (kv_ys, new_ssm) = jax.lax.scan(
-            body, x, (params["blocks"], kv_xs, ssm_xs))
+            body, x, (params["blocks"], kv_xs, ssm_xs, inj))
 
         last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
         logits = model._head(params, last)[:, 0]
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+        # non-finite-logit quarantine flag: computed in-jit so a poisoned
+        # request costs no extra dispatch; the host evicts it as FAILED
+        ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
 
         if n_attn_pp:
             enc = self._collect_enc(kv_ys)
@@ -548,7 +714,7 @@ class Engine:
                     full, new, slot, axis=1),
                 ssm_states, new_ssm)
         kv_state, ssm_states = self._constrain_state(kv_state, ssm_states)
-        return kv_state, ssm_states, next_token
+        return kv_state, ssm_states, next_token, ok
 
     def _prefill_chunk_tick(self) -> None:
         plan = self.sched.next_prefill_chunk()
@@ -565,14 +731,20 @@ class Engine:
         mbb = _next_pow2(self.sched._blocks_for(len(seq)))
         table = np.zeros((1, mbb), np.int32)
         table[0, : len(req.blocks)] = req.blocks
-        kv_state, ssm_states, next_tok = self._chunk_step(
+        kv_state, ssm_states, next_tok, ok = self._chunk_step(
             self.params, self.kv.state, self._ssm_states,
             jnp.asarray([chunk], jnp.int32),
             jnp.asarray(start, jnp.int32), jnp.asarray(n, jnp.int32),
-            jnp.asarray(table), jnp.asarray(req.slot, jnp.int32))
+            jnp.asarray(table), jnp.asarray(req.slot, jnp.int32),
+            jnp.asarray(self._inj_mask(1, [(0, req)])))
         self.kv.state = kv_state
         if self._ssm_pos:
             self._ssm_states = ssm_states
+        if not bool(ok):
+            # poisoned mid-prefill: quarantine before any state leaks into
+            # the request's lifecycle (its pages are scrubbed on eviction)
+            self._evict_terminal(req, FAILED)
+            return
         req.prefilled = start + n
         self.prefill_tokens += n
         if req.prefilled >= len(seq):
@@ -588,7 +760,7 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _fused_step_impl(self, params, kv_state, ssm_states, tokens,
-                         lengths, table, active):
+                         lengths, table, active, inj):
         # runs only when jit (re)traces: bounded-compile accounting.
         # Keys are uniform (kind, T, table-bucket) across the three step
         # kinds; fused decode is the T=1 member of the read family (batch
@@ -647,10 +819,14 @@ class Engine:
         body = self._make_stack_body(positions=positions,
                                      attn_read=attn_read, ssm_step=ssm_step)
         x, (kv_ys, new_ssm) = jax.lax.scan(
-            body, x, (params["blocks"], kv_xs, ssm_xs))
+            body, x, (params["blocks"], kv_xs, ssm_xs, inj))
 
         logits = model._head(params, x)[:, 0]
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # per-row non-finite-logit quarantine flags, computed in-jit so a
+        # poisoned request adds no dispatch; the host only consults the
+        # flags of live rows (inactive rows may legitimately be garbage)
+        row_ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
 
         if n_attn_pp:
             enc = self._collect_enc(kv_ys)
@@ -660,7 +836,7 @@ class Engine:
             kv_state = C.write_token_encoded(kv_state, enc, blk, off)
         new_lengths = jnp.where(active, lengths + 1, lengths)
         kv_state, new_ssm = self._constrain_state(kv_state, new_ssm)
-        return kv_state, new_ssm, next_tokens, new_lengths
+        return kv_state, new_ssm, next_tokens, new_lengths, row_ok
 
     def _decode_fused(self, live: List[Request]) -> None:
         if not live:
@@ -676,14 +852,16 @@ class Engine:
             lengths[r.slot] = r.length - 1          # current KV length
             active[r.slot] = True
             table[r.slot, : len(r.blocks)] = r.blocks
-        kv_state, ssm_states, next_tokens, _ = self._fused_step(
+        kv_state, ssm_states, next_tokens, _, row_ok = self._fused_step(
             self.params, self.kv.state, self._ssm_states,
             jnp.asarray(tokens), jnp.asarray(lengths), jnp.asarray(table),
-            jnp.asarray(active))
+            jnp.asarray(active),
+            jnp.asarray(self._inj_mask(bsz, ((r.slot, r) for r in live))))
         self.kv.state = kv_state
         if ssm_states:
             self._ssm_states = ssm_states
-        self._finish_step(live, np.asarray(next_tokens))
+        self._finish_step(live, np.asarray(next_tokens),
+                          row_ok=np.asarray(row_ok))
 
     # ------------------------------------------------------------------
     # Speculative decoding: a proposer (serving/speculate.py) guesses up
@@ -706,7 +884,7 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _verify_step_impl(self, params, kv_state, ssm_states, tokens, ctx,
-                          n_valid, table, active):
+                          n_valid, table, active, inj):
         cn = int(tokens.shape[1])        # 1 + spec depth (padded, fixed)
         mbb = int(table.shape[1])
         # runs only when jit (re)traces: bounded-compile accounting
@@ -749,10 +927,15 @@ class Engine:
         body = self._make_stack_body(positions=positions,
                                      attn_read=attn_read, ssm_step=ssm_step)
         x, (kv_ys, new_ssm) = jax.lax.scan(
-            body, x, (params["blocks"], kv_xs, ssm_xs))
+            body, x, (params["blocks"], kv_xs, ssm_xs, inj))
 
         logits = model._head(params, x)                      # (B, T, V)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # per-row quarantine flags over the VALID window positions only
+        # (padded positions compute garbage nothing reads)
+        fin = jnp.isfinite(logits.astype(jnp.float32))
+        row_ok = jnp.all(jnp.logical_or(fin, ~valid_rows[:, :, None]),
+                         axis=(1, 2))
         # acceptance: the proposals are the input tokens shifted left;
         # count the leading run where proposal == the model's own argmax
         match = jnp.logical_and(
@@ -788,7 +971,7 @@ class Engine:
 
             ssm_states = jax.tree_util.tree_map(sel, new_ssm)
         kv_state, ssm_states = self._constrain_state(kv_state, ssm_states)
-        return kv_state, ssm_states, greedy, n_acc
+        return kv_state, ssm_states, greedy, n_acc, row_ok
 
     def _decode_spec(self, live: List[Request]) -> None:
         """One batched verify round over every live request: gather
@@ -836,17 +1019,25 @@ class Engine:
         # narrow executable instead of the full-depth window. Bounded
         # compile: one executable per (window-bucket, table-bucket) pair.
         t = min(_next_pow2(int(np.max(n_valid))), self.spec.depth + 1)
-        kv_state, ssm_states, greedy, n_acc = self._verify_step(
+        kv_state, ssm_states, greedy, n_acc, row_ok = self._verify_step(
             self.params, self.kv.state, self._ssm_states,
             jnp.asarray(tokens[:, :t]), jnp.asarray(ctx),
-            jnp.asarray(n_valid), jnp.asarray(table), jnp.asarray(active))
+            jnp.asarray(n_valid), jnp.asarray(table), jnp.asarray(active),
+            jnp.asarray(self._inj_mask(bsz, ((r.slot, r) for r in rows))))
         self.kv.state = kv_state
         if self._ssm_pos:
             self._ssm_states = ssm_states
         greedy = np.asarray(greedy)
         n_acc = np.asarray(n_acc)
+        row_ok = np.asarray(row_ok)
         now = self.clock()
         for r in rows:
+            if not row_ok[r.slot]:
+                # quarantine: nothing the poisoned forward produced is
+                # emitted or recorded; eviction scrubs its pages (the
+                # appended window KV included) before the blocks free
+                self._evict_terminal(r, FAILED)
+                continue
             j = int(n_acc[r.slot])
             emitted = [int(tok) for tok in greedy[r.slot, : j + 1]]
             r.output.extend(emitted)
@@ -893,7 +1084,8 @@ class Engine:
                 jax.tree_util.tree_map(jnp.copy, self.kv.state),
                 jax.tree_util.tree_map(jnp.copy, self._ssm_states),
                 jnp.zeros((bsz,), jnp.int32), jnp.zeros((bsz,), jnp.int32),
-                jnp.zeros((bsz, mbb), jnp.int32), jnp.zeros((bsz,), bool))
+                jnp.zeros((bsz, mbb), jnp.int32), jnp.zeros((bsz,), bool),
+                jnp.zeros((self.model.n_periods, bsz), bool))
             jax.block_until_ready(out)
         if self.prefill_chunk is not None:
             cn = self.prefill_chunk
@@ -912,7 +1104,8 @@ class Engine:
                     jax.tree_util.tree_map(jnp.copy, self._ssm_states),
                     jnp.zeros((1, cn), jnp.int32),
                     jnp.asarray(0, jnp.int32), jnp.asarray(cn, jnp.int32),
-                    jnp.zeros((1, cb), jnp.int32), jnp.asarray(0, jnp.int32))
+                    jnp.zeros((1, cb), jnp.int32), jnp.asarray(0, jnp.int32),
+                    jnp.zeros((self.model.n_periods, 1), bool))
                 jax.block_until_ready(out)
         if self.spec is not None:
             # build every (window-bucket, table-bucket) executable the
@@ -929,7 +1122,8 @@ class Engine:
                     jnp.zeros((bsz,), jnp.int32),
                     jnp.zeros((bsz,), jnp.int32),
                     jnp.zeros((bsz, mbb), jnp.int32),
-                    jnp.zeros((bsz,), bool))
+                    jnp.zeros((bsz,), bool),
+                    jnp.zeros((self.model.n_periods, bsz), bool))
                 jax.block_until_ready(out)
 
     # ------------------------------------------------------------------
@@ -991,7 +1185,11 @@ class Engine:
             w = self.params["head"]
         logits = L.dense(x, w)[:, 0]
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
-        self._finish_step(live, next_tokens)
+        # legacy path quarantines on the host (no injection mask here;
+        # the flag still catches organically-poisoned weights/state)
+        row_ok = np.asarray(jnp.all(
+            jnp.isfinite(logits.astype(jnp.float32)), axis=-1))
+        self._finish_step(live, next_tokens, row_ok=row_ok)
 
     def _paged_attn(self, x, p, attn_layer: int, table, lengths, active):
         cfg = self.cfg
@@ -1026,9 +1224,15 @@ class Engine:
 
     # ------------------------------------------------------------------
 
-    def _finish_step(self, live: List[Request], next_tokens) -> None:
+    def _finish_step(self, live: List[Request], next_tokens,
+                     row_ok=None) -> None:
         now = self.clock()
         for r in live:
+            if row_ok is not None and not row_ok[r.slot]:
+                # non-finite logits: quarantine the row (evict as FAILED,
+                # scrub pages, free blocks) without emitting its token
+                self._evict_terminal(r, FAILED)
+                continue
             r.output.append(int(next_tokens[r.slot]))
             self.decode_tokens += 1
             if len(r.output) >= r.max_new_tokens:
@@ -1036,6 +1240,12 @@ class Engine:
                 self.finished.append(r)
 
     def step(self) -> None:
+        # fault injection + deadline sweep run before admission so a
+        # stormed/cancelled request never occupies a slot this step
+        if self.faults is not None:
+            self.faults.on_step_begin(self)
+        if self._deadlines_armed:
+            self._sweep_deadlines(self.clock())
         admitted = self.sched.admit(self.clock())
         t0 = self.clock()
         if self.prefill_chunk is None:
@@ -1066,11 +1276,36 @@ class Engine:
         else:
             self._decode_fused(live)
         self.decode_time += self.clock() - t0
+        # a NaN plan is good for exactly one step's forward, armed or not
+        self._nan_plan = None
         self.steps += 1
 
+    def _progress_key(self):
+        """Snapshot of everything that changes when any request advances:
+        a token emitted, prefill progress, admission, preemption, any
+        terminal transition, or allocator movement. Two equal consecutive
+        keys mean the step did nothing for anyone."""
+        return (len(self.finished), self.sched.n_preemptions,
+                len(self.sched.waiting), self.alloc.n_free,
+                tuple((r.rid, r.state, r.prefilled, len(r.output))
+                      for r in self.sched.running if r is not None))
+
     def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive steps until the schedule drains (or ``max_steps``). A
+        no-progress watchdog raises :class:`StallError` after
+        ``stall_limit`` consecutive idle steps instead of silently
+        spinning — e.g. when an injected squeeze never returns the pool."""
+        idle = 0
+        key = self._progress_key()
         while self.sched.has_work and self.steps < max_steps:
             self.step()
+            new_key = self._progress_key()
+            if new_key == key:
+                idle += 1
+                if idle >= self.stall_limit:
+                    raise StallError(idle, self.live_requests())
+            else:
+                idle, key = 0, new_key
         return self.finished
 
     def reset_stats(self) -> None:
@@ -1087,6 +1322,8 @@ class Engine:
         self.decode_time = 0.0
         self.prefill_time = 0.0
         self.sched.n_preemptions = 0
+        self.n_rejected = 0
+        self.rejected_reasons = Counter()
         if self.spec is not None:
             self.spec.reset()
 
@@ -1110,9 +1347,19 @@ class Engine:
         toks = sum(len(r.output) for r in done)
         pct = _pct
         spec_stats = self.spec.stats() if self.spec is not None else {}
+        # per-cause terminal accounting: every request that ever entered
+        # the schedule shows up in exactly one of these buckets (rejected
+        # ones never entered, so they count from the submit-side counter)
+        causes = Counter(r.state for r in done)
         return {
             **spec_stats,
             "requests": len(done),
+            "finished": causes.get(FINISHED, 0),
+            "timed_out": causes.get(TIMED_OUT, 0),
+            "cancelled": causes.get(CANCELLED, 0),
+            "failed": causes.get(FAILED, 0),
+            "rejected": self.n_rejected,
+            "rejected_reasons": dict(self.rejected_reasons),
             "model_parallel": self.tp_degree,
             "throughput_tok_s": toks / wall if wall > 0 else 0.0,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,

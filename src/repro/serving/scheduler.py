@@ -38,6 +38,20 @@ Latency accounting lives on the :class:`Request`: arrival, first
 admission (queue time), first token (TTFT), finish (TPOT = decode seconds
 per generated token after the first, re-prefill delays included — the
 honest SLO view of preemption), and a preemption counter.
+
+**Request lifecycle (PR 6).** Every request ends in exactly one terminal
+state: ``FINISHED`` (generation budget met), ``TIMED_OUT`` (its
+``deadline_s`` elapsed before completion), ``CANCELLED`` (caller revoked
+it via ``Engine.cancel``), ``REJECTED`` (``submit`` refused it — invalid,
+unschedulable, or load-shed by the bounded queue) or ``FAILED`` (the
+engine quarantined it, e.g. non-finite logits). :meth:`submit` validates
+at the boundary — empty prompts, non-positive generation budgets and
+never-schedulable footprints raise :class:`Rejected` with a machine-
+readable ``reason`` instead of poisoning the queue — and ``queue_cap``
+bounds the waiting queue so overload sheds load (``reason="queue_full"``)
+instead of queueing unboundedly. :meth:`evict_terminal` removes a live or
+waiting request through the same scrub→release path preemption uses, so
+a cancellation or timeout can never leak blocks or leave stale KV bytes.
 """
 from __future__ import annotations
 
@@ -51,6 +65,36 @@ WAITING = "waiting"
 PREFILL = "prefill"
 RUNNING = "running"
 FINISHED = "finished"
+TIMED_OUT = "timed_out"
+CANCELLED = "cancelled"
+REJECTED = "rejected"
+FAILED = "failed"
+
+#: States a request can never leave. ``finish_time`` is set on entry to
+#: any of them, so "all requests reached a terminal state" is checkable.
+TERMINAL_STATES = frozenset(
+    {FINISHED, TIMED_OUT, CANCELLED, REJECTED, FAILED})
+
+
+class Rejected(RuntimeError):
+    """:meth:`Scheduler.submit` refused a request.
+
+    ``reason`` is machine-readable backpressure/validation taxonomy:
+
+      * ``"empty_prompt"`` — no prompt tokens;
+      * ``"bad_max_new"`` — non-positive generation budget;
+      * ``"unschedulable"`` — the full footprint (prompt + max_new) can
+        never fit the block pool, so queueing it would deadlock FCFS;
+      * ``"queue_full"`` — the bounded waiting queue is at ``queue_cap``
+        (load shedding: the caller should retry later or downsize).
+
+    The request's state is set to :data:`REJECTED` before raising, so the
+    caller holds a request object already in its terminal state.
+    """
+
+    def __init__(self, reason: str, msg: str):
+        super().__init__(msg)
+        self.reason = reason
 
 
 @dataclasses.dataclass
@@ -59,6 +103,10 @@ class Request:
     tokens: List[int]
     max_new_tokens: int = 32
     arrival: float = 0.0
+    # wall-clock deadline relative to arrival: the engine's per-step sweep
+    # evicts the request as TIMED_OUT once clock() - arrival >= deadline_s,
+    # whether it is still queued, prefilling or decoding. None = no SLO.
+    deadline_s: Optional[float] = None
     # lifecycle
     state: str = WAITING
     first_token_time: Optional[float] = None
@@ -118,12 +166,16 @@ class Scheduler:
     """Slot/queue/block bookkeeping for the continuous-batching engine."""
 
     def __init__(self, *, max_batch: int, n_blocks: int, block_size: int,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 queue_cap: Optional[int] = None):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1 (or None)")
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError("queue_cap must be >= 1 (or None)")
         self.max_batch = max_batch
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
+        self.queue_cap = queue_cap
         self.alloc = BlockAllocator(n_blocks)
         self.waiting: deque = deque()
         self.running: List[Optional[Request]] = [None] * max_batch
@@ -137,12 +189,37 @@ class Scheduler:
         return -(-n_tokens // self.block_size)
 
     def submit(self, req: Request) -> None:
+        """Validate and enqueue, or raise :class:`Rejected` with a reason.
+
+        Every rejection is decided HERE, at the admission boundary, and
+        marks the request terminally ``REJECTED`` — an invalid or
+        unschedulable request must never enter the queue (it would either
+        deadlock FCFS or fail many layers deeper with a cryptic shape
+        error), and a full queue sheds load instead of growing without
+        bound. Preemption re-queues (``appendleft``) bypass the cap: an
+        admitted request's claim on service is never revoked by arrivals
+        behind it.
+        """
+        def reject(reason: str, msg: str):
+            req.state = REJECTED
+            raise Rejected(reason, f"request {req.rid}: {msg}")
+
+        if not req.tokens:
+            reject("empty_prompt", "empty prompt (no tokens to prefill)")
+        if req.max_new_tokens < 1:
+            reject("bad_max_new",
+                   f"max_new_tokens={req.max_new_tokens} must be >= 1")
         total = len(req.tokens) + req.max_new_tokens
         if self._blocks_for(total) > self.alloc.n_blocks:
-            raise OutOfBlocks(
-                f"request {req.rid} needs {self._blocks_for(total)} blocks "
-                f"at its full footprint but the pool holds only "
-                f"{self.alloc.n_blocks}; it could never be scheduled")
+            reject("unschedulable",
+                   f"needs {self._blocks_for(total)} blocks at its full "
+                   f"footprint but the pool holds only "
+                   f"{self.alloc.n_blocks}; it could never be scheduled")
+        if (self.queue_cap is not None
+                and len(self.waiting) >= self.queue_cap):
+            reject("queue_full",
+                   f"waiting queue is at its cap ({self.queue_cap}); "
+                   f"shedding load instead of queueing unboundedly")
         req.state = WAITING
         self.waiting.append(req)
 
@@ -168,7 +245,14 @@ class Scheduler:
             if self.alloc.n_free < need + headroom:
                 break               # no KV budget yet: keep FIFO order
             self.waiting.popleft()
-            req.blocks = self.alloc.alloc(need)
+            try:
+                req.blocks = self.alloc.alloc(need)
+            except OutOfBlocks:
+                # a lying/faulted allocator (fault injection, or a racing
+                # co-user) is backpressure, not a crash: requeue at the
+                # front and retry next step — FIFO order is preserved
+                self.waiting.appendleft(req)
+                break
             req.slot = free_slots[0]
             req.state = PREFILL
             req.prefilled = 0
@@ -199,7 +283,10 @@ class Scheduler:
             if victim is None:
                 return False        # req yields to its elders this step
             self.preempt(victim)
-        req.blocks.extend(self.alloc.alloc(need))
+        try:
+            req.blocks.extend(self.alloc.alloc(need))
+        except OutOfBlocks:
+            return False    # injected/raced allocator failure: wait a step
         return True
 
     def _pick_victim(self, than: Request) -> Optional[Request]:
@@ -235,6 +322,38 @@ class Scheduler:
         req.blocks = []
         self.running[req.slot] = None
         req.slot = -1
+
+    def evict_terminal(self, req: Request, state: str, now: float) -> None:
+        """Remove a request from the schedule into a terminal ``state``
+        (TIMED_OUT / CANCELLED / FAILED) — the cancellation, deadline and
+        quarantine exit used by the engine.
+
+        An *active* request leaves through the same path preemption uses:
+        the ``on_preempt`` hook fires first (the engine scrubs the
+        request's pages through it, so partially-written KV can never
+        leak stale bytes to a later owner), then its blocks return to the
+        allocator and its slot frees. A *waiting* request simply leaves
+        the queue. Unlike :meth:`preempt` nothing is re-queued — the
+        state is terminal — and unlike :meth:`finish` the request may be
+        mid-prefill or never admitted at all.
+        """
+        if state not in TERMINAL_STATES or state == FINISHED:
+            raise ValueError(f"evict_terminal: {state!r} is not an "
+                             f"eviction terminal state")
+        if req.slot >= 0:
+            if self.on_preempt is not None:
+                self.on_preempt(req)
+            self.alloc.release(req.blocks)
+            req.blocks = []
+            self.running[req.slot] = None
+            req.slot = -1
+        else:
+            try:
+                self.waiting.remove(req)
+            except ValueError:
+                pass                # already out of the schedule
+        req.state = state
+        req.finish_time = now
 
     # ------------------------------------------------------------------
     # Step planning views

@@ -131,6 +131,7 @@ class Speculator:
         self.n_rounds = 0
         self.proposed_tokens = 0
         self.accepted_tokens = 0
+        self.n_abandoned = 0
         self.depth_hist: Counter = Counter()
 
     # ------------------------------------------------------------------
@@ -159,12 +160,21 @@ class Speculator:
         else:
             req.spec_depth = max(1, min(self.depth, accepted + 1))
 
+    def abandon(self, req) -> None:
+        """A running request left the schedule mid-flight (cancelled,
+        timed out, quarantined). Its in-progress speculation window rolls
+        back with its pages — rejected appends were already null-writes,
+        accepted ones are scrubbed on eviction — so the speculator only
+        accounts the abandonment; no proposer state needs repair."""
+        self.n_abandoned += 1
+
     # ------------------------------------------------------------------
     def stats(self) -> Dict:
         return {
             "spec_rounds": self.n_rounds,
             "spec_proposed_tokens": self.proposed_tokens,
             "spec_accepted_tokens": self.accepted_tokens,
+            "spec_abandoned": self.n_abandoned,
             "accept_rate": (self.accepted_tokens
                             / max(self.proposed_tokens, 1)),
             "spec_depth_hist": {str(k): v for k, v

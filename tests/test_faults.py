@@ -1,0 +1,374 @@
+"""Chaos suite: request lifecycle + fault injection (serving/faults.py).
+
+Core invariant, asserted after every fault schedule: requests that
+survive reach FINISHED with greedy tokens identical to a fault-free run,
+every block returns to a dup-free free list, and ``Engine.stats()``
+accounts every terminal cause. Fault injection must also be free when
+off: the NaN mask is a traced argument of every jitted step, so a
+faulted engine shares executables with a fault-free one (the dispatch-
+count assertions pin that).
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.lm import LM
+from repro.serving.engine import Engine, Rejected, Request, StallError
+from repro.serving.faults import FaultInjector, StepFaults
+
+ARCH = "qwen1.5-0.5b"
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config(ARCH, reduced=True)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return LM(cfg).init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, n, plen=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=plen).tolist()
+            for _ in range(n)]
+
+
+def _submit_all(eng, prompts, max_new=5, **kw):
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=max_new,
+                           **kw))
+
+
+def _assert_clean(eng):
+    """Post-run hygiene: pool fully returned, free list dup-free, every
+    request that entered the schedule reached exactly one terminal state."""
+    assert eng.alloc.n_free == eng.alloc.n_blocks
+    free = list(eng.alloc.free)
+    assert len(free) == len(set(free))
+    assert not eng.sched.has_work
+    for r in eng.finished:
+        assert r.finish_time is not None
+        assert not r.blocks and r.slot == -1
+
+
+def _baseline(cfg, params, prompts, max_new=5, **kw):
+    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8, **kw)
+    _submit_all(eng, prompts, max_new=max_new)
+    done = eng.run(max_steps=400)
+    assert all(r.state == "finished" for r in done)
+    return {r.rid: list(r.output) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# Satellite (a): submit() validation, one unit test per reason
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_empty_prompt(cfg, params):
+    eng = Engine(cfg, params, max_batch=2, n_blocks=8, block_size=8)
+    with pytest.raises(Rejected) as ei:
+        eng.submit(Request(rid=0, tokens=[], max_new_tokens=4))
+    assert ei.value.reason == "empty_prompt"
+    assert not eng.sched.has_work          # never entered the queue
+    assert eng.stats()["rejected"] == 1
+
+
+def test_submit_rejects_nonpositive_max_new(cfg, params):
+    eng = Engine(cfg, params, max_batch=2, n_blocks=8, block_size=8)
+    for bad in (0, -3):
+        with pytest.raises(Rejected) as ei:
+            eng.submit(Request(rid=bad, tokens=[1, 2], max_new_tokens=bad))
+        assert ei.value.reason == "bad_max_new"
+    assert eng.stats()["rejected_reasons"] == {"bad_max_new": 2}
+
+
+def test_submit_rejects_unschedulable_footprint(cfg, params):
+    eng = Engine(cfg, params, max_batch=2, n_blocks=4, block_size=4)
+    with pytest.raises(Rejected) as ei:
+        eng.submit(Request(rid=0, tokens=list(range(1, 17)),
+                           max_new_tokens=8))    # 6 blocks > 4-block pool
+    assert ei.value.reason == "unschedulable"
+    assert ei.value.args[0].startswith("request 0:")
+
+
+def test_submit_sheds_load_at_queue_cap(cfg, params):
+    eng = Engine(cfg, params, max_batch=2, n_blocks=32, block_size=8,
+                 queue_cap=2)
+    prompts = _prompts(cfg, 3, plen=8)
+    eng.submit(Request(rid=0, tokens=prompts[0], max_new_tokens=3))
+    eng.submit(Request(rid=1, tokens=prompts[1], max_new_tokens=3))
+    with pytest.raises(Rejected) as ei:
+        eng.submit(Request(rid=2, tokens=prompts[2], max_new_tokens=3))
+    assert ei.value.reason == "queue_full"
+    # the shed request is terminal; the queued ones still complete
+    done = eng.run(max_steps=200)
+    assert sorted(r.rid for r in done) == [0, 1]
+    st = eng.stats()
+    assert st["finished"] == 2 and st["rejected"] == 1
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Cancellation and deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_waiting_and_running(cfg, params):
+    prompts = _prompts(cfg, 6)
+    base = _baseline(cfg, params, prompts)
+    # rid 1 will be decoding at step 2; rid 5 is still queued (batch of 3)
+    inj = FaultInjector({2: StepFaults(cancel_rids=(1, 5))})
+    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8,
+                 faults=inj)
+    _submit_all(eng, prompts)
+    done = eng.run(max_steps=400)
+    st = eng.stats()
+    assert st["cancelled"] == 2 and st["finished"] == 4
+    assert {a for _, a, _ in inj.log} == {"cancel"}
+    for r in done:
+        if r.state == "finished":
+            assert r.output == base[r.rid]      # survivors exactly match
+        else:
+            assert r.rid in (1, 5)
+    _assert_clean(eng)
+    # cancelling an already-terminal or unknown rid is a no-op
+    assert eng.cancel(1) is False and eng.cancel(999) is False
+
+
+def test_deadline_sweep_times_out_queued_and_running(cfg, params):
+    # deterministic tick clock: every clock() call advances 1 "second"
+    tick = itertools.count()
+    prompts = _prompts(cfg, 5)
+    eng = Engine(cfg, params, max_batch=2, n_blocks=32, block_size=8,
+                 clock=lambda: float(next(tick)))
+    for rid, p in enumerate(prompts):
+        # rid >= 3 carries a deadline that expires almost immediately —
+        # they are behind a full batch, so the sweep reaps them while
+        # queued or mid-flight; rid 0-2 have no SLO and must finish
+        eng.submit(Request(rid=rid, tokens=list(p), max_new_tokens=4,
+                           deadline_s=30.0 if rid >= 3 else None))
+    done = eng.run(max_steps=400)
+    st = eng.stats()
+    assert st["finished"] == 3 and st["timed_out"] == 2
+    for r in done:
+        assert (r.state == "timed_out") == (r.rid >= 3)
+        assert r.finish_time is not None
+    _assert_clean(eng)
+
+
+def test_deadline_storm_evicts_everything(cfg, params):
+    tick = itertools.count()
+    prompts = _prompts(cfg, 6)
+    inj = FaultInjector({3: StepFaults(deadline_s=0.0)})
+    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8,
+                 clock=lambda: float(next(tick)), faults=inj)
+    _submit_all(eng, prompts, max_new=32)
+    done = eng.run(max_steps=400)
+    st = eng.stats()
+    # a zero deadline already passed for every live request: the next
+    # sweep reaps the entire schedule at once
+    assert st["timed_out"] > 0 and st["finished"] + st["timed_out"] == 6
+    assert ("deadline_storm" in {a for _, a, _ in inj.log})
+    assert len(done) == 6
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# NaN quarantine (in-jit flag, no extra dispatch, batch undisturbed)
+# ---------------------------------------------------------------------------
+
+
+def test_nan_quarantine_fused(cfg, params):
+    prompts = _prompts(cfg, 4)
+    base = _baseline(cfg, params, prompts)
+    inj = FaultInjector({3: StepFaults(nan=(2, 0))})
+    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8,
+                 faults=inj)
+    _submit_all(eng, prompts)
+    done = eng.run(max_steps=400)
+    st = eng.stats()
+    assert st["failed"] == 1 and st["finished"] == 3
+    for r in done:
+        if r.rid == 2:
+            assert r.state == "failed"
+        else:                       # batchmates keep their exact tokens
+            assert r.state == "finished" and r.output == base[r.rid]
+    # the poison mask is a traced argument: quarantining retraced nothing
+    # (every executable compiled exactly once)
+    assert all(v == 1 for v in eng.trace_counts.values()), eng.trace_counts
+    _assert_clean(eng)
+
+
+def test_nan_quarantine_speculative(cfg, params):
+    prompts = _prompts(cfg, 4)
+    base = _baseline(cfg, params, prompts, max_new=8,
+                     speculate="ngram", spec_depth=3)
+    inj = FaultInjector({4: StepFaults(nan=(1, 0))})
+    eng = Engine(cfg, params, max_batch=2, n_blocks=32, block_size=8,
+                 speculate="ngram", spec_depth=3, faults=inj)
+    _submit_all(eng, prompts, max_new=8)
+    done = eng.run(max_steps=400)
+    st = eng.stats()
+    assert st["failed"] == 1 and st["finished"] == 3
+    assert st["spec_abandoned"] == 1    # reaped mid-speculation
+    for r in done:
+        if r.state == "finished":
+            assert r.output == base[r.rid]
+    assert all(v == 1 for v in eng.trace_counts.values()), eng.trace_counts
+    _assert_clean(eng)
+
+
+def test_nan_quarantine_chunked_prefill(cfg, params):
+    prompts = _prompts(cfg, 4)
+    inj = FaultInjector({1: StepFaults(nan=(0, 1))})
+    eng = Engine(cfg, params, max_batch=2, n_blocks=32, block_size=8,
+                 prefill_chunk=4, faults=inj)
+    _submit_all(eng, prompts, max_new=4)
+    done = eng.run(max_steps=400)
+    st = eng.stats()
+    # rid 0 is poisoned while still paging its prompt out: quarantined
+    # before it ever emits, and the other three finish untouched
+    assert st["failed"] == 1 and st["finished"] == 3
+    failed = [r for r in done if r.state == "failed"]
+    assert [r.rid for r in failed] == [0] and failed[0].output == []
+    assert all(v == 1 for v in eng.trace_counts.values()), eng.trace_counts
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Allocator faults, seeded chaos schedules, watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_injected_alloc_failures_are_backpressure(cfg, params):
+    prompts = _prompts(cfg, 6)
+    base = _baseline(cfg, params, prompts)
+    inj = FaultInjector({0: StepFaults(alloc_failures=2),
+                         3: StepFaults(alloc_failures=1)})
+    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8,
+                 faults=inj)
+    _submit_all(eng, prompts)
+    done = eng.run(max_steps=400)
+    # a lying allocator only delays: every request still finishes with
+    # its exact fault-free tokens
+    assert all(r.state == "finished" for r in done)
+    assert {r.rid: r.output for r in done} == base
+    _assert_clean(eng)
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_seeded_chaos_schedule_no_leaks(cfg, params, seed):
+    prompts = _prompts(cfg, 6)
+    base = _baseline(cfg, params, prompts, max_new=6)
+    inj = FaultInjector.from_seed(seed, rids=range(6), horizon=40,
+                                  squeezes=2, cancels=2, alloc_failures=2)
+    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8,
+                 faults=inj)
+    _submit_all(eng, prompts, max_new=6)
+    done = eng.run(max_steps=600)
+    inj.release_all(eng)
+    assert inj.quiescent
+    st = eng.stats()
+    assert len(done) == 6
+    assert st["finished"] + st["cancelled"] == 6
+    for r in done:                      # survivors bitwise-match baseline
+        if r.state == "finished":
+            assert r.output == base[r.rid], (seed, r.rid, inj.log)
+    _assert_clean(eng)
+    # replayability: the same seed produces the same schedule
+    again = FaultInjector.from_seed(seed, rids=range(6), horizon=40,
+                                    squeezes=2, cancels=2, alloc_failures=2)
+    assert again.schedule == inj.schedule
+
+
+def test_watchdog_raises_stall_error(cfg, params):
+    # squeeze the whole pool at step 0 and never give it back: nothing
+    # can admit, nothing can progress — the watchdog must name the wedge
+    inj = FaultInjector({0: StepFaults(squeeze_blocks=8)})
+    eng = Engine(cfg, params, max_batch=2, n_blocks=8, block_size=8,
+                 faults=inj, stall_limit=5)
+    eng.submit(Request(rid=42, tokens=[1, 2, 3], max_new_tokens=3))
+    with pytest.raises(StallError) as ei:
+        eng.run(max_steps=100)
+    assert ei.value.rids == [42]
+    assert "rid=42" in str(ei.value) and "waiting" in str(ei.value)
+    # the request is stuck, not lost: releasing the pool lets it finish
+    inj.release_all(eng)
+    done = eng.run(max_steps=100)
+    assert [r.rid for r in done] == [42] and done[0].state == "finished"
+    _assert_clean(eng)
+
+
+def test_healthy_run_never_trips_watchdog(cfg, params):
+    # bounded squeezes from a seed always schedule their release, so a
+    # fault schedule alone cannot stall past the default limit
+    prompts = _prompts(cfg, 4)
+    inj = FaultInjector.from_seed(3, rids=range(4), horizon=30, cancels=1)
+    eng = Engine(cfg, params, max_batch=2, n_blocks=16, block_size=8,
+                 faults=inj, stall_limit=40)
+    _submit_all(eng, prompts, max_new=4)
+    done = eng.run(max_steps=400)       # must not raise StallError
+    assert len(done) == 4
+    inj.release_all(eng)
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Satellite (c): cancellation x speculation — mid-window cancel leaves
+# the paged storage bitwise-identical to a run that never saw the request
+# ---------------------------------------------------------------------------
+
+
+class _FixedProposer:
+    """Always proposes the same continuation: keeps every verify round's
+    window bucket constant, so the cancelled-vs-replay engines compile
+    and run byte-identical executables (the PR 5 parity discipline)."""
+
+    def propose(self, req, k):
+        return [3, 9][:k]
+
+
+def test_cancel_mid_spec_window_bitwise_storage(cfg, params):
+    from repro.serving.speculate import Speculator
+
+    # one block per request (block_size covers prompt+output), so request
+    # A's pages land at identical block ids whether or not B ever existed
+    kw = dict(max_batch=2, n_blocks=4, block_size=32)
+    pa = _prompts(cfg, 1, plen=8, seed=1)[0]
+    pb = _prompts(cfg, 1, plen=9, seed=2)[0]    # distinct prefill group
+
+    # run 1: A and B decode together; B is cancelled mid-verify-window
+    inj = FaultInjector({2: StepFaults(cancel_rids=(1,))})
+    eng1 = Engine(cfg, params, speculate=Speculator(_FixedProposer(),
+                                                    depth=1),
+                  faults=inj, **kw)
+    eng1.submit(Request(rid=0, tokens=list(pa), max_new_tokens=8))
+    eng1.submit(Request(rid=1, tokens=list(pb), max_new_tokens=32))
+    done1 = eng1.run(max_steps=200)
+    st1 = eng1.stats()
+    assert st1["cancelled"] == 1 and st1["finished"] == 1
+    assert st1["spec_abandoned"] == 1
+    a1 = next(r for r in done1 if r.rid == 0)
+
+    # run 2: the world where B never arrived
+    eng2 = Engine(cfg, params, speculate=Speculator(_FixedProposer(),
+                                                    depth=1), **kw)
+    eng2.submit(Request(rid=0, tokens=list(pa), max_new_tokens=8))
+    done2 = eng2.run(max_steps=200)
+    a2 = done2[0]
+
+    # A's tokens are unaffected by B's lifetime, and the ENTIRE paged
+    # pool is bitwise-identical: B's accepted appends were scrubbed on
+    # cancel, its rejected appends were null-writes that never landed
+    assert a1.output == a2.output
+    for key in eng1.kv.state:
+        np.testing.assert_array_equal(
+            np.asarray(eng1.kv.state[key]), np.asarray(eng2.kv.state[key]),
+            err_msg=f"kv.state[{key!r}] differs after mid-window cancel")
+    _assert_clean(eng1)
+    _assert_clean(eng2)

@@ -166,16 +166,20 @@ def test_scheduler_priority_fcfs_tiebreak(arrivals, seed):
 @settings(**SETTINGS)
 @given(data=st.data())
 def test_scheduler_admit_never_inverts_priority(data):
-    """Randomized submit / admit / grow / finish sequences: admission is
-    always a priority-prefix of the waiting queue (no younger request is
-    admitted over a waiting elder), the waiting queue stays FCFS-sorted
-    through preemptions, and every preemption victim is strictly younger
-    than the request that grew."""
-    from repro.serving.scheduler import Scheduler, Request, _priority
-    from repro.serving.cache import OutOfBlocks
+    """Randomized submit / admit / grow / finish / cancel / timeout
+    sequences: admission is always a priority-prefix of the waiting queue
+    (no younger request is admitted over a waiting elder), the waiting
+    queue stays FCFS-sorted through preemptions and terminal evictions,
+    every preemption victim is strictly younger than the request that
+    grew, and block accounting (owned + free == pool, no duplicates) holds
+    through every lifecycle exit."""
+    from repro.serving.scheduler import (CANCELLED, TERMINAL_STATES,
+                                         TIMED_OUT, Rejected, Request,
+                                         Scheduler, _priority)
 
     sched = Scheduler(max_batch=3, n_blocks=8, block_size=4,
-                      prefill_chunk=None)
+                      prefill_chunk=None,
+                      queue_cap=data.draw(st.sampled_from([None, 2, 5])))
     preempt_log = []
     orig = sched.preempt
 
@@ -186,11 +190,12 @@ def test_scheduler_admit_never_inverts_priority(data):
     sched.preempt = spy
     rid = 0
     live = []
+    evicted = []
     clock = 0.0
     n_ops = data.draw(st.integers(5, 30))
     for step in range(n_ops):
         op = data.draw(st.sampled_from(["submit", "admit", "grow",
-                                        "finish"]))
+                                        "finish", "cancel", "timeout"]))
         if op == "submit":
             # arrivals are nondecreasing (wall clock); a zero increment
             # forces the equal-arrival rid tie-break
@@ -202,7 +207,11 @@ def test_scheduler_admit_never_inverts_priority(data):
             rid += 1
             try:
                 sched.submit(r)
-            except OutOfBlocks:
+            except Rejected as e:
+                # footprint or queue-cap rejection: terminal, never queued
+                assert e.reason in ("unschedulable", "queue_full")
+                assert r.state == "rejected"
+                assert r not in sched.waiting
                 continue
         elif op == "admit":
             admitted = sched.admit(now=float(step))
@@ -223,10 +232,35 @@ def test_scheduler_admit_never_inverts_priority(data):
             r = data.draw(st.sampled_from(live))
             sched.finish(r, now=float(step))
             live = [r for r in sched.running if r is not None]
+        elif op in ("cancel", "timeout"):
+            # terminal eviction of ANY scheduled request — active ones
+            # leave through the scrub→release path, waiting ones leave
+            # the queue; either way nothing about FCFS or block
+            # accounting may wobble
+            pool = [r for r in sched.running if r is not None] \
+                + list(sched.waiting)
+            if not pool:
+                continue
+            r = data.draw(st.sampled_from(pool))
+            state = CANCELLED if op == "cancel" else TIMED_OUT
+            sched.evict_terminal(r, state, now=float(step))
+            assert r.state == state and r.state in TERMINAL_STATES
+            assert r.finish_time == float(step)
+            assert not r.blocks and r.slot == -1
+            assert r not in sched.waiting
+            assert r not in sched.running
+            evicted.append(r)
+            live = [r for r in sched.running if r is not None]
         # global invariants after every operation
         wl = list(sched.waiting)
         assert wl == sorted(wl, key=_priority)      # queue stays FCFS
         held = [b for r in sched.running if r is not None
                 for b in r.blocks]
         assert len(held) == len(set(held))          # no shared blocks
+        free = list(sched.alloc.free)
+        assert len(free) == len(set(free))          # free list dup-free
+        assert not set(held) & set(free)            # disjoint ownership
         assert len(held) + sched.alloc.n_free == sched.alloc.n_blocks
+    # terminal means terminal: no evicted request ever reappears
+    for r in evicted:
+        assert r not in sched.waiting and r not in sched.running

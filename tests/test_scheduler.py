@@ -9,8 +9,7 @@ from repro.configs import get_config
 from repro.models import blocks as B
 from repro.models.lm import LM
 from repro.models.ssd import ssd_chunked_ref
-from repro.serving.cache import OutOfBlocks
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine, Rejected, Request
 
 
 def _params(cfg):
@@ -166,9 +165,11 @@ def test_submit_rejects_unschedulable_footprint():
     cfg = get_config("qwen1.5-0.5b", reduced=True)
     params = _params(cfg)
     eng = Engine(cfg, params, max_batch=2, n_blocks=4, block_size=4)
-    with pytest.raises(OutOfBlocks):
+    with pytest.raises(Rejected) as ei:
         eng.submit(Request(rid=0, tokens=list(range(1, 17)),
                            max_new_tokens=8))     # 6 blocks > 4-block pool
+    assert ei.value.reason == "unschedulable"
+    assert eng.stats()["rejected_reasons"] == {"unschedulable": 1}
 
 
 # ---------------------------------------------------------------------------
