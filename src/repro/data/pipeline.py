@@ -144,6 +144,22 @@ def repetitive_requests(n: int, vocab: int,
     return [(pat * reps)[:prompt_len] for _ in range(n)]
 
 
+def shared_prefix_requests(n: int, vocab: int, prefix_len: int = 48,
+                           suffix_len: int = 8, seed: int = 0):
+    """Shared-system-prompt trace: every request opens with the SAME
+    ``prefix_len``-token prefix (a system prompt / few-shot header) and
+    appends its own random ``suffix_len``-token tail. The workload the
+    cross-request prefix cache (serving/prefix_cache.py) is built for:
+    with caching on, every request after the first re-prefills only its
+    suffix, so TTFT collapses toward the no-prefill floor and a fixed
+    block pool holds the prefix once instead of ``n`` times."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, vocab, size=prefix_len, dtype=np.int32).tolist()
+    return [prefix + rng.integers(1, vocab, size=suffix_len,
+                                  dtype=np.int32).tolist()
+            for _ in range(n)]
+
+
 def poisson_arrivals(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:
     """Cumulative arrival offsets (seconds from t0) of a Poisson process at
     ``rate_rps`` requests/second — the open-loop workload used by

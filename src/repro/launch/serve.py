@@ -35,6 +35,20 @@ contractions accumulate in f32, see models/layers.dense).
         --deadline-s 2.0 --queue-cap 8       # SLO deadlines + load shedding
     PYTHONPATH=src python -m repro.launch.serve \
         --chaos 7                            # seeded fault injection
+    PYTHONPATH=src python -m repro.launch.serve \
+        --prefix-cache --prefill-chunk 16    # cross-request prefix caching
+
+``--prefix-cache`` turns on cross-request prefix caching
+(serving/prefix_cache.py): full prefill blocks are content-indexed in a
+radix trie, admission shares the longest cached prefix at refcount+1
+(copy-on-write guards the tail), and refcount-zero cached blocks form an
+LRU second-chance pool reclaimed only when the free list runs dry. A
+trace with repeated prompts prefills each shared prefix once —
+``prefix_cache_hit_rate`` and ``cached_tokens_reused`` in the printed
+stats show the effect — while greedy output stays token-identical to a
+cache-off run. Requires ``--prefill-chunk``: hits resume through the
+chunk executable at chunk-aligned depths only, which is what makes the
+parity exact rather than approximate.
 
 Lifecycle flags (see the engine's "Failure semantics" docstring):
 ``--deadline-s`` stamps every request with a wall-clock deadline — the
@@ -112,6 +126,15 @@ def main():
                     help="bound the waiting queue: submissions beyond the "
                          "cap are rejected (load shedding) instead of "
                          "queueing unboundedly (0 = unbounded)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix caching: full prefill "
+                         "blocks are content-indexed in a radix trie and "
+                         "admission shares the longest cached prefix at "
+                         "refcount+1, so repeated system prompts / "
+                         "multi-turn histories prefill only their novel "
+                         "suffix. Greedy output is token-identical to a "
+                         "cache-off run; see prefix_cache_hit_rate / "
+                         "cached_tokens_reused in the printed stats")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="seeded deterministic fault injection: block "
                          "squeezes, forced allocator failures and delayed "
@@ -161,6 +184,11 @@ def main():
               if args.chaos is not None else None)
     if faults is not None and args.mode != "fused":
         ap.error("--chaos requires the fused engine (drop --legacy)")
+    if args.prefix_cache and not args.prefill_chunk:
+        ap.error("--prefix-cache requires --prefill-chunk N: a cache hit "
+                 "resumes the suffix through the chunk executable, and "
+                 "only a chunk-aligned resume keeps greedy output "
+                 "token-identical to a cache-off run")
     eng = Engine(cfg, params, max_batch=args.max_batch,
                  n_blocks=args.n_blocks, block_size=args.block_size,
                  kv_quant="int8" if args.int8_kv else "none",
@@ -169,7 +197,7 @@ def main():
                  speculate=args.speculate, spec_depth=args.spec_depth,
                  mesh=mesh, queue_cap=args.queue_cap or None,
                  default_deadline_s=args.deadline_s or None,
-                 faults=faults)
+                 faults=faults, prefix_cache=args.prefix_cache)
     # warm every chunk-step table bucket the trace implies, not just the
     # widest: each distinct prompt length compiles its own footprint bucket
     # (a uniform trace still needs its prompt bucket, which can differ from

@@ -54,15 +54,32 @@ class OutOfBlocks(RuntimeError):
 
 
 class BlockAllocator:
-    """Free-list allocator over KV blocks (host-side, O(1) alloc/free).
+    """Ref-counted free-list allocator over KV blocks (host-side).
 
-    Contract: ``alloc(n)`` either returns exactly ``n`` block ids or raises
-    :class:`OutOfBlocks` — it never returns ``None`` or a partial list.
-    ``release`` enforces the owned/free invariant: every id must be a real
-    block that is currently *owned* (allocated and not yet freed). A
-    double-release used to silently append the id to the free list twice,
-    after which two requests could be handed the same block and corrupt
-    each other's KV; now it raises ``ValueError`` at the offending call.
+    Contract: ``alloc(n)`` either returns exactly ``n`` block ids (each at
+    refcount 1) or raises :class:`OutOfBlocks` — it never returns ``None``
+    or a partial list. ``release`` *decrements*: a block only leaves a
+    table's ownership when its count drops to zero, which is what lets
+    several requests reference the same physical prefix block
+    (serving/prefix_cache.py). ``release`` still enforces the owned/free
+    invariant per call: every id must be a real block currently referenced
+    by the caller. A double-release used to silently append the id to the
+    free list twice, after which two requests could be handed the same
+    block and corrupt each other's KV; now it raises ``ValueError`` at the
+    offending call.
+
+    With a prefix cache attached (:meth:`attach_cache`):
+
+      * ``release`` routes a refcount-zero *cached* block into the cache's
+        LRU second-chance pool instead of the free list — bytes stay valid
+        for a future prefix match, and nothing is scrubbed on release;
+      * ``alloc`` reclaims from that pool (scrub-on-reclaim, LRU-first)
+        when the free list alone is short;
+      * :meth:`share` takes an extra reference on an already-resident
+        block, reviving it from the second-chance pool if needed.
+
+    ``n_available`` (free + cached-reclaimable) is the admission-control
+    quantity; ``n_free`` remains the strict free-list length.
 
     :meth:`fail_next` is the deterministic fault-injection hook: the next
     N calls to ``alloc`` raise :class:`OutOfBlocks` regardless of the free
@@ -74,7 +91,14 @@ class BlockAllocator:
         self.free: List[int] = list(range(n_blocks - 1, -1, -1))
         self._free_set = set(self.free)
         self.n_blocks = n_blocks
+        self.refcount: List[int] = [0] * n_blocks
+        self.cache = None           # optional PrefixCache
         self._fail_next = 0
+
+    def attach_cache(self, cache) -> None:
+        """Install a :class:`~repro.serving.prefix_cache.PrefixCache` as
+        the second-chance pool / reclaim source."""
+        self.cache = cache
 
     def fail_next(self, n: int = 1) -> None:
         """Arm ``n`` injected failures: each of the next ``n`` ``alloc``
@@ -89,12 +113,42 @@ class BlockAllocator:
             raise OutOfBlocks(
                 f"injected allocator failure (requested {n} blocks, "
                 f"{len(self.free)} nominally free)")
+        if len(self.free) < n and self.cache is not None:
+            reclaimed = self.cache.reclaim(n - len(self.free))
+            self.free.extend(reclaimed)
+            self._free_set.update(reclaimed)
         if len(self.free) < n:
             raise OutOfBlocks(
                 f"requested {n} blocks, only {len(self.free)} free")
         out = [self.free.pop() for _ in range(n)]
         self._free_set.difference_update(out)
+        for b in out:
+            self.refcount[b] = 1
         return out
+
+    def share(self, blocks: List[int]) -> None:
+        """Take one extra reference on each block (prefix reuse). Blocks
+        must be resident: either referenced by some table (refcount > 0)
+        or parked in the prefix cache's second-chance pool, from which
+        they are revived. Sharing a free block would alias live pages —
+        that raises, same contract as a bad release."""
+        for b in blocks:
+            if b < 0 or b >= self.n_blocks:
+                raise ValueError(f"share of block {b} outside the pool "
+                                 f"[0, {self.n_blocks})")
+            if b in self._free_set:
+                raise ValueError(
+                    f"share of block {b}: it is on the free list — its "
+                    f"bytes are not a valid cached prefix")
+        for b in blocks:
+            if self.refcount[b] > 0:
+                self.refcount[b] += 1
+            else:
+                if self.cache is None or not self.cache.revive(b):
+                    raise ValueError(
+                        f"share of block {b}: refcount is zero and it is "
+                        f"not parked in the prefix cache")
+                self.refcount[b] = 1
 
     def release(self, blocks: List[int]) -> None:
         seen = set()
@@ -102,21 +156,48 @@ class BlockAllocator:
             if b < 0 or b >= self.n_blocks:
                 raise ValueError(f"release of block {b} outside the pool "
                                  f"[0, {self.n_blocks})")
-            if b in self._free_set or b in seen:
+            if b in self._free_set or b in seen or self.refcount[b] == 0:
                 raise ValueError(
                     f"double release of block {b}: it is already on the "
                     f"free list (freed blocks may have been reallocated — "
                     f"this would hand one page to two owners)")
             seen.add(b)
-        self.free.extend(blocks)
-        self._free_set.update(blocks)
+        freed = []
+        for b in blocks:
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                if self.cache is not None and self.cache.is_cached(b):
+                    self.cache.on_unreferenced(b)
+                else:
+                    freed.append(b)
+        self.free.extend(freed)
+        self._free_set.update(freed)
 
     @property
     def n_free(self) -> int:
         return len(self.free)
 
+    @property
+    def n_reclaimable(self) -> int:
+        """Cached blocks at refcount zero — evictable on demand."""
+        return self.cache.n_unreferenced if self.cache is not None else 0
+
+    @property
+    def n_available(self) -> int:
+        """Blocks obtainable by one ``alloc``: free + cached-reclaimable.
+        This is what admission control and growth should gate on — a
+        parked cached block is capacity, not pressure."""
+        return len(self.free) + self.n_reclaimable
+
+    def occupancy(self) -> Dict[str, int]:
+        """Pool split: {owned (referenced), cached_reclaimable, free}."""
+        free = len(self.free)
+        cached = self.n_reclaimable
+        return {"owned": self.n_blocks - free - cached,
+                "cached_reclaimable": cached, "free": free}
+
     def utilization(self) -> float:
-        return 1.0 - len(self.free) / max(self.n_blocks, 1)
+        return 1.0 - self.n_available / max(self.n_blocks, 1)
 
 
 # ==========================================================================
@@ -278,14 +359,54 @@ def truncate_slots(state: Dict[str, jax.Array], block_ids,
     total = len(ids) * block_size
     if keep_tokens >= total:
         return state
-    pos = np.arange(keep_tokens, total)
-    blk = jnp.asarray(ids[pos // block_size])
-    off = jnp.asarray(pos % block_size, np.int32)
+    # Split the rewind into (a) the tail of the partially-kept boundary
+    # block, scrubbed per-position, and (b) every wholly-scrubbed block,
+    # reset with ONE block-granular set. The common keep_tokens=0 full
+    # scrub (preemption, refcount-zero reclaim of a large cached pool) is
+    # then O(blocks) instead of one O(blocks * block_size) scatter of
+    # per-token indices; the values written are identical constants, so
+    # the result is bitwise-identical to the per-position form.
+    out = dict(state)
+    first_whole = -(-keep_tokens // block_size)
+    if keep_tokens % block_size:
+        bnd = int(ids[keep_tokens // block_size])
+        off = jnp.arange(keep_tokens % block_size, block_size,
+                         dtype=jnp.int32)
+        for key in state:
+            fill = 1.0 if key.endswith("_scale") else 0.0
+            out[key] = out[key].at[:, bnd, off].set(
+                jnp.asarray(fill, out[key].dtype))
+    if first_whole < len(ids):
+        whole = jnp.asarray(ids[first_whole:])
+        for key in state:
+            fill = 1.0 if key.endswith("_scale") else 0.0
+            out[key] = out[key].at[:, whole].set(
+                jnp.asarray(fill, out[key].dtype))
+    return out
+
+
+def scrub_blocks(state: Dict[str, jax.Array],
+                 block_ids) -> Dict[str, jax.Array]:
+    """Reset whole blocks (any sequence) to the never-written state in one
+    block-granular set per leaf — the scrub-on-reclaim path for the prefix
+    cache's second-chance pool and the refcount-aware preemption scrub."""
+    ids = jnp.asarray(np.asarray(block_ids, np.int32))
     out = dict(state)
     for key in state:
         fill = 1.0 if key.endswith("_scale") else 0.0
-        out[key] = state[key].at[:, blk, off].set(
+        out[key] = state[key].at[:, ids].set(
             jnp.asarray(fill, state[key].dtype))
+    return out
+
+
+def copy_block(state: Dict[str, jax.Array], src: int, dst: int
+               ) -> Dict[str, jax.Array]:
+    """Copy one block's bytes (all layers, all leaves) src -> dst: the
+    copy-on-write primitive — a request about to append into a shared or
+    cache-registered block first duplicates it into a private one."""
+    out = dict(state)
+    for key in state:
+        out[key] = state[key].at[:, dst].set(state[key][:, src])
     return out
 
 
@@ -293,15 +414,28 @@ def gather(state: Dict[str, jax.Array], layer: int, block_table: jax.Array,
            dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
     """Dense per-batch view: block_table (B, max_blocks) int32 ->
     k,v (B, max_blocks*block, K, hd). Dense 128-aligned block gather.
-    Legacy-path only; the fused step reads pages through the block table."""
-    kq = state["k"][layer][block_table]          # (B, MB, bs, K, hd)
-    vq = state["v"][layer][block_table]
-    ks = (state["k_scale"][layer][block_table]
+    Legacy-path only; the fused step reads pages through the block table.
+
+    Out-of-range table entries read as ZEROS: XLA's gather clamps indices,
+    so a table row padded with the ``n_blocks`` null-write sentinel would
+    otherwise silently alias the *last real block's* bytes — harmless only
+    as long as every caller also masks by kv_len, which the fused read
+    guarantees structurally and this path did not."""
+    table = jnp.asarray(block_table)
+    nb = state["k"].shape[1]
+    in_range = (table >= 0) & (table < nb)       # (B, MB)
+    safe = jnp.where(in_range, table, 0)
+    kq = state["k"][layer][safe]                 # (B, MB, bs, K, hd)
+    vq = state["v"][layer][safe]
+    ks = (state["k_scale"][layer][safe]
           if "k_scale" in state else None)
-    vs = (state["v_scale"][layer][block_table]
+    vs = (state["v_scale"][layer][safe]
           if "v_scale" in state else None)
     k = quant_decode(kq, ks, dtype)
     v = quant_decode(vq, vs, dtype)
+    mask = in_range[:, :, None, None, None]
+    k = jnp.where(mask, k, jnp.zeros((), k.dtype))
+    v = jnp.where(mask, v, jnp.zeros((), v.dtype))
     b, mb, bs = k.shape[:3]
     return (k.reshape(b, mb * bs, *k.shape[3:]),
             v.reshape(b, mb * bs, *v.shape[3:]))

@@ -140,6 +140,7 @@ benchmarks/bench_latency.py adds Poisson arrivals and SLO percentiles.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import Counter
 from typing import Any, Dict, List, Optional
@@ -157,6 +158,7 @@ from repro.parallel.sharding import make_serving_ctx, state_shardings, \
     logical_by_path_of
 from repro.serving import cache as C
 from repro.serving.cache import PagedKVCache, PagedKVConfig
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import (CANCELLED, FAILED, FINISHED, REJECTED,
                                      RUNNING, TERMINAL_STATES, TIMED_OUT,
                                      Rejected, Request, Scheduler)
@@ -211,9 +213,22 @@ class Engine:
                  speculate=None, spec_depth: int = 4, mesh=None,
                  clock=time.monotonic, queue_cap: Optional[int] = None,
                  default_deadline_s: Optional[float] = None,
-                 faults=None, stall_limit: int = 200):
+                 faults=None, stall_limit: int = 200,
+                 prefix_cache: bool = False):
         if mode not in ("fused", "legacy"):
             raise ValueError(f"mode must be 'fused' or 'legacy', got {mode!r}")
+        if prefix_cache and mode != "fused":
+            raise ValueError("prefix caching requires mode='fused' (suffix "
+                             "prefill resumes through the chunked step)")
+        if prefix_cache and prefill_chunk is None:
+            raise ValueError(
+                "prefix caching requires chunked prefill (prefill_chunk=N): "
+                "a cache hit resumes the suffix through the chunk "
+                "executable, and only a chunk-aligned resume reproduces "
+                "the cache-off run's numerics bit-for-bit — the whole-"
+                "prompt dense forward computes the same suffix with a "
+                "different reduction order, which can flip greedy "
+                "near-ties and break token parity")
         if stall_limit < 1:
             raise ValueError("stall_limit must be >= 1")
         self.spec = build_speculator(speculate, cfg, depth=spec_depth)
@@ -268,10 +283,36 @@ class Engine:
             kv_sharding = NamedSharding(
                 mesh, self._ctx.spec_for("kv_pool", pool_shape))
         self.kv = PagedKVCache(self.kv_cfg, sharding=kv_sharding)
+        # cross-request prefix caching (serving/prefix_cache.py): full
+        # prefill blocks are content-indexed in a radix trie; admission
+        # shares the longest cached prefix at refcount+1 and prefill pages
+        # only the novel suffix. For SSM/hybrid archs a match additionally
+        # needs a recurrent-state snapshot, captured only at
+        # chunk-schedule-aligned depths (``_ssm_snap_align``) so a resumed
+        # suffix regroups the SSD scan exactly as a from-scratch prefill.
+        self._prefix = None
+        if prefix_cache:
+            self._prefix = PrefixCache(block_size,
+                                       track_ssm=bool(self._ssm_pos))
+            self._prefix.scrub = self._scrub_block_ids
+            # bitwise-parity alignment: a hit may only skip a prefix that
+            # ends on a chunk boundary of the cache-off schedule — then
+            # the resumed chunks partition [cached, len) exactly as a cold
+            # prefill partitions them, so every attention reduction (and
+            # SSD regrouping) runs in the same order. Skips at other
+            # depths would move keys between the dense in-window and
+            # paged read paths and perturb ulps.
+            self._prefix.align_blocks = (
+                prefill_chunk // math.gcd(prefill_chunk, block_size))
+        self._ssm_snap_align = 1
+        if self._ssm_pos:
+            self._ssm_snap_align = (prefill_chunk if prefill_chunk
+                                    else max(getattr(cfg, "ssm_chunk", 1), 1))
         self.sched = Scheduler(max_batch=max_batch, n_blocks=n_blocks,
                                block_size=block_size,
                                prefill_chunk=prefill_chunk,
-                               queue_cap=queue_cap)
+                               queue_cap=queue_cap,
+                               prefix_cache=self._prefix)
         self.finished: List[Request] = []
         # request-lifecycle hardening (PR 6): deadlines, load shedding,
         # fault injection, watchdog — see "Failure semantics" above
@@ -321,6 +362,12 @@ class Engine:
         self.decode_tokens = 0
         self.decode_time = 0.0
         self.prefill_time = 0.0
+        # prefix-cache accounting: one lookup per admission, a hit when
+        # any cached tokens were reused; cow counts defensive tail copies
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
+        self.prefix_cow_copies = 0
 
     # engine-level views over the scheduler's bookkeeping (the public
     # surface tests and benchmarks built against v1)
@@ -397,6 +444,92 @@ class Engine:
             return
         self._ssm_states = jax.tree_util.tree_map(
             lambda a: a.at[:, slot].set(0), self._ssm_states)
+
+    def _restore_ssm_slot(self, req: Request) -> None:
+        """Load the matched trie node's SSM snapshot into ``req``'s slot:
+        the recurrent-state half of a prefix-cache hit (KV blocks cover
+        the attention half). The snapshot was captured after exactly
+        ``cached_tokens`` tokens at a chunk-schedule-aligned boundary, so
+        the resumed suffix prefill regroups the SSD scan identically to a
+        from-scratch prefill."""
+        node = req.cache_node
+        if node is None or node.ssm is None:
+            self._zero_ssm_slot(req.slot)
+            return
+        self._ssm_states = jax.tree_util.tree_map(
+            lambda full, snap: full.at[:, req.slot].set(snap),
+            self._ssm_states, node.ssm)
+
+    # ------------------------------------------------------------------
+    # Prefix-cache plumbing: registration as prefill pages blocks out,
+    # scrub-on-reclaim, and the defensive copy-on-write tail guard
+    # ------------------------------------------------------------------
+
+    def _snapshot_ssm_slot(self, slot: int):
+        return jax.tree_util.tree_map(lambda a: a[:, slot],
+                                      self._ssm_states)
+
+    def _cache_register(self, req: Request) -> None:
+        """Index every newly-FULL block of ``req``'s paged context in the
+        radix trie. Resumes below ``req.cache_node`` (the deepest node
+        already on its chain — matched at admission or registered by an
+        earlier chunk), so each block registers once. For SSM archs a
+        snapshot of the slot state attaches to the deepest node only when
+        the paged length sits on a chunk-schedule-aligned block boundary
+        (``_ssm_snap_align``) — a borrower resuming there regroups its
+        remaining chunks / SSD scan exactly as a cold prefill would."""
+        pc = self._prefix
+        if pc is None:
+            return
+        bs = self.block_size
+        paged = req.prefilled
+        n_full = paged // bs
+        node = req.cache_node
+        depth = node.depth if node is not None else 0
+        if n_full <= depth:
+            return
+        ctx = req.context_tokens()
+        snap = None
+        if self._ssm_pos and paged == n_full * bs \
+                and paged % self._ssm_snap_align == 0:
+            snap = self._snapshot_ssm_slot(req.slot)
+        for j in range(depth, n_full):
+            edge = tuple(int(t) for t in ctx[j * bs:(j + 1) * bs])
+            node = pc.register(node, edge, req.blocks[j],
+                               ssm=snap if j == n_full - 1 else None)
+        req.cache_node = node
+
+    def _scrub_block_ids(self, ids: List[int]) -> None:
+        """Zero whole blocks (scrub-on-reclaim hook for the prefix
+        cache's second-chance pool)."""
+        if self._attn_pos and ids:
+            self.kv.state = C.scrub_blocks(self.kv.state, ids)
+
+    def _cow_tail(self, req: Request, pos: Optional[int] = None) -> None:
+        """Copy-on-write guard before a write at token position ``pos``
+        (default: the next decode append): if the block it lands in is
+        shared (refcount > 1) or cache-registered, copy it into a private
+        block first. Structurally this cannot trigger — only FULL prefill
+        blocks are ever indexed/shared, writes always resume past the
+        shared prefix in a block with free tail slots — but the guard
+        makes the write path safe by construction rather than by
+        argument, and the chaos/property suites exercise it directly."""
+        if self._prefix is None or not req.blocks:
+            return
+        if pos is None:
+            pos = req.length - 1
+        bidx = pos // self.block_size
+        if bidx >= len(req.blocks):
+            return                  # ensure_blocks will grow a fresh one
+        b = req.blocks[bidx]
+        if self.alloc.refcount[b] == 1 and not self._prefix.is_cached(b):
+            return
+        [fresh] = self.alloc.alloc(1)
+        if self._attn_pos:
+            self.kv.state = C.copy_block(self.kv.state, b, fresh)
+        req.blocks[bidx] = fresh
+        self.alloc.release([b])
+        self.prefix_cow_copies += 1
 
     # ------------------------------------------------------------------
     # Scheduling entry points (policy lives in serving/scheduler.py)
@@ -489,6 +622,9 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _prefill(self, reqs: List[Request]) -> None:
+        # prefix-cache hits (prefilled > 0) cannot reach this path: the
+        # cache requires chunked prefill, where _prefill_chunk_tick
+        # resumes at req.prefilled natively
         by_len: Dict[int, List[Request]] = {}
         for r in reqs:
             by_len.setdefault(r.context_len(), []).append(r)
@@ -537,6 +673,7 @@ class Engine:
             r.prefilled = t
             r.state = RUNNING
             self.prefill_tokens += t
+            self._cache_register(r)
 
     # ------------------------------------------------------------------
     # Shared layer body. The fused decode step, the chunked-prefill step
@@ -723,6 +860,7 @@ class Engine:
         req, start, n = plan
         if not self.sched.ensure_blocks(req, start + n):
             return      # only elders hold blocks: wait for them to finish
+        self._cow_tail(req, pos=start)
         seq = req.context_tokens()
         cn = self.prefill_chunk
         chunk = seq[start:start + n] + [0] * (cn - n)
@@ -747,6 +885,7 @@ class Engine:
             return
         req.prefilled = start + n
         self.prefill_tokens += n
+        self._cache_register(req)
         if req.prefilled >= len(seq):
             if not req.output:      # fresh request: this IS the first token
                 req.output.append(int(next_tok))
@@ -845,6 +984,8 @@ class Engine:
         tokens = np.zeros((bsz,), np.int32)
         lengths = np.zeros((bsz,), np.int32)
         active = np.zeros((bsz,), bool)
+        for r in live:
+            self._cow_tail(r)
         mbb = _next_pow2(max(len(r.blocks) for r in live))
         table = np.zeros((bsz, mbb), np.int32)
         for r in live:
@@ -1010,6 +1151,8 @@ class Engine:
             rows.append(r)
         if not rows:
             return
+        for r in rows:
+            self._cow_tail(r)
         mbb = _next_pow2(max(len(r.blocks) for r in rows))
         table = np.zeros((bsz, mbb), np.int32)
         for r in rows:
@@ -1052,9 +1195,23 @@ class Engine:
         """Zero a preemption victim's pages before the allocator reuses
         them (cache.truncate_slots): partial overwrites by the next owner
         then can't leave stale bytes, so a preempted-then-resumed schedule
-        keeps the storage bit-identical to an uncontended one."""
-        if self._attn_pos and victim.blocks:
+        keeps the storage bit-identical to an uncontended one.
+
+        With the prefix cache on, only the victim's PRIVATE blocks are
+        scrubbed: a shared block (refcount > 1) stays live for its other
+        owners, and a cache-registered block keeps its bytes in the
+        second-chance pool — it is scrubbed on reclaim instead, which is
+        what makes the victim's own re-admission a cheap cache hit."""
+        if not (self._attn_pos and victim.blocks):
+            return
+        if self._prefix is None:
             self.kv.truncate_slots(victim.blocks, 0)
+            return
+        rc = self.alloc.refcount
+        private = [b for b in victim.blocks
+                   if rc[b] == 1 and not self._prefix.is_cached(b)]
+        if private:
+            self.kv.state = C.scrub_blocks(self.kv.state, private)
 
     def warmup(self, max_seq_len: int,
                prompt_lens: Optional[List[int]] = None) -> None:
@@ -1247,13 +1404,23 @@ class Engine:
         if self._deadlines_armed:
             self._sweep_deadlines(self.clock())
         admitted = self.sched.admit(self.clock())
+        for r in admitted:
+            if self._prefix is not None:
+                self.prefix_lookups += 1
+                if r.cached_tokens:
+                    self.prefix_hits += 1
+                    self.prefix_tokens_reused += r.cached_tokens
+            # a cache hit resumes the recurrent state from the matched
+            # node's snapshot; everything else starts the slot from zero
+            if r.cached_tokens and self._ssm_pos:
+                self._restore_ssm_slot(r)
+            elif self.prefill_chunk is not None:
+                self._zero_ssm_slot(r.slot)
         t0 = self.clock()
         if self.prefill_chunk is None:
             if admitted:
                 self._prefill(admitted)
         else:
-            for r in admitted:
-                self._zero_ssm_slot(r.slot)
             self._prefill_chunk_tick()
         self.prefill_time += self.clock() - t0
         # grow each decoding request's block table for this step's append;
@@ -1287,6 +1454,7 @@ class Engine:
         keys mean the step did nothing for anyone."""
         return (len(self.finished), self.sched.n_preemptions,
                 len(self.sched.waiting), self.alloc.n_free,
+                self.alloc.n_reclaimable,
                 tuple((r.rid, r.state, r.prefilled, len(r.output))
                       for r in self.sched.running if r is not None))
 
@@ -1324,6 +1492,13 @@ class Engine:
         self.sched.n_preemptions = 0
         self.n_rejected = 0
         self.rejected_reasons = Counter()
+        # prefix-cache counters reset; the cache CONTENTS survive — a
+        # benchmark's measured pass runs against the warmed cache, which
+        # is the steady state a deployment sees
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
+        self.prefix_cow_copies = 0
         if self.spec is not None:
             self.spec.reset()
 
@@ -1351,6 +1526,7 @@ class Engine:
         # the schedule shows up in exactly one of these buckets (rejected
         # ones never entered, so they count from the submit-side counter)
         causes = Counter(r.state for r in done)
+        occ = self.alloc.occupancy()
         return {
             **spec_stats,
             "requests": len(done),
@@ -1375,7 +1551,23 @@ class Engine:
             "p99_tpot_s": pct(tpot, 99),
             "mean_queue_s": float(np.mean(queue)) if queue else 0.0,
             "preemptions": self.sched.n_preemptions,
+            # pool pressure is 1 - available/total: a cached-but-
+            # reclaimable block is capacity (one alloc away from free),
+            # not pressure — the occupancy split below itemizes it
             "kv_utilization": self.alloc.utilization(),
+            "kv_blocks_owned": occ["owned"],
+            "kv_blocks_cached_reclaimable": occ["cached_reclaimable"],
+            "kv_blocks_free": occ["free"],
+            # prefix-cache effectiveness: hit rate over admissions (0.0
+            # when the cache is off or nothing was admitted — safe right
+            # after reset_stats()), resident index size, and total
+            # prefill tokens skipped via cached blocks
+            "prefix_cache_hit_rate": (self.prefix_hits / self.prefix_lookups
+                                      if self.prefix_lookups else 0.0),
+            "cached_blocks": (self._prefix.n_cached_blocks
+                              if self._prefix is not None else 0),
+            "cached_tokens_reused": self.prefix_tokens_reused,
+            "prefix_cow_copies": self.prefix_cow_copies,
             "decode_tokens": self.decode_tokens,
             "prefill_tokens": self.prefill_tokens,
             "decode_time_s": self.decode_time,

@@ -43,7 +43,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["StepFaults", "FaultInjector"]
+__all__ = ["StepFaults", "FaultInjector", "POLLUTE_RID_BASE"]
+
+#: rid offset for injected cache-pollution twins: far above any test's
+#: base cohort, so "survivors" can be filtered by rid alone.
+POLLUTE_RID_BASE = 90_000
 
 
 @dataclasses.dataclass
@@ -60,6 +64,12 @@ class StepFaults:
     # stamp every non-terminal request with this deadline_s (relative to
     # its own arrival; pick a value the clock has already passed to storm)
     deadline_s: Optional[float] = None
+    # cache pollution: submit N divergent-suffix twins of live requests —
+    # each twin shares the first half of a victim's prompt and diverges
+    # after, so with the prefix cache on it hits the shared prefix and
+    # then forces the radix trie to branch mid-burst. Twin rids start at
+    # POLLUTE_RID_BASE so tests can separate them from the base cohort.
+    pollute_twins: int = 0
 
     def merged(self, other: "StepFaults") -> "StepFaults":
         return StepFaults(
@@ -69,7 +79,8 @@ class StepFaults:
             cancel_rids=self.cancel_rids + other.cancel_rids,
             nan=self.nan if self.nan is not None else other.nan,
             deadline_s=(self.deadline_s if self.deadline_s is not None
-                        else other.deadline_s))
+                        else other.deadline_s),
+            pollute_twins=self.pollute_twins + other.pollute_twins)
 
 
 class FaultInjector:
@@ -88,13 +99,14 @@ class FaultInjector:
         self.schedule: Dict[int, StepFaults] = dict(schedule or {})
         self.held: List[int] = []
         self.log: List[Tuple[int, str, object]] = []
+        self._twin_seq = 0      # deterministic pollution-twin counter
 
     # ------------------------------------------------------------------
     @classmethod
     def from_seed(cls, seed: int, *, rids: Sequence[int] = (),
                   horizon: int = 48, squeezes: int = 2, cancels: int = 2,
-                  alloc_failures: int = 2, nan_period: Optional[int] = None
-                  ) -> "FaultInjector":
+                  alloc_failures: int = 2, nan_period: Optional[int] = None,
+                  pollute: int = 0) -> "FaultInjector":
         """Generate a random-but-replayable schedule from ``seed``.
 
         Squeeze events hold blocks for at most ``horizon // 4`` steps (and
@@ -103,7 +115,10 @@ class FaultInjector:
         past the watchdog by construction. Cancellations target ``rids``;
         an rid that already reached a terminal state by its scheduled step
         is a logged no-op. ``nan_period`` (when given) adds one NaN
-        poisoning of a random rid at a random step.
+        poisoning of a random rid at a random step. ``pollute`` schedules
+        that many single-twin cache-pollution events at random steps
+        (mid-burst divergent-suffix submissions — see
+        :attr:`StepFaults.pollute_twins`).
         """
         rng = np.random.default_rng(seed)
         sched: Dict[int, StepFaults] = {}
@@ -119,6 +134,9 @@ class FaultInjector:
             add(k + hold, StepFaults(release_squeezed=True))
         for _ in range(alloc_failures):
             add(int(rng.integers(0, horizon)), StepFaults(alloc_failures=1))
+        for _ in range(pollute):
+            add(int(rng.integers(1, horizon)),
+                StepFaults(pollute_twins=1))
         if rids:
             pool = list(rids)
             for _ in range(min(cancels, len(pool))):
@@ -156,6 +174,8 @@ class FaultInjector:
                 r.deadline_s = f.deadline_s
             eng.arm_deadlines()
             self.log.append((step, "deadline_storm", f.deadline_s))
+        if f.pollute_twins:
+            self._pollute(eng, step, f.pollute_twins)
         for rid in f.cancel_rids:
             done = eng.cancel(rid)
             self.log.append((step, "cancel" if done else "cancel_miss", rid))
@@ -167,6 +187,36 @@ class FaultInjector:
                 self.log.append((step, "nan", (rid, period)))
             else:
                 self.log.append((step, "nan_miss", (rid, period)))
+
+    def _pollute(self, eng, step: int, n: int) -> None:
+        """Submit ``n`` divergent-suffix twins of live base requests:
+        prompt = victim.tokens[:half] + reversed(victim.tokens[half:]),
+        which shares every full prefix block with the victim and then
+        diverges — the radix trie must branch, and with the cache off the
+        twin is just extra load. Deterministic: victims are picked round-
+        robin over the rid-sorted live base cohort. A full queue
+        (load shedding) is a logged no-op, not a failure."""
+        from repro.serving.scheduler import Rejected, Request
+        for _ in range(n):
+            live = sorted((r for r in eng.live_requests()
+                           if r.rid < POLLUTE_RID_BASE),
+                          key=lambda r: r.rid)
+            if not live:
+                self.log.append((step, "pollute_miss", None))
+                self._twin_seq += 1
+                continue
+            src = live[self._twin_seq % len(live)]
+            half = max(1, len(src.tokens) // 2)
+            twin_tokens = (list(src.tokens[:half])
+                           + list(reversed(src.tokens[half:])))
+            rid = POLLUTE_RID_BASE + self._twin_seq
+            self._twin_seq += 1
+            try:
+                eng.submit(Request(rid=rid, tokens=twin_tokens,
+                                   max_new_tokens=2))
+                self.log.append((step, "pollute", (rid, src.rid)))
+            except Rejected as e:
+                self.log.append((step, "pollute_shed", (rid, e.reason)))
 
     def release_all(self, eng) -> None:
         """Return every squeezed block to the pool (end-of-run cleanup)."""

@@ -122,6 +122,13 @@ class Request:
     # first use and backs it off as acceptance drops. Survives preemption
     # — an evicted request resumes with its learned depth.
     spec_depth: int = 0
+    # prefix-cache bookkeeping, reset at each (re-)admission: how many
+    # context tokens were satisfied from cached blocks this admission, and
+    # the deepest trie node on this request's registered/shared chain (the
+    # engine resumes registration below it and restores its SSM snapshot).
+    cached_tokens: int = 0
+    cache_node: object = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def length(self) -> int:
@@ -167,7 +174,8 @@ class Scheduler:
 
     def __init__(self, *, max_batch: int, n_blocks: int, block_size: int,
                  prefill_chunk: Optional[int] = None,
-                 queue_cap: Optional[int] = None):
+                 queue_cap: Optional[int] = None,
+                 prefix_cache=None):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1 (or None)")
         if queue_cap is not None and queue_cap < 1:
@@ -176,7 +184,10 @@ class Scheduler:
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
         self.queue_cap = queue_cap
+        self.prefix_cache = prefix_cache
         self.alloc = BlockAllocator(n_blocks)
+        if prefix_cache is not None:
+            self.alloc.attach_cache(prefix_cache)
         self.waiting: deque = deque()
         self.running: List[Optional[Request]] = [None] * max_batch
         self.n_preemptions = 0
@@ -238,24 +249,42 @@ class Scheduler:
             if not free_slots:
                 break
             target = req.context_len()
-            first = (target if self.prefill_chunk is None
-                     else min(target, self.prefill_chunk))
-            need = self._blocks_for(first)
+            # Longest cached prefix (full blocks only, always < target):
+            # those blocks enter the table at refcount+1 and prefill skips
+            # straight to the novel suffix.
+            cached_node, cached_blocks = (
+                self.prefix_cache.match(req.context_tokens())
+                if self.prefix_cache is not None else (None, []))
+            n_cached = len(cached_blocks) * self.block_size
+            suffix = target - n_cached
+            first = (suffix if self.prefill_chunk is None
+                     else min(suffix, self.prefill_chunk))
+            need = self._blocks_for(n_cached + first) - len(cached_blocks)
             headroom = sum(1 for r in self.running if r is not None)
-            if self.alloc.n_free < need + headroom:
+            if self.alloc.n_available < need + headroom:
                 break               # no KV budget yet: keep FIFO order
             self.waiting.popleft()
+            # Pin the cached chain FIRST: share() revives refcount-zero
+            # blocks out of the second-chance pool, so the alloc() below
+            # cannot reclaim them out from under this request.
+            if cached_blocks:
+                self.alloc.share(cached_blocks)
             try:
-                req.blocks = self.alloc.alloc(need)
+                fresh = self.alloc.alloc(need)
             except OutOfBlocks:
                 # a lying/faulted allocator (fault injection, or a racing
                 # co-user) is backpressure, not a crash: requeue at the
                 # front and retry next step — FIFO order is preserved
+                if cached_blocks:
+                    self.alloc.release(cached_blocks)
                 self.waiting.appendleft(req)
                 break
+            req.blocks = list(cached_blocks) + fresh
             req.slot = free_slots[0]
             req.state = PREFILL
-            req.prefilled = 0
+            req.prefilled = n_cached
+            req.cached_tokens = n_cached
+            req.cache_node = cached_node
             if req.admitted_time is None:
                 req.admitted_time = now
             self.running[req.slot] = req
@@ -278,7 +307,7 @@ class Scheduler:
         need = self._blocks_for(n_tokens) - len(req.blocks)
         if need <= 0:
             return True
-        while self.alloc.n_free < need:
+        while self.alloc.n_available < need:
             victim = self._pick_victim(than=req)
             if victim is None:
                 return False        # req yields to its elders this step
@@ -308,6 +337,8 @@ class Scheduler:
         self.running[victim.slot] = None
         victim.slot = -1
         victim.prefilled = 0
+        victim.cached_tokens = 0
+        victim.cache_node = None
         victim.state = WAITING
         victim.n_preemptions += 1
         self.n_preemptions += 1

@@ -372,3 +372,58 @@ def test_cancel_mid_spec_window_bitwise_storage(cfg, params):
             err_msg=f"kv.state[{key!r}] differs after mid-window cancel")
     _assert_clean(eng1)
     _assert_clean(eng2)
+
+
+# ---------------------------------------------------------------------------
+# Cache-pollution chaos: divergent-suffix twins + squeezes, prefix cache on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_cache_pollution_chaos_survivors_bitwise_no_leaks(cfg, params, seed):
+    """Mid-burst divergent-suffix twins (``pollute``) force the radix trie
+    to branch while block squeezes and injected alloc failures squeeze the
+    pool — and every surviving base request still finishes with greedy
+    output bitwise-identical to a cache-off clean run. Afterwards nothing
+    leaks: parked cached blocks are capacity (one reclaim from free), not
+    leaks, so the hygiene check gates on ``n_available``, not ``n_free``.
+    """
+    from repro.serving.faults import POLLUTE_RID_BASE
+
+    prompts = _prompts(cfg, 6, plen=24)     # 3 full blocks: twins share
+    #                                         block 0, diverge inside 1
+    base = _baseline(cfg, params, prompts, max_new=6, prefill_chunk=8)
+    inj = FaultInjector.from_seed(seed, rids=range(6), horizon=40,
+                                  squeezes=2, cancels=1, alloc_failures=1,
+                                  pollute=3)
+    eng = Engine(cfg, params, max_batch=3, n_blocks=32, block_size=8,
+                 prefill_chunk=8, prefix_cache=True, faults=inj)
+    _submit_all(eng, prompts, max_new=6)
+    done = eng.run(max_steps=600)
+    inj.release_all(eng)
+    assert inj.quiescent
+    # the chaos fired: at least one twin really entered the schedule
+    # (events drawn past the run's natural end are silent no-ops) and
+    # prefill indexed real blocks for it to pollute
+    acts = [a for _, a, _ in inj.log]
+    assert any(a == "pollute" for a in acts), inj.log
+    assert eng._prefix.n_registered > 0
+    for r in done:                      # survivors bitwise-match baseline
+        if r.rid < POLLUTE_RID_BASE and r.state == "finished":
+            assert r.output == base[r.rid], (seed, r.rid, inj.log)
+    # cache-aware hygiene: pool fully recoverable, structures disjoint
+    alloc = eng.alloc
+    assert alloc.n_available == alloc.n_blocks
+    free = list(alloc.free)
+    assert len(free) == len(set(free))
+    assert not set(free) & set(eng._prefix.unref)
+    assert all(rc == 0 for rc in alloc.refcount)
+    assert not eng.sched.has_work
+    for r in eng.finished:
+        assert r.finish_time is not None
+        assert not r.blocks and r.slot == -1
+    # replayability: the same seed reproduces the same pollution schedule
+    again = FaultInjector.from_seed(seed, rids=range(6), horizon=40,
+                                    squeezes=2, cancels=1, alloc_failures=1,
+                                    pollute=3)
+    assert again.schedule == inj.schedule

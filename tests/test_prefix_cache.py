@@ -1,0 +1,494 @@
+"""Cross-request prefix caching (serving/prefix_cache.py + the ref-counted
+allocator in serving/cache.py).
+
+Contract under test, at every layer:
+
+  * radix index: longest-full-block-prefix match, first-writer dedup,
+    LRU second-chance eviction that only ever drains childless nodes;
+  * allocator: ``share`` takes references on resident blocks (reviving
+    parked ones), ``release`` decrements and routes refcount-zero cached
+    blocks to the second-chance pool, ``alloc`` reclaims from that pool
+    scrub-first when the free list runs dry — and the owned/free/parked
+    partition never leaks or aliases;
+  * engine: greedy output with ``prefix_cache=True`` is token-identical
+    to a cache-off run across archs (attention-only, pure-SSM, hybrid),
+    int8 KV, chunked prefill, speculation, preemption and cancellation,
+    while cache-hit requests skip their shared prefix's prefill;
+  * storage bugfix sweep regressions: ``gather`` masks padded table ids
+    to zeros instead of aliasing a real block, and the block-granular
+    ``truncate_slots`` is bitwise-identical to the per-position form.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import shared_prefix_requests
+from repro.models.lm import LM
+from repro.serving.cache import (BlockAllocator, OutOfBlocks, PagedKVCache,
+                                 PagedKVConfig, copy_block, init_state,
+                                 scrub_blocks, truncate_slots, write_prefill)
+from repro.serving.engine import Engine, Request
+from repro.serving.prefix_cache import PrefixCache
+
+
+# ---------------------------------------------------------------------------
+# Radix index units (no model, no jit)
+# ---------------------------------------------------------------------------
+
+
+def _chain(pc, blocks, tokens):
+    """Register ``blocks`` as the full-block chain spelling ``tokens``."""
+    node = None
+    for d, b in enumerate(blocks):
+        edge = tuple(tokens[d * pc.block_size:(d + 1) * pc.block_size])
+        node = pc.register(node, edge, b)
+    return node
+
+
+def test_radix_match_longest_prefix_and_cap():
+    pc = PrefixCache(4)
+    toks = list(range(1, 13))               # 3 full blocks
+    _chain(pc, [7, 2, 5], toks)
+    # full match is capped at (len-1)//bs: at least one token must remain
+    node, blocks = pc.match(toks)
+    assert blocks == [7, 2] and node.depth == 2
+    # one extra token unlocks the third block
+    node, blocks = pc.match(toks + [99])
+    assert blocks == [7, 2, 5] and node.depth == 3
+    # divergence in block 2 stops the walk after block 1
+    node, blocks = pc.match(toks[:4] + [88] * 8 + [1])
+    assert blocks == [7]
+    # a prompt shorter than one full block (plus the reserve token) can
+    # never match
+    assert pc.match(toks[:4]) == (None, [])
+    assert pc.match([]) == (None, [])
+
+
+def test_radix_register_dedup_first_writer_wins():
+    pc = PrefixCache(2)
+    n1 = pc.register(None, (1, 2), 10)
+    n2 = pc.register(None, (1, 2), 11)      # same edge, different block
+    assert n2 is n1 and n1.block == 10      # existing node wins
+    assert pc.n_registered == 1 and not pc.is_cached(11)
+    # a snapshot still attaches to the existing node if it lacks one
+    n3 = pc.register(None, (1, 2), 12, ssm="snap")
+    assert n3 is n1 and n1.ssm == "snap"
+    n4 = pc.register(None, (1, 2), 13, ssm="other")
+    assert n4.ssm == "snap"                 # first snapshot wins too
+
+
+def test_radix_ssm_backtracks_to_deepest_snapshot():
+    pc = PrefixCache(2, track_ssm=True)
+    toks = [1, 2, 3, 4, 5, 6]
+    n1 = pc.register(None, (1, 2), 10, ssm="s1")
+    pc.register(n1, (3, 4), 11)             # no snapshot at depth 2
+    node, blocks = pc.match(toks + [9])
+    assert blocks == [10] and node is n1    # backtracked past block 11
+    # attention-only index returns the full chain
+    pc2 = PrefixCache(2)
+    m1 = pc2.register(None, (1, 2), 10)
+    pc2.register(m1, (3, 4), 11)
+    assert pc2.match(toks + [9])[1] == [10, 11]
+
+
+def test_radix_lru_reclaim_childless_first():
+    pc = PrefixCache(2)
+    scrubbed = []
+    pc.scrub = scrubbed.extend
+    n1 = pc.register(None, (1, 2), 10)
+    pc.register(n1, (3, 4), 11)             # chain 10 -> 11
+    pc.register(None, (5, 6), 12)           # sibling leaf
+    # park in LRU order 10, 11, 12 — but 10 has a child, so the first
+    # eviction takes 11 (oldest *childless*); that unblocks 10, whose
+    # tick is older than 12's, so draining continues 10 then 12
+    for b in (10, 11, 12):
+        pc.on_unreferenced(b)
+    assert pc.reclaim(1) == [11]
+    assert pc.reclaim(2) == [10, 12]
+    assert scrubbed == [11, 10, 12]
+    assert pc.n_cached_blocks == 0 and pc.n_unreferenced == 0
+    assert pc.n_evicted == 3
+    # the evicted chain is gone from the index
+    assert pc.match([1, 2, 3]) == (None, [])
+
+
+def test_radix_revive_pulls_block_out_of_lru():
+    pc = PrefixCache(2)
+    pc.register(None, (1, 2), 10)
+    pc.on_unreferenced(10)
+    assert pc.n_unreferenced == 1
+    assert pc.revive(10) is True
+    assert pc.n_unreferenced == 0 and pc.is_cached(10)
+    assert pc.revive(10) is False           # not parked anymore
+    assert pc.reclaim(4) == []              # nothing evictable
+
+
+# ---------------------------------------------------------------------------
+# Ref-counted allocator units
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_share_release_refcount_cycle():
+    pc = PrefixCache(4)
+    a = BlockAllocator(8)
+    a.attach_cache(pc)
+    blocks = a.alloc(2)
+    assert all(a.refcount[b] == 1 for b in blocks)
+    a.share(blocks)                          # second reference
+    assert all(a.refcount[b] == 2 for b in blocks)
+    a.release(blocks)                        # drop one reference: still owned
+    assert all(a.refcount[b] == 1 for b in blocks)
+    assert a.n_free == 6
+    # uncached blocks at refcount zero go straight to the free list
+    a.release(blocks)
+    assert a.n_free == 8 and a.n_reclaimable == 0
+
+
+def test_allocator_release_parks_cached_blocks():
+    pc = PrefixCache(4)
+    a = BlockAllocator(8)
+    a.attach_cache(pc)
+    blocks = a.alloc(2)
+    _chain(pc, blocks, list(range(1, 9)))
+    a.release(blocks)
+    # cached blocks park instead of freeing: capacity, not a leak
+    assert a.n_free == 6 and a.n_reclaimable == 2 and a.n_available == 8
+    assert a.occupancy() == {"owned": 0, "cached_reclaimable": 2, "free": 6}
+    assert a.utilization() == 0.0
+    # share() revives a parked block back to refcount 1
+    a.share(blocks)
+    assert all(a.refcount[b] == 1 for b in blocks)
+    assert a.n_reclaimable == 0
+    a.release(blocks)
+
+
+def test_allocator_alloc_reclaims_from_cache_when_free_runs_dry():
+    pc = PrefixCache(4)
+    a = BlockAllocator(4)
+    a.attach_cache(pc)
+    scrubbed = []
+    pc.scrub = scrubbed.extend
+    held = a.alloc(2)
+    parked = a.alloc(2)
+    _chain(pc, parked, list(range(1, 9)))
+    a.release(parked)
+    assert a.n_free == 0 and a.n_available == 2
+    got = a.alloc(2)                         # forces LRU reclaim + scrub
+    assert sorted(got) == sorted(parked)
+    assert sorted(scrubbed) == sorted(parked)
+    assert pc.n_cached_blocks == 0
+    with pytest.raises(OutOfBlocks):         # pool is genuinely dry now
+        a.alloc(1)
+    a.release(held + got)
+    assert a.n_free == 4
+
+
+def test_allocator_share_rejects_free_and_unparked_blocks():
+    pc = PrefixCache(4)
+    a = BlockAllocator(4)
+    a.attach_cache(pc)
+    with pytest.raises(ValueError, match="free list"):
+        a.share([0])                         # free block: bytes are invalid
+    with pytest.raises(ValueError, match="outside the pool"):
+        a.share([99])
+    b = a.alloc(1)
+    a.release(b)                             # uncached -> free again
+    with pytest.raises(ValueError, match="free list"):
+        a.share(b)
+    # refcount zero and not parked (no cache entry) is also a hard error
+    a2 = BlockAllocator(4)
+    a2.attach_cache(PrefixCache(4))
+    a2.free.remove(3)                        # simulate an external owner
+    a2._free_set.discard(3)
+    with pytest.raises(ValueError, match="not parked"):
+        a2.share([3])
+
+
+def test_allocator_double_release_contract_survives_refcounts():
+    """The PR 5 owned/free invariant is unchanged by ref-counting: a
+    release of a free block, a duplicate within one call, or an id outside
+    the pool raises without mutating the free list."""
+    a = BlockAllocator(8)
+    b = a.alloc(4)
+    a.release(b[:2])
+    with pytest.raises(ValueError, match="double release"):
+        a.release(b[:1])
+    with pytest.raises(ValueError, match="double release"):
+        a.release([b[2], b[2]])
+    with pytest.raises(ValueError, match="outside the pool"):
+        a.release([99])
+    assert a.n_free == 6
+    assert len(set(a.alloc(6))) == 6
+
+
+# ---------------------------------------------------------------------------
+# Storage bugfix sweep regressions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "int8"])
+def test_gather_masks_padded_table_ids_to_zero(kv_quant):
+    """Legacy block tables are padded with id ``n_blocks``: the gather
+    used to clip that sentinel onto the last real block and read its
+    bytes into the padded rows. Padded ids must decode to exact zeros,
+    and the valid region must match an unpadded gather bit-for-bit."""
+    cfg = PagedKVConfig(n_layers=1, n_kv_heads=2, head_dim=8, n_blocks=4,
+                        block_size=4, kv_quant=kv_quant)
+    kv = PagedKVCache(cfg)
+    k = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 8), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 8), jnp.bfloat16)
+    kv.write_prefill((k, v), [3, 1])        # last real block is 3
+    padded = jnp.asarray([[3, 1, cfg.n_blocks, -1]], jnp.int32)
+    kd, vd = kv.gather(0, padded)
+    ref_k, ref_v = kv.gather(0, jnp.asarray([[3, 1]], jnp.int32))
+    for got, ref in ((kd, ref_k), (vd, ref_v)):
+        got = np.asarray(got, np.float32)
+        np.testing.assert_array_equal(got[0, :8], np.asarray(ref[0],
+                                                             np.float32))
+        np.testing.assert_array_equal(got[0, 8:], 0.0)
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "int8"])
+@pytest.mark.parametrize("keep", [0, 3, 4, 7, 11])
+def test_truncate_slots_bitwise_matches_per_position_form(kv_quant, keep):
+    """The block-granular truncate (boundary block per-position + whole
+    blocks in one set) must be bitwise-identical to scrubbing every
+    position individually — same constants, cheaper scatter."""
+    cfg = PagedKVConfig(n_layers=2, n_kv_heads=2, head_dim=8, n_blocks=6,
+                        block_size=4, kv_quant=kv_quant)
+    state = init_state(cfg)
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 12, 2, 8), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 2, 8), jnp.bfloat16)
+    ids = [2, 0, 5]
+    state = write_prefill(state, cfg.kv_quant, (k, v), ids)
+    fast = truncate_slots(state, ids, keep, cfg.block_size)
+    ref = dict(state)
+    for key in state:
+        fill = 1.0 if key.endswith("_scale") else 0.0
+        for pos in range(keep, len(ids) * cfg.block_size):
+            b, off = ids[pos // cfg.block_size], pos % cfg.block_size
+            ref[key] = ref[key].at[:, b, off].set(
+                jnp.asarray(fill, ref[key].dtype))
+    for key in state:
+        np.testing.assert_array_equal(np.asarray(fast[key]),
+                                      np.asarray(ref[key]),
+                                      err_msg=f"{key} keep={keep}")
+
+
+def test_scrub_blocks_and_copy_block_roundtrip():
+    cfg = PagedKVConfig(n_layers=1, n_kv_heads=2, head_dim=8, n_blocks=4,
+                        block_size=4, kv_quant="int8")
+    state = init_state(cfg)
+    fresh = {k: np.asarray(v) for k, v in state.items()}
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 8, 2, 8), jnp.bfloat16)
+    state = write_prefill(state, "int8", (k, k), [0, 2])
+    # copy_block duplicates one page's bytes (the COW primitive)
+    state = copy_block(state, 2, 3)
+    for key in state:
+        np.testing.assert_array_equal(np.asarray(state[key][:, 3]),
+                                      np.asarray(state[key][:, 2]))
+    # scrub restores the never-written state bit-for-bit
+    state = scrub_blocks(state, [0, 2, 3])
+    for key in state:
+        np.testing.assert_array_equal(np.asarray(state[key]), fresh[key])
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: cache-on greedy tokens == cache-off, with real hits
+# ---------------------------------------------------------------------------
+
+
+def _params(cfg):
+    return LM(cfg).init(jax.random.PRNGKey(0))
+
+
+def _run(cfg, params, prompts, *, prefix_cache, max_new=5, max_steps=600,
+         **kw):
+    """Drip-feed the trace (submit + one step per request) so the first
+    request registers its prefix before later ones are admitted — the
+    staggered-arrival pattern the cache is built for."""
+    eng = Engine(cfg, params, prefix_cache=prefix_cache, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, tokens=list(p), max_new_tokens=max_new))
+        eng.step()
+    done = eng.run(max_steps=max_steps)
+    assert len(done) == len(prompts)
+    return eng, {r.rid: list(r.output) for r in done}
+
+
+def _assert_no_leaks(eng):
+    """Cache-aware hygiene: every block is free or one reclaim away from
+    free, and the free list never collected a duplicate."""
+    assert eng.alloc.n_available == eng.alloc.n_blocks
+    free = list(eng.alloc.free)
+    assert len(free) == len(set(free))
+    assert all(rc == 0 for rc in eng.alloc.refcount)
+
+
+@pytest.mark.parametrize("arch,kv_quant,chunk,plen", [
+    ("qwen1.5-0.5b", "none", 8, 24),        # block-aligned chunks
+    ("qwen1.5-0.5b", "int8", 16, 24),       # quantized KV + capped match
+    ("mamba2-130m", "none", 32, 64),        # pure-SSM: snapshot restore
+    ("jamba-v0.1-52b", "int8", 32, 64),     # hybrid attention + SSM
+])
+def test_prefix_cache_greedy_parity_and_hits(arch, kv_quant, chunk, plen):
+    cfg = get_config(arch, reduced=True)
+    params = _params(cfg)
+    prompts = shared_prefix_requests(4, cfg.vocab_size, prefix_len=plen,
+                                     suffix_len=8, seed=3)
+    kw = dict(max_batch=2, n_blocks=64, block_size=8, kv_quant=kv_quant,
+              prefill_chunk=chunk)
+    eng_off, off = _run(cfg, params, prompts, prefix_cache=False, **kw)
+    eng_on, on = _run(cfg, params, prompts, prefix_cache=True, **kw)
+    assert on == off                        # token-identical, every request
+    st = eng_on.stats()
+    assert st["prefix_cache_hit_rate"] > 0.0
+    # every hit reuses at least one full block of the shared prefix
+    assert st["cached_tokens_reused"] >= 8
+    # cache-hit requests prefilled strictly fewer tokens than a cold run
+    assert st["prefill_tokens"] < eng_off.stats()["prefill_tokens"]
+    assert any(r.cached_tokens > 0 for r in eng_on.finished)
+    assert eng_off.alloc.n_free == eng_off.alloc.n_blocks
+    _assert_no_leaks(eng_on)
+
+
+def test_prefix_cache_requires_chunked_fused_engine():
+    """Exact parity is only constructible when a hit resumes through the
+    chunk executable at a chunk boundary — whole-prompt prefill and the
+    legacy loop are rejected at construction, not at first divergence."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    with pytest.raises(ValueError, match="chunked prefill"):
+        Engine(cfg, params, prefix_cache=True, max_batch=2, n_blocks=16,
+               block_size=8)                # prefill_chunk=None
+    with pytest.raises(ValueError, match="fused"):
+        Engine(cfg, params, prefix_cache=True, mode="legacy", max_batch=2,
+               n_blocks=16, block_size=8, prefill_chunk=8)
+
+
+def test_prefix_cache_match_capped_to_chunk_boundaries():
+    """A block-misaligned chunk size (5 vs block_size 8) caps hits to
+    depths where blocks and chunks coincide — lcm(5, 8) = 40 tokens —
+    because only there does the resumed suffix partition into the same
+    chunks a cold prefill runs. Parity stays exact; the hit just reuses
+    less."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    prompts = shared_prefix_requests(3, cfg.vocab_size, prefix_len=48,
+                                     suffix_len=8, seed=17)
+    kw = dict(max_batch=2, n_blocks=64, block_size=8, prefill_chunk=5)
+    eng_off, off = _run(cfg, params, prompts, prefix_cache=False, **kw)
+    eng_on, on = _run(cfg, params, prompts, prefix_cache=True, **kw)
+    assert on == off
+    assert eng_on._prefix.align_blocks == 5
+    hit = [r for r in eng_on.finished if r.cached_tokens > 0]
+    assert hit and all(r.cached_tokens == 40 for r in hit)
+    _assert_no_leaks(eng_on)
+
+
+def test_prefix_cache_parity_with_speculation():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    prompts = shared_prefix_requests(4, cfg.vocab_size, prefix_len=24,
+                                     suffix_len=8, seed=5)
+    kw = dict(max_batch=2, n_blocks=64, block_size=8, prefill_chunk=8,
+              speculate="ngram", spec_depth=3)
+    eng_off, off = _run(cfg, params, prompts, prefix_cache=False,
+                        max_new=8, **kw)
+    eng_on, on = _run(cfg, params, prompts, prefix_cache=True,
+                      max_new=8, **kw)
+    assert on == off
+    assert eng_on.stats()["prefix_cache_hit_rate"] > 0.0
+    _assert_no_leaks(eng_on)
+
+
+def test_prefix_cache_parity_under_preemption_pressure():
+    """An undersized pool forces preemption with the cache both off and
+    on; per-request greedy output is schedule-independent, so parity must
+    hold even though the two runs preempt differently."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    prompts = shared_prefix_requests(4, cfg.vocab_size, prefix_len=24,
+                                     suffix_len=8, seed=7)
+    kw = dict(max_batch=4, n_blocks=14, block_size=8, prefill_chunk=8)
+    eng_off, off = _run(cfg, params, prompts, prefix_cache=False,
+                        max_new=8, max_steps=1200, **kw)
+    eng_on, on = _run(cfg, params, prompts, prefix_cache=True,
+                      max_new=8, max_steps=1200, **kw)
+    assert on == off
+    _assert_no_leaks(eng_on)
+    assert eng_off.alloc.n_free == eng_off.alloc.n_blocks
+
+
+def test_prefix_cache_parity_through_cancellation():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    prompts = shared_prefix_requests(4, cfg.vocab_size, prefix_len=24,
+                                     suffix_len=8, seed=9)
+    _, base = _run(cfg, params, prompts, prefix_cache=False, max_new=8,
+                   max_batch=2, n_blocks=64, block_size=8, prefill_chunk=8)
+    eng = Engine(cfg, params, prefix_cache=True, max_batch=2, n_blocks=64,
+                 block_size=8, prefill_chunk=8)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, tokens=list(p), max_new_tokens=8))
+        eng.step()
+    assert eng.cancel(2) is True            # evicted mid-flight
+    done = eng.run(max_steps=600)
+    assert len(done) == 4
+    for r in done:
+        if r.state == "finished":
+            assert list(r.output) == base[r.rid]
+        else:
+            assert r.rid == 2 and r.state == "cancelled"
+    _assert_no_leaks(eng)
+
+
+def test_prefix_cache_reclaim_under_pool_pressure():
+    """Distinct prompts fill the index past what the pool can park; later
+    allocations must reclaim (scrub + evict) instead of failing, and the
+    run stays leak-free."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, cfg.vocab_size, size=24).tolist()
+               for _ in range(6)]
+    eng, _ = _run(cfg, params, prompts, prefix_cache=True, max_new=4,
+                  max_batch=2, n_blocks=16, block_size=8, prefill_chunk=8,
+                  max_steps=1200)
+    assert eng._prefix.n_evicted > 0        # reclaim actually fired
+    _assert_no_leaks(eng)
+
+
+def test_prefix_cache_stats_empty_reset_and_occupancy_split():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    params = _params(cfg)
+    eng = Engine(cfg, params, prefix_cache=True, max_batch=2, n_blocks=32,
+                 block_size=8, prefill_chunk=8)
+    st = eng.stats()                        # safe before any request
+    assert st["prefix_cache_hit_rate"] == 0.0
+    assert st["cached_blocks"] == 0 and st["cached_tokens_reused"] == 0
+    assert st["kv_blocks_owned"] == 0
+    assert st["kv_blocks_cached_reclaimable"] == 0
+    assert st["kv_blocks_free"] == 32 and st["kv_utilization"] == 0.0
+    prompts = shared_prefix_requests(3, cfg.vocab_size, prefix_len=16,
+                                     suffix_len=8, seed=13)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, tokens=list(p), max_new_tokens=4))
+        eng.step()
+    eng.run(max_steps=400)
+    st = eng.stats()
+    assert st["prefix_cache_hit_rate"] > 0.0
+    occ = (st["kv_blocks_owned"] + st["kv_blocks_cached_reclaimable"]
+           + st["kv_blocks_free"])
+    assert occ == 32
+    # parked blocks are capacity, not pressure
+    assert st["kv_blocks_cached_reclaimable"] > 0
+    assert st["kv_utilization"] == 0.0
+    eng.reset_stats()                       # counters clear, cache survives
+    st = eng.stats()
+    assert st["prefix_cache_hit_rate"] == 0.0
+    assert st["cached_tokens_reused"] == 0
+    assert st["cached_blocks"] > 0
+    _assert_no_leaks(eng)

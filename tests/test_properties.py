@@ -264,3 +264,98 @@ def test_scheduler_admit_never_inverts_priority(data):
     # terminal means terminal: no evicted request ever reappears
     for r in evicted:
         assert r not in sched.waiting and r not in sched.running
+
+
+# ---------------------------------------------------------------------------
+# Ref-counted allocator + prefix cache invariants (serving/cache.py +
+# serving/prefix_cache.py)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_refcount_allocator_cache_state_machine(data):
+    """Randomized alloc / register / share / release / reclaim sequences
+    against a model of who references what. After every operation:
+    ``refcount[b]`` equals the number of tables referencing ``b``; the
+    free list is duplicate-free and disjoint from both referenced blocks
+    and the cache's second-chance pool; parked blocks are all cached at
+    refcount zero; and distinct-owned + free + reclaimable partitions the
+    pool exactly."""
+    from repro.serving.cache import BlockAllocator, OutOfBlocks
+    from repro.serving.prefix_cache import PrefixCache
+
+    n_blocks = data.draw(st.integers(4, 12))
+    alloc = BlockAllocator(n_blocks)
+    pc = PrefixCache(4)
+    alloc.attach_cache(pc)
+    scrubbed = []
+    pc.scrub = scrubbed.extend
+    tables = []                 # model: lists of referenced block ids
+    edge_seq = 0                # unique edges keep the trie flat (chain
+    #                             reclaim order is covered by unit tests)
+
+    def check():
+        refs = {}
+        for t in tables:
+            for b in t:
+                refs[b] = refs.get(b, 0) + 1
+        for b in range(n_blocks):
+            assert alloc.refcount[b] == refs.get(b, 0), (b, tables)
+        free = list(alloc.free)
+        assert len(free) == len(set(free))
+        assert not set(free) & set(refs)
+        assert not set(free) & set(pc.unref)
+        assert not set(pc.unref) & set(refs)
+        for b in pc.unref:
+            assert pc.is_cached(b) and alloc.refcount[b] == 0
+        assert (len(set(refs)) + alloc.n_free + alloc.n_reclaimable
+                == n_blocks)
+        assert alloc.n_available == alloc.n_free + alloc.n_reclaimable
+
+    for _ in range(data.draw(st.integers(5, 30))):
+        op = data.draw(st.sampled_from(
+            ["alloc", "register", "share", "release", "release_one"]))
+        if op == "alloc":
+            k = data.draw(st.integers(1, 3))
+            if alloc.n_available >= k:
+                got = alloc.alloc(k)    # may reclaim from the parked pool
+                assert len(got) == len(set(got)) == k
+                tables.append(got)
+            else:
+                with pytest.raises(OutOfBlocks):
+                    alloc.alloc(k)
+        elif op == "register" and tables:
+            t = data.draw(st.sampled_from(tables))
+            candidates = [b for b in t if not pc.is_cached(b)]
+            if candidates:
+                b = data.draw(st.sampled_from(candidates))
+                edge_seq += 1
+                pc.register(None, ("e", edge_seq), b)
+        elif op == "share":
+            resident = sorted({b for t in tables for b in t}
+                              | set(pc.unref))
+            if resident:
+                b = data.draw(st.sampled_from(resident))
+                alloc.share([b])        # revives if parked
+                tables.append([b])
+        elif op == "release" and tables:
+            t = data.draw(st.sampled_from(tables))
+            tables.remove(t)
+            alloc.release(t)
+        elif op == "release_one" and tables:
+            t = data.draw(st.sampled_from(tables))
+            b = data.draw(st.sampled_from(t))
+            t.remove(b)
+            alloc.release([b])
+            if not t:
+                tables.remove(t)
+        check()
+    # drain everything: the pool must come all the way back
+    for t in tables:
+        alloc.release(t)
+    tables.clear()
+    check()
+    assert alloc.n_available == n_blocks
+    # every block the cache ever evicted was scrubbed exactly then
+    assert len(scrubbed) == pc.n_evicted
