@@ -50,7 +50,8 @@ import sys
 import jax
 import numpy as np
 
-from benchmarks.common import emit, run_model_parallel_rows
+from benchmarks.common import emit, run_model_parallel_rows, \
+    write_bench_json
 from repro.configs import get_config
 from repro.data.pipeline import repetitive_requests, serving_requests
 from repro.models.lm import LM
@@ -214,8 +215,7 @@ def run(spec_depth: int = 8):
              "x_ngram_over_plain")
     # --- model-parallel rows: one subprocess per TP degree (forced mesh) ---
     _run_tp_rows(results)
-    with open(OUT_PATH, "w") as f:
-        json.dump(results, f, indent=2)
+    write_bench_json(OUT_PATH, results)
 
 
 if __name__ == "__main__":

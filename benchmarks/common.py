@@ -1,13 +1,21 @@
 """Shared benchmark utilities. All benchmarks print ``name,us_per_call,derived``
 CSV rows (harness contract) and run at CPU smoke scale unless they read
-dry-run artifacts (full scale, analytic)."""
+dry-run artifacts (full scale, analytic). BENCH_*.json artifacts carry a
+``meta`` stamp (:func:`bench_meta`) so the perf trajectory stays
+comparable across machines and jax versions."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Any, Callable, Dict
 
 import jax
 import numpy as np
+
+#: Version of the BENCH_*.json artifact envelope: {"meta": ..., results}.
+#: Bump when the envelope (not a benchmark's own rows) changes shape.
+BENCH_SCHEMA_VERSION = 1
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
@@ -25,6 +33,33 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def bench_meta() -> Dict[str, Any]:
+    """Environment stamp for BENCH_*.json artifacts: schema version, jax
+    version, backend, device kind/count, and whether the CPU "devices"
+    are forced host devices (``--xla_force_host_platform_device_count``
+    makes an 8-device CPU mesh out of one socket — numbers from such a
+    run must never be compared against real-accelerator rows)."""
+    devs = jax.devices()
+    return {
+        "bench_schema_version": BENCH_SCHEMA_VERSION,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "device_count": jax.device_count(),
+        "forced_host_devices":
+            "--xla_force_host_platform_device_count"
+            in os.environ.get("XLA_FLAGS", ""),
+    }
+
+
+def write_bench_json(path: str, results: Any) -> None:
+    """Write a BENCH_*.json artifact as ``{"meta": bench_meta(),
+    "results": results}`` — every benchmark's writer goes through here so
+    no artifact ships unstamped."""
+    with open(path, "w") as f:
+        json.dump({"meta": bench_meta(), "results": results}, f, indent=2)
 
 
 def run_model_parallel_rows(module: str, degrees, forced_devices: int):

@@ -26,10 +26,20 @@ class Timer:
         self.records: Dict[str, List[float]] = defaultdict(list)
 
     @contextlib.contextmanager
-    def region(self, name: str):
+    def region(self, name: str, fence: Any = None):
+        """Time a ``with`` region. ``fence`` (optional) is a zero-arg
+        callable run before the clock stops — pass
+        ``lambda: jax.block_until_ready(state)`` to charge the region
+        with its async device work, the same attribution ``timed`` gives
+        a wrapped function (and serving telemetry's fenced mode gives an
+        engine step)."""
         t0 = time.perf_counter()
-        yield
-        self.records[name].append(time.perf_counter() - t0)
+        try:
+            yield
+        finally:
+            if fence is not None:
+                fence()
+            self.records[name].append(time.perf_counter() - t0)
 
     def timed(self, name: str, fn: Callable) -> Callable:
         def wrapper(*a, **kw):

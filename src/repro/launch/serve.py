@@ -140,6 +140,16 @@ def main():
                          "squeezes, forced allocator failures and delayed "
                          "cancellations on a replayable schedule "
                          "(serving/faults.py)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable serving telemetry and write a Chrome-trace "
+                         "JSON (chrome://tracing / Perfetto) of the run: "
+                         "request-lifecycle spans, per-step phase events "
+                         "and chaos actions on one timeline")
+    ap.add_argument("--trace-fenced", action="store_true",
+                    help="with --trace-out: block_until_ready-fence each "
+                         "engine step so the per-step timeline charges "
+                         "device time to the step that launched it "
+                         "(perfscope semantics; adds sync overhead)")
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="shard the engine over a model-axis mesh of N "
                          "devices (params via ShardCtx specs, paged KV/SSM "
@@ -165,6 +175,7 @@ def main():
     from repro.models.lm import LM
     from repro.serving.engine import Engine, Rejected, Request
     from repro.serving.faults import FaultInjector
+    from repro.serving.telemetry import Telemetry
 
     if args.arch not in list_archs():
         ap.error(f"unknown --arch {args.arch!r} (choose from "
@@ -189,6 +200,10 @@ def main():
                  "resumes the suffix through the chunk executable, and "
                  "only a chunk-aligned resume keeps greedy output "
                  "token-identical to a cache-off run")
+    if args.trace_fenced and not args.trace_out:
+        ap.error("--trace-fenced requires --trace-out PATH")
+    telemetry = Telemetry(enabled=bool(args.trace_out),
+                          fenced=args.trace_fenced)
     eng = Engine(cfg, params, max_batch=args.max_batch,
                  n_blocks=args.n_blocks, block_size=args.block_size,
                  kv_quant="int8" if args.int8_kv else "none",
@@ -197,7 +212,8 @@ def main():
                  speculate=args.speculate, spec_depth=args.spec_depth,
                  mesh=mesh, queue_cap=args.queue_cap or None,
                  default_deadline_s=args.deadline_s or None,
-                 faults=faults, prefix_cache=args.prefix_cache)
+                 faults=faults, prefix_cache=args.prefix_cache,
+                 telemetry=telemetry)
     # warm every chunk-step table bucket the trace implies, not just the
     # widest: each distinct prompt length compiles its own footprint bucket
     # (a uniform trace still needs its prompt bucket, which can differ from
@@ -216,7 +232,10 @@ def main():
     eng.run()
     if faults is not None:
         faults.release_all(eng)     # return any still-squeezed blocks
-        for step, action, detail in faults.log:
+        # the injector mirrors every applied action into the telemetry
+        # event log (faults._note), so the replay record printed here is
+        # the same stream a --trace-out viewer sees on the chaos track
+        for step, action, detail in eng.telemetry.chaos_actions:
             print(f"{'chaos':>20s}: step {step:>3d} {action} {detail}")
     print(f"{'mode':>20s}: {args.mode}")
     for k, v in eng.stats().items():
@@ -224,6 +243,14 @@ def main():
               f"{k:>20s}: {v}")
     if args.mode == "fused":
         print(f"{'fused_step_traces':>20s}: {sum(eng.trace_counts.values())}")
+    if args.trace_out:
+        trace = eng.telemetry.export_chrome(
+            args.trace_out,
+            metadata={"arch": args.arch, "mode": args.mode,
+                      "chaos_seed": args.chaos,
+                      "model_parallel": args.model_parallel})
+        print(f"{'trace_out':>20s}: {args.trace_out} "
+              f"({len(trace['traceEvents'])} events)")
 
 
 if __name__ == "__main__":

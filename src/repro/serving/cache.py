@@ -94,6 +94,9 @@ class BlockAllocator:
         self.refcount: List[int] = [0] * n_blocks
         self.cache = None           # optional PrefixCache
         self._fail_next = 0
+        # optional Telemetry (serving/telemetry.py), wired by the engine:
+        # block-movement counters for the metrics registry, nothing else
+        self.tel = None
 
     def attach_cache(self, cache) -> None:
         """Install a :class:`~repro.serving.prefix_cache.PrefixCache` as
@@ -117,6 +120,8 @@ class BlockAllocator:
             reclaimed = self.cache.reclaim(n - len(self.free))
             self.free.extend(reclaimed)
             self._free_set.update(reclaimed)
+            if reclaimed and self.tel is not None and self.tel.enabled:
+                self.tel.registry.count("blocks_reclaimed", len(reclaimed))
         if len(self.free) < n:
             raise OutOfBlocks(
                 f"requested {n} blocks, only {len(self.free)} free")
@@ -124,6 +129,8 @@ class BlockAllocator:
         self._free_set.difference_update(out)
         for b in out:
             self.refcount[b] = 1
+        if n and self.tel is not None and self.tel.enabled:
+            self.tel.registry.count("blocks_allocated", n)
         return out
 
     def share(self, blocks: List[int]) -> None:
@@ -149,6 +156,8 @@ class BlockAllocator:
                         f"share of block {b}: refcount is zero and it is "
                         f"not parked in the prefix cache")
                 self.refcount[b] = 1
+        if blocks and self.tel is not None and self.tel.enabled:
+            self.tel.registry.count("blocks_shared", len(blocks))
 
     def release(self, blocks: List[int]) -> None:
         seen = set()
@@ -172,6 +181,8 @@ class BlockAllocator:
                     freed.append(b)
         self.free.extend(freed)
         self._free_set.update(freed)
+        if freed and self.tel is not None and self.tel.enabled:
+            self.tel.registry.count("blocks_freed", len(freed))
 
     @property
     def n_free(self) -> int:

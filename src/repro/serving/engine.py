@@ -163,6 +163,7 @@ from repro.serving.scheduler import (CANCELLED, FAILED, FINISHED, REJECTED,
                                      RUNNING, TERMINAL_STATES, TIMED_OUT,
                                      Rejected, Request, Scheduler)
 from repro.serving.speculate import build_speculator
+from repro.serving.telemetry import Telemetry
 from repro.kernels import flash_decode as fd
 
 __all__ = ["Engine", "Request", "Rejected", "StallError"]
@@ -214,7 +215,7 @@ class Engine:
                  clock=time.monotonic, queue_cap: Optional[int] = None,
                  default_deadline_s: Optional[float] = None,
                  faults=None, stall_limit: int = 200,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, telemetry=None):
         if mode not in ("fused", "legacy"):
             raise ValueError(f"mode must be 'fused' or 'legacy', got {mode!r}")
         if prefix_cache and mode != "fused":
@@ -368,6 +369,25 @@ class Engine:
         self.prefix_hits = 0
         self.prefix_tokens_reused = 0
         self.prefix_cow_copies = 0
+        # observability (serving/telemetry.py): off by default. Every hook
+        # is host-side and guarded on ``enabled`` — the jitted step
+        # signatures carry no telemetry argument, so telemetry-on and
+        # telemetry-off engines share executables, trace_counts and greedy
+        # tokens bit-for-bit (pinned by tests/test_telemetry.py).
+        # telemetry=True builds an enabled collector; a Telemetry instance
+        # is adopted as-is (launchers pass one to pick fenced mode or to
+        # export the trace after the run).
+        if isinstance(telemetry, Telemetry):
+            self.telemetry = telemetry
+        else:
+            self.telemetry = Telemetry(enabled=bool(telemetry))
+        self.telemetry.bind(self)
+        self.sched.tel = self.telemetry
+        self.alloc.tel = self.telemetry
+        if self._prefix is not None:
+            self._prefix.tel = self.telemetry
+        if self.spec is not None:
+            self.spec.tel = self.telemetry
 
     # engine-level views over the scheduler's bookkeeping (the public
     # surface tests and benchmarks built against v1)
@@ -550,7 +570,9 @@ class Engine:
             self.n_rejected += 1
             self.rejected_reasons[e.reason] += 1
             req.finish_time = req.finish_time or self.clock()
+            self.telemetry.req_reject(req, e.reason)
             raise
+        self.telemetry.req_submit(req)
 
     # ------------------------------------------------------------------
     # Request lifecycle: cancellation, deadlines, quarantine, injection
@@ -636,6 +658,7 @@ class Engine:
         return logits, cache
 
     def _prefill_group(self, group: List[Request], t: int) -> None:
+        self.telemetry.mark_kind("prefill")
         toks = jnp.asarray([r.context_tokens() for r in group], jnp.int32)
         logits, cache = self._prefill_fwd(self.params, toks)
         if self._attn_pos:
@@ -669,9 +692,11 @@ class Engine:
             if not r.output:        # fresh request: this IS the first token
                 r.output.append(int(next_tok[g]))
                 r.first_token_time = now
+                self.telemetry.req_first_token(r)
             # resumed request: the recomputed token is already output[-1]
             r.prefilled = t
             r.state = RUNNING
+            self.telemetry.req_running(r)
             self.prefill_tokens += t
             self._cache_register(r)
 
@@ -860,6 +885,9 @@ class Engine:
         req, start, n = plan
         if not self.sched.ensure_blocks(req, start + n):
             return      # only elders hold blocks: wait for them to finish
+        tel = self.telemetry
+        tel.mark_kind("chunk")
+        tc0 = tel.clock() if tel.enabled else 0.0
         self._cow_tail(req, pos=start)
         seq = req.context_tokens()
         cn = self.prefill_chunk
@@ -885,12 +913,15 @@ class Engine:
             return
         req.prefilled = start + n
         self.prefill_tokens += n
+        tel.req_chunk(req, tc0, start, n)
         self._cache_register(req)
         if req.prefilled >= len(seq):
             if not req.output:      # fresh request: this IS the first token
                 req.output.append(int(next_tok))
                 req.first_token_time = self.clock()
+                tel.req_first_token(req)
             req.state = RUNNING
+            tel.req_running(req)
 
     # ------------------------------------------------------------------
     # Fused decode: the whole step — embed, layer-stack scan with paged
@@ -980,6 +1011,7 @@ class Engine:
     def _decode_fused(self, live: List[Request]) -> None:
         if not live:
             return
+        self.telemetry.mark_kind("decode")
         bsz = self.max_batch
         tokens = np.zeros((bsz,), np.int32)
         lengths = np.zeros((bsz,), np.int32)
@@ -1151,6 +1183,7 @@ class Engine:
             rows.append(r)
         if not rows:
             return
+        self.telemetry.mark_kind("verify")
         for r in rows:
             self._cow_tail(r)
         mbb = _next_pow2(max(len(r.blocks) for r in rows))
@@ -1293,6 +1326,7 @@ class Engine:
         cfg = self.cfg
         if not live:
             return
+        self.telemetry.mark_kind("decode")
         bsz = self.max_batch
         tokens = np.zeros((bsz, 1), np.int32)
         lengths = np.zeros((bsz,), np.int32)
@@ -1397,55 +1431,72 @@ class Engine:
                 self.finished.append(r)
 
     def step(self) -> None:
+        # telemetry wraps each segment below without reordering it: every
+        # hook is host-side, so a telemetry-off step executes exactly the
+        # code it always did (phase() is a shared null context then)
+        tel = self.telemetry
+        tel.step_begin(self.steps)
         # fault injection + deadline sweep run before admission so a
         # stormed/cancelled request never occupies a slot this step
-        if self.faults is not None:
-            self.faults.on_step_begin(self)
-        if self._deadlines_armed:
-            self._sweep_deadlines(self.clock())
-        admitted = self.sched.admit(self.clock())
-        for r in admitted:
-            if self._prefix is not None:
-                self.prefix_lookups += 1
-                if r.cached_tokens:
-                    self.prefix_hits += 1
-                    self.prefix_tokens_reused += r.cached_tokens
-            # a cache hit resumes the recurrent state from the matched
-            # node's snapshot; everything else starts the slot from zero
-            if r.cached_tokens and self._ssm_pos:
-                self._restore_ssm_slot(r)
-            elif self.prefill_chunk is not None:
-                self._zero_ssm_slot(r.slot)
+        with tel.phase("sweep"):
+            if self.faults is not None:
+                self.faults.on_step_begin(self)
+            if self._deadlines_armed:
+                self._sweep_deadlines(self.clock())
+        with tel.phase("schedule"):
+            admitted = self.sched.admit(self.clock())
+            for r in admitted:
+                if self._prefix is not None:
+                    self.prefix_lookups += 1
+                    if r.cached_tokens:
+                        self.prefix_hits += 1
+                        self.prefix_tokens_reused += r.cached_tokens
+                # a cache hit resumes the recurrent state from the matched
+                # node's snapshot; everything else starts the slot from zero
+                if r.cached_tokens and self._ssm_pos:
+                    self._restore_ssm_slot(r)
+                elif self.prefill_chunk is not None:
+                    self._zero_ssm_slot(r.slot)
         t0 = self.clock()
-        if self.prefill_chunk is None:
-            if admitted:
-                self._prefill(admitted)
-        else:
-            self._prefill_chunk_tick()
+        with tel.phase("dispatch"):
+            if self.prefill_chunk is None:
+                if admitted:
+                    self._prefill(admitted)
+            else:
+                self._prefill_chunk_tick()
         self.prefill_time += self.clock() - t0
         # grow each decoding request's block table for this step's append;
         # under pressure this preempts strictly-younger request(s) — so
         # re-check states after the loop — and a request that could only
         # grow by evicting an elder sits this step out instead
-        deferred = set()
-        for r in self.sched.decode_candidates():
-            if r.state == RUNNING and \
-                    not self.sched.ensure_blocks(r, r.length):
-                deferred.add(r.rid)
-        live = [r for r in self.sched.running
-                if r is not None and r.state == RUNNING
-                and r.rid not in deferred]
+        with tel.phase("schedule"):
+            deferred = set()
+            for r in self.sched.decode_candidates():
+                if r.state == RUNNING and \
+                        not self.sched.ensure_blocks(r, r.length):
+                    deferred.add(r.rid)
+            live = [r for r in self.sched.running
+                    if r is not None and r.state == RUNNING
+                    and r.rid not in deferred]
         t0 = self.clock()
-        if self.mode != "fused":
-            self._decode_batch(live)
-        elif self.spec is not None:
-            self._decode_spec(live)
-        else:
-            self._decode_fused(live)
+        with tel.phase("dispatch"):
+            if self.mode != "fused":
+                self._decode_batch(live)
+            elif self.spec is not None:
+                self._decode_spec(live)
+            else:
+                self._decode_fused(live)
         self.decode_time += self.clock() - t0
+        # fenced mode: attribute async device time to the step that
+        # dispatched it (paper-style module-wise timing at smoke scale —
+        # serializes the dispatch pipeline, so never on by default)
+        if tel.enabled and tel.fenced:
+            with tel.phase("sync"):
+                jax.block_until_ready((self.kv.state, self._ssm_states))
         # a NaN plan is good for exactly one step's forward, armed or not
         self._nan_plan = None
         self.steps += 1
+        tel.step_end(self)
 
     def _progress_key(self):
         """Snapshot of everything that changes when any request advances:
@@ -1501,14 +1552,24 @@ class Engine:
         self.prefix_cow_copies = 0
         if self.spec is not None:
             self.spec.reset()
+        # collected telemetry resets with the stats (the trace epoch and
+        # any compiled executables survive, like the cache contents do)
+        self.telemetry.reset()
 
-    def stats(self) -> Dict[str, float]:
+    def snapshot_base(self) -> Dict[str, Any]:
+        """Structured engine aggregates: the engine-owned sections of the
+        schema-v1 metrics snapshot (see docs/observability.md).
+        ``telemetry.snapshot()`` merges these with the registry/timeline
+        sections; the legacy flat :meth:`stats` dict is a mechanical
+        flattening of exactly these values — one computation, two views.
+        Safe on an idle or just-reset engine (every window guards empty).
+        """
         done = self.finished
         lat = [r.finish_time - r.arrival for r in done if r.finish_time]
         ttft = [t for t in (r.ttft() for r in done) if t is not None]
         tpot = [t for t in (r.tpot() for r in done) if t is not None]
         queue = [t for t in (r.queue_time() for r in done) if t is not None]
-        # explicit empty-window guard: stats() must be safe right after
+        # explicit empty-window guard: must be safe right after
         # reset_stats() and mid-burst (no finished request yet). The old
         # one-line ternary was already short-circuit-safe (the condition
         # evaluates before max()/min()), but only by operator-precedence
@@ -1521,57 +1582,124 @@ class Engine:
             wall = 0.0
         toks = sum(len(r.output) for r in done)
         pct = _pct
-        spec_stats = self.spec.stats() if self.spec is not None else {}
         # per-cause terminal accounting: every request that ever entered
         # the schedule shows up in exactly one of these buckets (rejected
         # ones never entered, so they count from the submit-side counter)
         causes = Counter(r.state for r in done)
         occ = self.alloc.occupancy()
         return {
-            **spec_stats,
-            "requests": len(done),
-            "finished": causes.get(FINISHED, 0),
-            "timed_out": causes.get(TIMED_OUT, 0),
-            "cancelled": causes.get(CANCELLED, 0),
-            "failed": causes.get(FAILED, 0),
-            "rejected": self.n_rejected,
-            "rejected_reasons": dict(self.rejected_reasons),
-            "model_parallel": self.tp_degree,
-            "throughput_tok_s": toks / wall if wall > 0 else 0.0,
-            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
-            "p50_latency_s": pct(lat, 50),
-            "p99_latency_s": pct(lat, 99),
-            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
-            "p50_ttft_s": pct(ttft, 50),
-            "p95_ttft_s": pct(ttft, 95),
-            "p99_ttft_s": pct(ttft, 99),
-            "mean_tpot_s": float(np.mean(tpot)) if tpot else 0.0,
-            "p50_tpot_s": pct(tpot, 50),
-            "p95_tpot_s": pct(tpot, 95),
-            "p99_tpot_s": pct(tpot, 99),
-            "mean_queue_s": float(np.mean(queue)) if queue else 0.0,
-            "preemptions": self.sched.n_preemptions,
+            "engine": {
+                "steps": self.steps,
+                "mode": self.mode,
+                "prefill_chunk": self.prefill_chunk or 0,
+                "model_parallel": self.tp_degree,
+            },
+            "requests": {
+                "completed": len(done),
+                "finished": causes.get(FINISHED, 0),
+                "timed_out": causes.get(TIMED_OUT, 0),
+                "cancelled": causes.get(CANCELLED, 0),
+                "failed": causes.get(FAILED, 0),
+                "rejected": self.n_rejected,
+                "rejected_reasons": dict(self.rejected_reasons),
+            },
+            "latency": {
+                "e2e": {"mean": float(np.mean(lat)) if lat else 0.0,
+                        "p50": pct(lat, 50), "p99": pct(lat, 99)},
+                "ttft": {"mean": float(np.mean(ttft)) if ttft else 0.0,
+                         "p50": pct(ttft, 50), "p95": pct(ttft, 95),
+                         "p99": pct(ttft, 99)},
+                "tpot": {"mean": float(np.mean(tpot)) if tpot else 0.0,
+                         "p50": pct(tpot, 50), "p95": pct(tpot, 95),
+                         "p99": pct(tpot, 99)},
+                "queue": {"mean": float(np.mean(queue)) if queue else 0.0},
+            },
+            "throughput": {
+                "tok_s": toks / wall if wall > 0 else 0.0,
+                "decode_tok_s": (self.decode_tokens / self.decode_time
+                                 if self.decode_time > 0 else 0.0),
+                "decode_tokens": self.decode_tokens,
+                "prefill_tokens": self.prefill_tokens,
+                "decode_time_s": self.decode_time,
+                "prefill_time_s": self.prefill_time,
+            },
             # pool pressure is 1 - available/total: a cached-but-
             # reclaimable block is capacity (one alloc away from free),
-            # not pressure — the occupancy split below itemizes it
-            "kv_utilization": self.alloc.utilization(),
-            "kv_blocks_owned": occ["owned"],
-            "kv_blocks_cached_reclaimable": occ["cached_reclaimable"],
-            "kv_blocks_free": occ["free"],
+            # not pressure — the occupancy split itemizes it
+            "pool": {
+                "utilization": self.alloc.utilization(),
+                "owned": occ["owned"],
+                "cached_reclaimable": occ["cached_reclaimable"],
+                "free": occ["free"],
+            },
             # prefix-cache effectiveness: hit rate over admissions (0.0
             # when the cache is off or nothing was admitted — safe right
             # after reset_stats()), resident index size, and total
             # prefill tokens skipped via cached blocks
-            "prefix_cache_hit_rate": (self.prefix_hits / self.prefix_lookups
-                                      if self.prefix_lookups else 0.0),
-            "cached_blocks": (self._prefix.n_cached_blocks
-                              if self._prefix is not None else 0),
-            "cached_tokens_reused": self.prefix_tokens_reused,
-            "prefix_cow_copies": self.prefix_cow_copies,
-            "decode_tokens": self.decode_tokens,
-            "prefill_tokens": self.prefill_tokens,
-            "decode_time_s": self.decode_time,
-            "prefill_time_s": self.prefill_time,
-            "decode_tok_s": (self.decode_tokens / self.decode_time
-                             if self.decode_time > 0 else 0.0),
+            "prefix_cache": {
+                "hit_rate": (self.prefix_hits / self.prefix_lookups
+                             if self.prefix_lookups else 0.0),
+                "cached_blocks": (self._prefix.n_cached_blocks
+                                  if self._prefix is not None else 0),
+                "tokens_reused": self.prefix_tokens_reused,
+                "cow_copies": self.prefix_cow_copies,
+            },
+            "scheduler": {
+                "preemptions": self.sched.n_preemptions,
+                "queue_depth": len(self.sched.waiting),
+            },
+            "spec": self.spec.stats() if self.spec is not None else {},
+        }
+
+    def snapshot(self) -> Dict[str, Any]:
+        """The stable machine-readable snapshot (schema v1): engine
+        aggregates + telemetry registry/timeline. Works with telemetry
+        disabled (those sections are simply empty)."""
+        return self.telemetry.snapshot()
+
+    def stats(self) -> Dict[str, float]:
+        """Legacy flat stats dict — now a thin compatibility view: every
+        key is a mechanical flattening of :meth:`snapshot_base`, so the
+        two surfaces can never disagree. Prefer :meth:`snapshot` (stable
+        schema, structured sections) in new code."""
+        s = self.snapshot_base()
+        req, lat, thr = s["requests"], s["latency"], s["throughput"]
+        pool, pc = s["pool"], s["prefix_cache"]
+        return {
+            **s["spec"],
+            "requests": req["completed"],
+            "finished": req["finished"],
+            "timed_out": req["timed_out"],
+            "cancelled": req["cancelled"],
+            "failed": req["failed"],
+            "rejected": req["rejected"],
+            "rejected_reasons": req["rejected_reasons"],
+            "model_parallel": s["engine"]["model_parallel"],
+            "throughput_tok_s": thr["tok_s"],
+            "mean_latency_s": lat["e2e"]["mean"],
+            "p50_latency_s": lat["e2e"]["p50"],
+            "p99_latency_s": lat["e2e"]["p99"],
+            "mean_ttft_s": lat["ttft"]["mean"],
+            "p50_ttft_s": lat["ttft"]["p50"],
+            "p95_ttft_s": lat["ttft"]["p95"],
+            "p99_ttft_s": lat["ttft"]["p99"],
+            "mean_tpot_s": lat["tpot"]["mean"],
+            "p50_tpot_s": lat["tpot"]["p50"],
+            "p95_tpot_s": lat["tpot"]["p95"],
+            "p99_tpot_s": lat["tpot"]["p99"],
+            "mean_queue_s": lat["queue"]["mean"],
+            "preemptions": s["scheduler"]["preemptions"],
+            "kv_utilization": pool["utilization"],
+            "kv_blocks_owned": pool["owned"],
+            "kv_blocks_cached_reclaimable": pool["cached_reclaimable"],
+            "kv_blocks_free": pool["free"],
+            "prefix_cache_hit_rate": pc["hit_rate"],
+            "cached_blocks": pc["cached_blocks"],
+            "cached_tokens_reused": pc["tokens_reused"],
+            "prefix_cow_copies": pc["cow_copies"],
+            "decode_tokens": thr["decode_tokens"],
+            "prefill_tokens": thr["prefill_tokens"],
+            "decode_time_s": thr["decode_time_s"],
+            "prefill_time_s": thr["prefill_time_s"],
+            "decode_tok_s": thr["decode_tok_s"],
         }

@@ -151,6 +151,16 @@ class FaultInjector:
         return cls(sched)
 
     # ------------------------------------------------------------------
+    def _note(self, eng, step: int, action: str, detail) -> None:
+        """Record one applied action: always in :attr:`log` (the replay
+        record chaos tests assert against) and, when the engine carries
+        one, on its telemetry timeline — so a trace viewer shows each
+        squeeze/cancel/NaN aligned with the victims' request spans."""
+        self.log.append((step, action, detail))
+        tel = getattr(eng, "telemetry", None)
+        if tel is not None:
+            tel.chaos_action(step, action, detail)
+
     def on_step_begin(self, eng) -> None:
         """Apply this step's faults to ``eng`` (called by Engine.step)."""
         f = self.schedule.get(eng.steps)
@@ -159,34 +169,34 @@ class FaultInjector:
         step = eng.steps
         if f.release_squeezed and self.held:
             eng.alloc.release(self.held)
-            self.log.append((step, "release", len(self.held)))
+            self._note(eng, step, "release", len(self.held))
             self.held = []
         if f.squeeze_blocks:
             n = min(f.squeeze_blocks, eng.alloc.n_free)
             if n:
                 self.held.extend(eng.alloc.alloc(n))
-                self.log.append((step, "squeeze", n))
+                self._note(eng, step, "squeeze", n)
         if f.alloc_failures:
             eng.alloc.fail_next(f.alloc_failures)
-            self.log.append((step, "alloc_fail", f.alloc_failures))
+            self._note(eng, step, "alloc_fail", f.alloc_failures)
         if f.deadline_s is not None:
             for r in eng.live_requests():
                 r.deadline_s = f.deadline_s
             eng.arm_deadlines()
-            self.log.append((step, "deadline_storm", f.deadline_s))
+            self._note(eng, step, "deadline_storm", f.deadline_s)
         if f.pollute_twins:
             self._pollute(eng, step, f.pollute_twins)
         for rid in f.cancel_rids:
             done = eng.cancel(rid)
-            self.log.append((step, "cancel" if done else "cancel_miss", rid))
+            self._note(eng, step, "cancel" if done else "cancel_miss", rid)
         if f.nan is not None:
             rid, period = f.nan
             live = {r.rid for r in eng.live_requests()}
             if rid in live:
                 eng.arm_nan(rid, period)
-                self.log.append((step, "nan", (rid, period)))
+                self._note(eng, step, "nan", (rid, period))
             else:
-                self.log.append((step, "nan_miss", (rid, period)))
+                self._note(eng, step, "nan_miss", (rid, period))
 
     def _pollute(self, eng, step: int, n: int) -> None:
         """Submit ``n`` divergent-suffix twins of live base requests:
@@ -202,7 +212,7 @@ class FaultInjector:
                            if r.rid < POLLUTE_RID_BASE),
                           key=lambda r: r.rid)
             if not live:
-                self.log.append((step, "pollute_miss", None))
+                self._note(eng, step, "pollute_miss", None)
                 self._twin_seq += 1
                 continue
             src = live[self._twin_seq % len(live)]
@@ -214,15 +224,15 @@ class FaultInjector:
             try:
                 eng.submit(Request(rid=rid, tokens=twin_tokens,
                                    max_new_tokens=2))
-                self.log.append((step, "pollute", (rid, src.rid)))
+                self._note(eng, step, "pollute", (rid, src.rid))
             except Rejected as e:
-                self.log.append((step, "pollute_shed", (rid, e.reason)))
+                self._note(eng, step, "pollute_shed", (rid, e.reason))
 
     def release_all(self, eng) -> None:
         """Return every squeezed block to the pool (end-of-run cleanup)."""
         if self.held:
             eng.alloc.release(self.held)
-            self.log.append((eng.steps, "release", len(self.held)))
+            self._note(eng, eng.steps, "release", len(self.held))
             self.held = []
 
     @property

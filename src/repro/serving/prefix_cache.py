@@ -90,6 +90,9 @@ class PrefixCache:
         # counters (engine stats surface these)
         self.n_registered = 0
         self.n_evicted = 0
+        # optional Telemetry (serving/telemetry.py), wired by the engine:
+        # register/evict counters for the metrics registry, nothing else
+        self.tel = None
 
     # ------------------------------------------------------------------
     # allocator-facing hooks
@@ -142,6 +145,8 @@ class PrefixCache:
             node.parent.children.pop(node.edge, None)
             got.append(b)
         self.n_evicted += len(got)
+        if got and self.tel is not None and self.tel.enabled:
+            self.tel.registry.count("prefix_blocks_evicted", len(got))
         if got and self.scrub is not None:
             self.scrub(got)
         return got
@@ -192,6 +197,8 @@ class PrefixCache:
             parent.children[edge] = child
             self.by_block[block] = child
             self.n_registered += 1
+            if self.tel is not None and self.tel.enabled:
+                self.tel.registry.count("prefix_blocks_registered")
         if ssm is not None and child.ssm is None:
             child.ssm = ssm
         return child

@@ -194,6 +194,10 @@ class Scheduler:
         # optional hook invoked with the victim BEFORE its blocks are
         # released (the engine scrubs the victim's pages through it)
         self.on_preempt = None
+        # optional Telemetry (serving/telemetry.py), wired by the engine:
+        # lifecycle transitions made HERE (admission, preemption, terminal
+        # states) emit their spans here so policy and trace can't drift
+        self.tel = None
 
     # ------------------------------------------------------------------
     def _blocks_for(self, n_tokens: int) -> int:
@@ -289,6 +293,8 @@ class Scheduler:
                 req.admitted_time = now
             self.running[req.slot] = req
             admitted.append(req)
+            if self.tel is not None:
+                self.tel.req_admit(req)
         return admitted
 
     # ------------------------------------------------------------------
@@ -345,6 +351,8 @@ class Scheduler:
         # victims are preempted youngest-first and appendleft'ed, so the
         # waiting queue stays globally FCFS-ordered
         self.waiting.appendleft(victim)
+        if self.tel is not None:
+            self.tel.req_preempt(victim)
 
     def finish(self, req: Request, now: float) -> None:
         req.finish_time = now
@@ -353,6 +361,8 @@ class Scheduler:
         req.blocks = []
         self.running[req.slot] = None
         req.slot = -1
+        if self.tel is not None:
+            self.tel.req_terminal(req, FINISHED, "finished")
 
     def evict_terminal(self, req: Request, state: str, now: float) -> None:
         """Remove a request from the schedule into a terminal ``state``
@@ -371,6 +381,9 @@ class Scheduler:
         if state not in TERMINAL_STATES or state == FINISHED:
             raise ValueError(f"evict_terminal: {state!r} is not an "
                              f"eviction terminal state")
+        # eviction path for the terminal trace event: through the active
+        # scrub→release path, or a plain dequeue of a waiting request
+        path = "active_scrub" if req.slot >= 0 else "queue_drop"
         if req.slot >= 0:
             if self.on_preempt is not None:
                 self.on_preempt(req)
@@ -385,6 +398,8 @@ class Scheduler:
                 pass                # already out of the schedule
         req.state = state
         req.finish_time = now
+        if self.tel is not None:
+            self.tel.req_terminal(req, state, path)
 
     # ------------------------------------------------------------------
     # Step planning views

@@ -125,6 +125,9 @@ class Speculator:
             raise ValueError("spec_depth must be >= 1")
         self.proposer = proposer
         self.depth = depth
+        # optional Telemetry (serving/telemetry.py), wired by the engine:
+        # per-round proposed/accepted counts feed the step timeline
+        self.tel = None
         self.reset()
 
     def reset(self) -> None:
@@ -151,6 +154,8 @@ class Speculator:
         self.proposed_tokens += proposed
         self.accepted_tokens += accepted
         self.depth_hist[proposed] += 1
+        if self.tel is not None:
+            self.tel.spec_round(proposed, accepted)
         # back-off: full acceptance creeps back toward the cap, full
         # rejection halves, partial settles just past the accepted run
         if accepted >= proposed:
@@ -167,6 +172,8 @@ class Speculator:
         accepted ones are scrubbed on eviction — so the speculator only
         accounts the abandonment; no proposer state needs repair."""
         self.n_abandoned += 1
+        if self.tel is not None and self.tel.enabled:
+            self.tel.registry.count("spec_abandoned")
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict:

@@ -1,0 +1,103 @@
+"""perfscope Timer contracts: empty/short-record summaries, nested and
+re-entered regions, the region fence hook, timed()'s return-value and
+fence semantics, drop_warmup behaviour, table rendering, and phase_split.
+The serving telemetry reuses Timer for its per-step phase split, so these
+are load-bearing for both the training and serving timelines."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.perfscope import Timer, phase_split
+
+
+def test_empty_timer_summary_and_table():
+    t = Timer()
+    assert t.summary() == {}
+    assert t.records == {}
+    # a table over nothing renders (header only) instead of dividing by 0
+    assert "region" in t.table()
+
+
+def test_singleton_record_survives_drop_warmup():
+    """drop_warmup discards the first (compile-polluted) sample only when
+    more remain — a region timed once must still report, not vanish."""
+    t = Timer()
+    with t.region("once"):
+        pass
+    s = t.summary(drop_warmup=1)
+    assert s["once"]["calls"] == 1
+    assert s["once"]["mean_ms"] >= 0.0
+
+
+def test_drop_warmup_drops_leading_samples():
+    t = Timer()
+    t.records["r"] = [100.0, 1.0, 1.0, 1.0]
+    s = t.summary(drop_warmup=1)
+    assert s["r"]["calls"] == 3
+    assert s["r"]["mean_ms"] == pytest.approx(1000.0)
+    s0 = t.summary(drop_warmup=0)
+    assert s0["r"]["calls"] == 4
+
+
+def test_nested_regions_record_independently():
+    t = Timer()
+    with t.region("outer"):
+        with t.region("inner"):
+            pass
+        with t.region("inner"):
+            pass
+    assert len(t.records["outer"]) == 1
+    assert len(t.records["inner"]) == 2
+    # the outer region contains both inner executions
+    assert t.records["outer"][0] >= sum(t.records["inner"])
+
+
+def test_region_records_on_exception():
+    t = Timer()
+    with pytest.raises(ValueError):
+        with t.region("boom"):
+            raise ValueError("x")
+    assert len(t.records["boom"]) == 1
+
+
+def test_region_fence_runs_before_clock_stops():
+    t = Timer()
+    calls = []
+    with t.region("fenced", fence=lambda: calls.append("fence")):
+        calls.append("body")
+    assert calls == ["body", "fence"]
+    assert len(t.records["fenced"]) == 1
+
+    # the fence's own duration is charged to the region
+    import time
+    t2 = Timer()
+    with t2.region("slow_fence", fence=lambda: time.sleep(0.02)):
+        pass
+    assert t2.records["slow_fence"][0] >= 0.02
+
+
+def test_timed_returns_value_and_records():
+    t = Timer()
+    f = t.timed("add", lambda a, b: a + b)
+    out = f(jnp.ones(4), jnp.ones(4))
+    assert out.tolist() == [2.0, 2.0, 2.0, 2.0]
+    f(jnp.zeros(2), jnp.zeros(2))
+    assert len(t.records["add"]) == 2
+    assert t.summary(drop_warmup=1)["add"]["calls"] == 1
+
+
+def test_table_sorted_by_cost():
+    t = Timer()
+    t.records["cheap"] = [0.001, 0.001]
+    t.records["costly"] = [0.5, 0.5]
+    lines = t.table().splitlines()
+    assert lines[1].startswith("costly")
+    assert lines[2].startswith("cheap")
+    assert "%" in lines[1]
+
+
+def test_phase_split_times_each_phase():
+    out = phase_split(None, {"forward": lambda x: x + 1,
+                             "backward": lambda x: x * 2},
+                      jnp.ones(8))
+    assert set(out) == {"forward", "backward"}
+    assert all(v >= 0.0 for v in out.values())
