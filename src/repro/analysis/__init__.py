@@ -1,0 +1,15 @@
+"""repro.analysis — a repo-specific invariant linter.
+
+Static analysis (stdlib ``ast``, no jax import) that machine-checks the
+jit/trace, numerics and request-lifecycle disciplines PRs 1-8 learned
+the hard way. See docs/static_analysis.md for the rule catalogue and
+the waiver/baseline policy; run it with::
+
+    python -m repro.analysis check src tests benchmarks
+"""
+from repro.analysis.core import (BaseRule, FileContext, Finding, Report,
+                                 Rule, Waiver, run_check)
+from repro.analysis.rules import ALL_RULES, rules_by_id
+
+__all__ = ["ALL_RULES", "BaseRule", "FileContext", "Finding", "Report",
+           "Rule", "Waiver", "run_check", "rules_by_id"]

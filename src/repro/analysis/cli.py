@@ -1,0 +1,118 @@
+"""CLI for the invariant linter.
+
+    python -m repro.analysis check src tests benchmarks
+    python -m repro.analysis check --update-baseline src tests benchmarks
+    python -m repro.analysis rules
+
+``check`` exits 0 iff every finding is either inline-waived
+(``# repro: allow[RULE-ID] <why>``) or grandfathered in the committed
+baseline (``analysis-baseline.json`` at the repo root / cwd). Waived and
+baselined findings are still printed in the summary — suppression is
+visible, never silent — and stale baseline entries (the offending line
+changed or disappeared) are reported so the baseline only ever shrinks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.core import load_baseline, run_check, save_baseline
+from repro.analysis.rules import ALL_RULES
+
+DEFAULT_BASELINE = "analysis-baseline.json"
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-specific invariant linter (jit/trace, "
+                    "numerics, serving-lifecycle disciplines).")
+    sub = p.add_subparsers(dest="command", required=True)
+
+    chk = sub.add_parser("check", help="lint files/directories")
+    chk.add_argument("paths", nargs="+",
+                     help="files or directories (dirs recurse over *.py; "
+                          "lint_fixtures/ dirs are skipped)")
+    chk.add_argument("--baseline", default=None,
+                     help=f"baseline JSON (default: ./{DEFAULT_BASELINE} "
+                          f"when present)")
+    chk.add_argument("--no-baseline", action="store_true",
+                     help="ignore any baseline: report grandfathered "
+                          "findings as active")
+    chk.add_argument("--update-baseline", action="store_true",
+                     help="rewrite the baseline from the current active+"
+                          "baselined findings (keeps existing notes)")
+    chk.add_argument("-q", "--quiet", action="store_true",
+                     help="print only active findings and the verdict")
+
+    sub.add_parser("rules", help="print the rule catalogue")
+    return p
+
+
+def _cmd_rules() -> int:
+    for r in ALL_RULES:
+        print(f"{r.rule_id:9s} {r.title}")
+        print(f"          {r.rationale}")
+    return 0
+
+
+def _cmd_check(args: argparse.Namespace) -> int:
+    baseline_path: Optional[Path] = None
+    baseline = None
+    if not args.no_baseline:
+        cand = Path(args.baseline) if args.baseline else Path(
+            DEFAULT_BASELINE)
+        if cand.exists():
+            baseline_path = cand
+            baseline = load_baseline(cand)
+        elif args.baseline:
+            print(f"error: baseline {cand} not found", file=sys.stderr)
+            return 2
+
+    report = run_check(ALL_RULES, args.paths, baseline=baseline)
+
+    for f in report.parse_errors:
+        print(f.format())
+    for f in report.active:
+        print(f.format())
+
+    if args.update_baseline:
+        path = baseline_path or Path(args.baseline or DEFAULT_BASELINE)
+        notes = {}
+        for e in baseline or []:
+            notes[(e.get("rule", ""), e.get("file", ""),
+                   e.get("line_text", ""))] = e.get("note", "")
+        keep = report.active + report.baselined
+        save_baseline(path, keep, notes)
+        print(f"baseline: wrote {len(keep)} entr"
+              f"{'y' if len(keep) == 1 else 'ies'} to {path}")
+        return 0
+
+    if not args.quiet:
+        for f, w in report.waived:
+            print(f"waived   {f.format()}  [{w.reason}]")
+        for f in report.baselined:
+            print(f"baseline {f.format()}")
+        for e in report.stale_baseline:
+            print(f"stale baseline entry (fixed or moved — remove it): "
+                  f"{e.get('rule')} {e.get('file')} "
+                  f"{e.get('line_text', '')!r}")
+    n = len(report.active) + len(report.parse_errors)
+    print(f"repro.analysis: {report.files_checked} files, "
+          f"{n} active finding{'s' if n != 1 else ''} "
+          f"({len(report.waived)} waived, {len(report.baselined)} "
+          f"baselined, {len(report.stale_baseline)} stale baseline)")
+    return 1 if n else 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.command == "rules":
+        return _cmd_rules()
+    return _cmd_check(args)
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,332 @@
+"""Rule engine for the repo's invariant linter.
+
+The serving/kernel stack's performance rests on disciplines that are
+invisible to the type system and to pytest until they regress: one host
+sync inside a jitted step serializes the dispatch pipeline, one
+division-by-constant re-rounds a quant scale differently across
+compilations, one scatter without ``mode="drop"`` lets an inactive batch
+slot corrupt live KV pages. PRs 1-8 fixed each of these by hand at least
+once; this package turns the fixes into machine-checked rules
+(``repro.analysis.rules``) so they cannot silently come back.
+
+This module is the engine; it knows nothing about any specific rule:
+
+  * :class:`Finding` — one violation, with ``file:line``, rule id,
+    message and the stripped source line (the baseline fingerprint).
+  * :class:`Rule` / :class:`BaseRule` — the plug-in protocol. A rule
+    declares the AST node types it wants (``node_types``), a file-scope
+    predicate (``applies_to``) and a ``visit(node, ctx)`` generator; the
+    engine parses each file ONCE and dispatches every node to every
+    interested rule, so adding a rule never adds a parse or a tree walk.
+  * :class:`FileContext` — per-file state shared by all rules: source,
+    AST (with parent links), inline waivers, and a scratch ``cache``
+    dict for cross-rule memos (e.g. the module's function index).
+  * Inline waivers — ``# repro: allow[RULE-ID] <why>`` on the flagged
+    line, or standing alone on the line(s) directly above it. The
+    justification is mandatory: a reason-less waiver does not suppress.
+  * Baseline — a committed JSON file of grandfathered findings, matched
+    by (rule id, file, stripped line text) so entries survive unrelated
+    line-number churn and go stale loudly when the offending line
+    changes or disappears.
+
+Everything is stdlib-only (``ast``, ``json``, ``re``): the linter must
+run in CI before heavyweight imports, and must never import jax.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
+                    Tuple, Type)
+
+__all__ = [
+    "Finding", "Waiver", "FileContext", "Rule", "BaseRule",
+    "parse_waivers", "collect_files", "run_check", "Report",
+    "load_baseline", "save_baseline",
+]
+
+WAIVER_RE = re.compile(r"#\s*repro:\s*allow\[([A-Za-z0-9_-]+)\]\s*(.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at ``path:line``.
+
+    ``line_text`` is the stripped source line: it is the stable half of
+    the baseline fingerprint (line *numbers* churn on every unrelated
+    edit; the offending line's text only changes when the finding
+    itself does)."""
+
+    rule_id: str
+    path: str
+    line: int
+    message: str
+    line_text: str = ""
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule_id} {self.message}"
+
+    def fingerprint(self) -> Tuple[str, str, str]:
+        return (self.rule_id, self.path, self.line_text)
+
+
+@dataclasses.dataclass
+class Waiver:
+    """A parsed ``# repro: allow[RULE-ID] <why>`` comment."""
+
+    rule_id: str
+    reason: str
+    line: int           # line the waiver comment sits on
+    target: int         # line whose findings it suppresses
+    used: bool = False
+
+    @property
+    def valid(self) -> bool:
+        return bool(self.reason.strip())
+
+
+def parse_waivers(lines: Sequence[str]) -> List[Waiver]:
+    """Extract waivers from source lines.
+
+    A waiver trailing code applies to its own line; a waiver that is the
+    whole line applies to the next non-waiver line (stacked standalone
+    waivers all target the same following line, so two rules can be
+    waived above one statement)."""
+    out: List[Waiver] = []
+    pending: List[Waiver] = []
+    for i, raw in enumerate(lines, start=1):
+        m = WAIVER_RE.search(raw)
+        standalone = raw.strip().startswith("#")
+        if m and standalone:
+            pending.append(Waiver(m.group(1), m.group(2).strip(), i, -1))
+            continue
+        if pending and raw.strip():
+            for w in pending:
+                w.target = i
+            out.extend(pending)
+            pending = []
+        if m:
+            out.append(Waiver(m.group(1), m.group(2).strip(), i, i))
+    out.extend(pending)  # trailing standalone waivers target nothing
+    return out
+
+
+class FileContext:
+    """Per-file state handed to every rule: parsed tree (with parent
+    links), source lines, waivers, and a scratch ``cache`` dict for
+    memos shared across rules (keyed by the rule/memo name)."""
+
+    def __init__(self, path: Path, relpath: str, source: str,
+                 tree: ast.Module):
+        self.path = path
+        # normalized posix path; fixture files may shadow real module
+        # paths with a ``.pytxt`` suffix, which scope checks see as .py
+        self.relpath = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.waivers = parse_waivers(self.lines)
+        self.cache: Dict[str, Any] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                child._repro_parent = parent  # type: ignore[attr-defined]
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def waiver_for(self, rule_id: str, line: int) -> Optional[Waiver]:
+        for w in self.waivers:
+            if w.rule_id == rule_id and w.target == line and w.valid:
+                return w
+        return None
+
+    # --- AST helpers shared by rules -------------------------------
+    @staticmethod
+    def parents(node: ast.AST) -> Iterator[ast.AST]:
+        cur = getattr(node, "_repro_parent", None)
+        while cur is not None:
+            yield cur
+            cur = getattr(cur, "_repro_parent", None)
+
+    @classmethod
+    def enclosing_functions(cls, node: ast.AST) -> List[str]:
+        """Names of enclosing function defs, innermost first."""
+        return [p.name for p in cls.parents(node)
+                if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+class Rule:
+    """Protocol every rule implements (see :class:`BaseRule`).
+
+    ``node_types``: AST classes the engine should dispatch to ``visit``.
+    ``applies_to(ctx)``: file-scope gate, checked once per file.
+    ``visit(node, ctx)``: yields :class:`Finding` objects.
+    """
+
+    rule_id: str = ""
+    title: str = ""
+    rationale: str = ""
+    node_types: Tuple[Type[ast.AST], ...] = ()
+
+    def applies_to(self, ctx: FileContext) -> bool:  # pragma: no cover
+        return True
+
+    def visit(self, node: ast.AST,
+              ctx: FileContext) -> Iterable[Finding]:  # pragma: no cover
+        return ()
+
+
+class BaseRule(Rule):
+    def finding(self, ctx: FileContext, node: ast.AST,
+                message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(self.rule_id, ctx.relpath, line, message,
+                       ctx.line_text(line))
+
+
+# ---------------------------------------------------------------------------
+# File collection
+# ---------------------------------------------------------------------------
+
+#: Directories whose contents are never linted when reached by directory
+#: walk: lint fixtures are deliberately-bad code (passing a fixture file
+#: path explicitly still lints it — that is how the fixture tests run).
+SKIP_DIR_NAMES = frozenset({"lint_fixtures", "__pycache__", ".git"})
+
+
+def collect_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            for f in sorted(path.rglob("*.py")):
+                if not SKIP_DIR_NAMES.intersection(f.parts):
+                    out.append(f)
+        elif path.is_file():
+            out.append(path)
+    return out
+
+
+def _relpath(path: Path, root: Optional[Path]) -> str:
+    try:
+        rel = path.resolve().relative_to((root or Path.cwd()).resolve())
+    except ValueError:
+        rel = path
+    s = rel.as_posix()
+    # fixture files shadow real module paths with an extra suffix so
+    # pytest/package machinery ignores them; scope checks see them as .py
+    if s.endswith(".pytxt"):
+        s = s[: -len(".pytxt")] + ".py"
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: Path) -> List[Dict[str, str]]:
+    data = json.loads(path.read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"baseline {path}: unsupported version "
+                         f"{data.get('version')!r}")
+    return list(data.get("findings", []))
+
+
+def save_baseline(path: Path, findings: Sequence[Finding],
+                  notes: Optional[Dict[Tuple[str, str, str], str]] = None
+                  ) -> None:
+    entries = []
+    for f in sorted(findings, key=lambda f: (f.path, f.rule_id, f.line)):
+        e = {"rule": f.rule_id, "file": f.path, "line_text": f.line_text,
+             "note": (notes or {}).get(f.fingerprint(), "")}
+        entries.append(e)
+    path.write_text(json.dumps(
+        {"version": BASELINE_VERSION, "findings": entries}, indent=2)
+        + "\n")
+
+
+# ---------------------------------------------------------------------------
+# The check run
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Report:
+    """Everything one ``check`` run produced.
+
+    ``active`` is what fails the build; the rest is bookkeeping the CLI
+    prints so suppressions stay visible instead of silent."""
+
+    active: List[Finding] = dataclasses.field(default_factory=list)
+    waived: List[Tuple[Finding, Waiver]] = dataclasses.field(
+        default_factory=list)
+    baselined: List[Finding] = dataclasses.field(default_factory=list)
+    stale_baseline: List[Dict[str, str]] = dataclasses.field(
+        default_factory=list)
+    parse_errors: List[Finding] = dataclasses.field(default_factory=list)
+    files_checked: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.active and not self.parse_errors
+
+
+def run_check(rules: Sequence[Rule], paths: Sequence[str], *,
+              root: Optional[Path] = None,
+              baseline: Optional[Sequence[Dict[str, str]]] = None
+              ) -> Report:
+    report = Report()
+    raw: List[Finding] = []
+    contexts: Dict[str, FileContext] = {}
+    for path in collect_files(paths):
+        rel = _relpath(path, root)
+        try:
+            source = path.read_text()
+            tree = ast.parse(source, filename=str(path))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            lineno = getattr(e, "lineno", 1) or 1
+            report.parse_errors.append(Finding(
+                "PARSE", rel, lineno, f"could not parse: {e}"))
+            continue
+        ctx = FileContext(path, rel, source, tree)
+        contexts[rel] = ctx
+        report.files_checked += 1
+        file_rules = [r for r in rules if r.applies_to(ctx)]
+        dispatch: Dict[Type[ast.AST], List[Rule]] = {}
+        for r in file_rules:
+            for t in r.node_types:
+                dispatch.setdefault(t, []).append(r)
+        if not dispatch:
+            continue
+        for node in ast.walk(tree):
+            for r in dispatch.get(type(node), ()):
+                raw.extend(r.visit(node, ctx))
+
+    base_left: List[Dict[str, str]] = list(baseline or [])
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.rule_id)):
+        w = contexts[f.path].waiver_for(f.rule_id, f.line)
+        if w is not None:
+            w.used = True
+            report.waived.append((f, w))
+            continue
+        matched = None
+        for e in base_left:
+            if (e.get("rule") == f.rule_id and e.get("file") == f.path
+                    and e.get("line_text") == f.line_text):
+                matched = e
+                break
+        if matched is not None:
+            base_left.remove(matched)
+            report.baselined.append(f)
+            continue
+        report.active.append(f)
+    report.stale_baseline = base_left
+    return report

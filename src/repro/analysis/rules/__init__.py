@@ -1,0 +1,33 @@
+"""Rule registry: one instance of every shipped rule.
+
+Adding a rule = write a :class:`repro.analysis.core.BaseRule` subclass
+in a module here, instantiate it in :data:`ALL_RULES`, and pair it with
+good/bad fixtures under ``tests/lint_fixtures/`` (see
+docs/static_analysis.md for the walkthrough)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.core import Rule
+from repro.analysis.rules.jit import Jit01HostSync, Jit02Donation
+from repro.analysis.rules.numerics import Num01ConstDivide, Num02DoubleLowCast
+from repro.analysis.rules.pallas import Pal01InterpretRouting
+from repro.analysis.rules.serving import (Cache01ScatterDrop, Host01NoJax,
+                                          Life01TerminalState)
+
+__all__ = ["ALL_RULES", "rules_by_id"]
+
+ALL_RULES: List[Rule] = [
+    Jit01HostSync(),
+    Jit02Donation(),
+    Num01ConstDivide(),
+    Num02DoubleLowCast(),
+    Pal01InterpretRouting(),
+    Cache01ScatterDrop(),
+    Host01NoJax(),
+    Life01TerminalState(),
+]
+
+
+def rules_by_id() -> Dict[str, Rule]:
+    return {r.rule_id: r for r in ALL_RULES}

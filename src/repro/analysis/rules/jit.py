@@ -1,0 +1,189 @@
+"""JIT/trace discipline rules.
+
+The whole serving design collapses to "every engine step is ONE jit
+dispatch over a donated state pytree" (engine.py's bounded-compile and
+donation contracts). Two ways that contract has historically been at
+risk:
+
+  * a host sync inside a traced step body — ``.item()``, ``float()`` on
+    a traced value, ``np.asarray``, ``print``, ``block_until_ready`` —
+    either breaks tracing outright or, worse, silently forces a
+    device→host round trip per step (the paper's §IV: one stray sync
+    erases the async dispatch pipeline's overlap);
+  * a ``jax.jit`` call site that takes the big KV/SSM state pytrees but
+    forgets ``donate_argnums`` — the step then *copies* the entire
+    cache every token instead of updating it in place.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Iterable, List, Set
+
+from repro.analysis.core import BaseRule, FileContext, Finding
+
+__all__ = ["Jit01HostSync", "Jit02Donation"]
+
+#: Function names whose bodies are traced by jax.jit (engine step impls
+#: and the shared scan body factory). fnmatch patterns.
+TRACED_FN_PATTERNS = ("_*_step_impl", "_make_stack_body")
+
+#: attribute calls that force a host sync / host materialization
+_SYNC_ATTRS = {"item", "block_until_ready"}
+#: module-level calls that materialize a traced value on the host
+_SYNC_CALLS = {("np", "asarray"), ("numpy", "asarray"),
+               ("onp", "asarray"), ("jax", "device_get")}
+_CONVERSIONS = {"float", "int", "bool"}
+
+
+def _is_traced_fn_name(name: str) -> bool:
+    return any(fnmatch.fnmatchcase(name, p) for p in TRACED_FN_PATTERNS)
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in
+             list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return [n for n in names if n != "self"]
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute chain ('np.asarray'), '' if dynamic."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class Jit01HostSync(BaseRule):
+    rule_id = "JIT-01"
+    title = "no host syncs inside jit-traced step bodies"
+    rationale = (
+        "A .item()/float()/np.asarray/print/block_until_ready on a traced "
+        "value inside _*_step_impl or _make_stack_body either fails "
+        "tracing or forces a per-step device->host round trip, "
+        "serializing the async dispatch pipeline the one-dispatch-per-"
+        "step contract exists to protect.")
+    node_types = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+    def visit(self, node: ast.AST,
+              ctx: FileContext) -> Iterable[Finding]:
+        if not _is_traced_fn_name(node.name):
+            return
+        # every parameter of the traced function AND of its nested defs/
+        # lambdas (scan bodies take traced xs) is a traced value
+        traced: Set[str] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                traced.update(_param_names(sub))
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn = sub.func
+            if isinstance(fn, ast.Attribute) and fn.attr in _SYNC_ATTRS:
+                yield self.finding(
+                    ctx, sub,
+                    f"host sync '.{fn.attr}()' inside jit-traced "
+                    f"'{node.name}' — one dispatch per step means no "
+                    f"host round trips in the traced body")
+                continue
+            chain = _attr_chain(fn)
+            if tuple(chain.split(".")) in _SYNC_CALLS:
+                yield self.finding(
+                    ctx, sub,
+                    f"'{chain}()' materializes a traced value on the "
+                    f"host inside jit-traced '{node.name}'")
+                continue
+            if isinstance(fn, ast.Name) and fn.id == "print":
+                yield self.finding(
+                    ctx, sub,
+                    f"print() inside jit-traced '{node.name}': traces "
+                    f"once (misleading) or syncs via callback; use "
+                    f"telemetry hooks outside the step")
+                continue
+            if (isinstance(fn, ast.Name) and fn.id in _CONVERSIONS
+                    and sub.args):
+                if self._converts_traced_value(sub.args[0], traced):
+                    yield self.finding(
+                        ctx, sub,
+                        f"{fn.id}() on a traced value inside "
+                        f"'{node.name}' forces a concrete host value "
+                        f"mid-trace (shape/static metadata like "
+                        f"x.shape[i] is fine and not flagged)")
+
+    @staticmethod
+    def _converts_traced_value(arg: ast.AST, traced: Set[str]) -> bool:
+        """float(x)/int(x) is a host sync only when x derives from a
+        traced parameter; int(tokens.shape[1]) reads static metadata."""
+        mentions_traced = False
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Attribute) and sub.attr in ("shape",
+                                                               "ndim",
+                                                               "dtype",
+                                                               "size"):
+                return False
+            if isinstance(sub, ast.Name) and sub.id in traced:
+                mentions_traced = True
+        return mentions_traced
+
+
+class Jit02Donation(BaseRule):
+    rule_id = "JIT-02"
+    title = "jit over the donated state pytrees must donate"
+    rationale = (
+        "jax.jit(step_impl) without donate_argnums over kv_state/"
+        "ssm_states copies the whole paged cache every step instead of "
+        "updating it in place — functionally invisible, catastrophic "
+        "for HBM footprint and decode bandwidth.")
+    node_types = (ast.Call,)
+
+    #: parameter names that, by repo convention, carry the big donated
+    #: state pytrees (the paged KV pool and the per-slot SSM states)
+    DONATED_PARAMS = frozenset({"kv_state", "ssm_states"})
+
+    def visit(self, node: ast.Call,
+              ctx: FileContext) -> Iterable[Finding]:
+        chain = _attr_chain(node.func)
+        if chain not in ("jax.jit", "jit"):
+            return
+        if not node.args:
+            return
+        target = node.args[0]
+        if isinstance(target, ast.Attribute):
+            name = target.attr
+        elif isinstance(target, ast.Name):
+            name = target.id
+        else:
+            return
+        index = ctx.cache.get("fn_index")
+        if index is None:
+            index = {
+                fn.name: _param_names(fn)
+                for fn in ast.walk(ctx.tree)
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }
+            ctx.cache["fn_index"] = index
+        params = index.get(name)
+        if params is None:
+            return
+        donated = sorted(self.DONATED_PARAMS.intersection(params))
+        if not donated:
+            return
+        kwargs = {kw.arg for kw in node.keywords}
+        if {"donate_argnums", "donate_argnames"} & kwargs:
+            return
+        yield self.finding(
+            ctx, node,
+            f"jax.jit({name}) takes donated state pytree(s) "
+            f"{', '.join(donated)} but passes no donate_argnums/"
+            f"donate_argnames: the cache will be copied every step "
+            f"instead of updated in place")

@@ -1,0 +1,166 @@
+"""Cross-compilation numerics rules.
+
+Greedy-token parity between the eager legacy path, the jitted fused
+step and the TP-sharded executables is a *bitwise* contract in this
+repo, and it has been broken twice by one-ulp numerics drift:
+
+  * ``x / 127.0`` in a quant scale: XLA rewrites division-by-constant
+    into reciprocal-multiplication in some fusion contexts and not
+    others, so the same source line produces different scale bits in
+    different compilations (the PR 5 trap, fixed by stating the
+    multiply: ``* np.float32(1.0 / 127.0)`` in cache.quant_encode);
+  * double bf16 materialization along one value chain: rounding an
+    intermediate to bf16, computing on, and rounding to bf16 *again*
+    accumulates rounding error fusion-dependently — values must be
+    rounded to low precision ONCE per chain (the f32 accumulate-once
+    rule engine.py's optimization_barrier comments document).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis.core import BaseRule, FileContext, Finding
+
+__all__ = ["Num01ConstDivide", "Num02DoubleLowCast"]
+
+_LOW_DTYPES = {"bfloat16", "float16"}
+_LOW_STRS = {"bfloat16", "float16", "bf16", "fp16"}
+_HIGH_DTYPES = {"float32", "float64"}
+_HIGH_STRS = {"float32", "float64", "f32", "fp32"}
+
+_ENC_TOKENS = {"enc", "encode", "encoded"}
+
+
+def _in_quant_encode_scope(node: ast.AST, ctx: FileContext) -> Optional[str]:
+    """Innermost enclosing function that is a quant/encode path."""
+    for name in ctx.enclosing_functions(node):
+        toks = name.lower().strip("_").split("_")
+        if any(t.startswith("quant") for t in toks) or \
+                _ENC_TOKENS.intersection(toks):
+            return name
+    return None
+
+
+def _const_number(node: ast.AST) -> Optional[float]:
+    """Numeric value of a constant divisor: a literal, -literal, or a
+    dtype-wrapped literal like np.float32(127.0)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value,
+                                                     (int, float)):
+        return float(node.value)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = _const_number(node.operand)
+        return None if inner is None else -inner
+    if (isinstance(node, ast.Call) and len(node.args) == 1
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _HIGH_DTYPES | _LOW_DTYPES):
+        return _const_number(node.args[0])
+    return None
+
+
+class Num01ConstDivide(BaseRule):
+    rule_id = "NUM-01"
+    title = "no division by a constant in quant/encode paths"
+    rationale = (
+        "XLA turns x / CONST into x * (1/CONST) fusion-dependently; a "
+        "one-f32-ulp scale difference between the eager and jitted "
+        "compilations of the same encode shifts dequantized reads "
+        "enough to split greedy tokens. State the reciprocal multiply "
+        "so every compilation produces the same bits.")
+    node_types = (ast.BinOp,)
+
+    def visit(self, node: ast.BinOp,
+              ctx: FileContext) -> Iterable[Finding]:
+        if not isinstance(node.op, ast.Div):
+            return
+        fn = _in_quant_encode_scope(node, ctx)
+        if fn is None:
+            return
+        v = _const_number(node.right)
+        if v is None or v == 0:
+            return
+        # const / const (e.g. the sanctioned np.float32(1.0 / 127.0)
+        # reciprocal itself) folds on the host in Python, outside XLA's
+        # reach — it is the fix, not the hazard
+        if _const_number(node.left) is not None:
+            return
+        yield self.finding(
+            ctx, node,
+            f"division by constant {v:g} in quant/encode path '{fn}': "
+            f"write the reciprocal multiply (* np.float32(1.0 / {v:g})) "
+            f"so eager, jit and TP compilations produce identical "
+            f"scale bits")
+
+
+def _cast_dtype(call: ast.AST) -> Optional[str]:
+    """'low' / 'high' / None for an ``x.astype(...)`` call."""
+    if not (isinstance(call, ast.Call)
+            and isinstance(call.func, ast.Attribute)
+            and call.func.attr == "astype" and len(call.args) == 1):
+        return None
+    arg = call.args[0]
+    name = None
+    if isinstance(arg, ast.Attribute):
+        name = arg.attr
+    elif isinstance(arg, ast.Name):
+        name = arg.id
+    elif isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        name = arg.value
+    if name in _LOW_DTYPES or name in _LOW_STRS:
+        return "low"
+    if name in _HIGH_DTYPES or name in _HIGH_STRS:
+        return "high"
+    return None
+
+
+def _chain_has_lowcast(node: ast.AST) -> bool:
+    """True if the value chain feeding ``node`` already materialized a
+    low-precision dtype, with no f32/f64 upcast in between.
+
+    The chain follows value flow only — binops, unary ops, subscripts,
+    attribute access and method-call receivers. It does NOT descend into
+    arbitrary call arguments: a function call may upcast internally, so
+    flagging through it would be guessing."""
+    if isinstance(node, ast.Call):
+        kind = _cast_dtype(node)
+        if kind == "low":
+            return True
+        if kind == "high":
+            return False
+        if isinstance(node.func, ast.Attribute):  # x.reshape(...) etc.
+            return _chain_has_lowcast(node.func.value)
+        return False
+    if isinstance(node, ast.BinOp):
+        return (_chain_has_lowcast(node.left)
+                or _chain_has_lowcast(node.right))
+    if isinstance(node, ast.UnaryOp):
+        return _chain_has_lowcast(node.operand)
+    if isinstance(node, ast.IfExp):
+        return (_chain_has_lowcast(node.body)
+                or _chain_has_lowcast(node.orelse))
+    if isinstance(node, (ast.Attribute, ast.Subscript)):
+        return _chain_has_lowcast(node.value)
+    return False
+
+
+class Num02DoubleLowCast(BaseRule):
+    rule_id = "NUM-02"
+    title = "round to low precision once per value chain"
+    rationale = (
+        "(x.astype(bf16) + y).astype(bf16) rounds the chain twice; "
+        "which consumers see the extra rounding is fusion-dependent, so "
+        "eager/jit/TP compilations drift apart. Accumulate in f32 and "
+        "cast once at the end (the accumulate-once rule).")
+    node_types = (ast.Call,)
+
+    def visit(self, node: ast.Call,
+              ctx: FileContext) -> Iterable[Finding]:
+        if _cast_dtype(node) != "low":
+            return
+        if _chain_has_lowcast(node.func.value):
+            yield self.finding(
+                ctx, node,
+                "low-precision cast applied to a chain that already "
+                "materialized a low-precision value (no f32 upcast in "
+                "between): double rounding is fusion-dependent — "
+                "accumulate in f32 and round once")

@@ -1,0 +1,55 @@
+"""Pallas kernel-call discipline.
+
+``pl.pallas_call(..., interpret=...)`` decides whether the kernel body
+compiles to Mosaic (TPU) or is evaluated in Python. The repo's contract
+(kernels/_interpret.py) is that every entry point resolves
+``interpret=None`` through ``default_interpret()`` — compiled on TPU,
+interpreted elsewhere — so real hardware can never silently run a
+Python-interpreted kernel (orders of magnitude slower, and exactly the
+kind of stack-level regression the paper shows dominating measured
+throughput) and CPU CI never tries to compile Mosaic.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import BaseRule, FileContext, Finding
+from repro.analysis.rules.jit import _attr_chain
+
+__all__ = ["Pal01InterpretRouting"]
+
+
+class Pal01InterpretRouting(BaseRule):
+    rule_id = "PAL-01"
+    title = "pallas_call must route interpret= through default_interpret()"
+    rationale = (
+        "A pallas_call with no interpret= (or a hardcoded True/False) "
+        "either runs Python-interpreted on real hardware or fails to "
+        "compile off-TPU; kernels/_interpret.default_interpret() is the "
+        "single backend dispatch point.")
+    node_types = (ast.Call,)
+
+    def visit(self, node: ast.Call,
+              ctx: FileContext) -> Iterable[Finding]:
+        chain = _attr_chain(node.func)
+        if not (chain == "pallas_call" or chain.endswith(".pallas_call")):
+            return
+        kw = next((k for k in node.keywords if k.arg == "interpret"), None)
+        if kw is None:
+            yield self.finding(
+                ctx, node,
+                "pl.pallas_call without interpret=: route it through "
+                "kernels._interpret.default_interpret() (resolve_"
+                "interpret) so the backend decides compiled vs "
+                "interpreted")
+            return
+        if isinstance(kw.value, ast.Constant) and isinstance(
+                kw.value.value, bool):
+            yield self.finding(
+                ctx, node,
+                f"pl.pallas_call(interpret={kw.value.value}) hardcodes "
+                f"the backend decision: interpret=True silently runs "
+                f"Python-interpreted kernels on TPU, interpret=False "
+                f"breaks every non-TPU environment — resolve via "
+                f"default_interpret()")

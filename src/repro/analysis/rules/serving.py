@@ -1,0 +1,134 @@
+"""Serving-layer invariants: scatter safety, host/device module split,
+and the request-lifecycle state machine.
+
+  * **CACHE-01** — the paged-KV design masks inactive batch slots and
+    padded chunk tails by routing their appends to block id
+    ``n_blocks`` — one past the pool — and relying on the scatter to
+    DROP out-of-range writes. Without ``mode="drop"`` jax clamps
+    instead, so the "null write" lands in the *last real block* and
+    silently corrupts a live request's KV (the PR 1 inactive-slot
+    garbage-scatter bug, re-fixed in PR 2 for SSM states).
+  * **HOST-01** — scheduler.py, prefix_cache.py and faults.py are
+    host-only by design: policy must stay importable, testable and
+    traceable without a device runtime, and nothing in a policy module
+    may accidentally trace or allocate on device. (They also must stay
+    importable before jax to keep the linter and tooling lightweight.)
+  * **LIFE-01** — PR 6's hardening contract: every request ends in
+    exactly one terminal state *through the scrub→release eviction
+    path*. A terminal state assigned anywhere else skips the page
+    scrub / block release / telemetry accounting and resurrects the
+    block-leak class of bugs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import BaseRule, FileContext, Finding
+
+__all__ = ["Cache01ScatterDrop", "Host01NoJax", "Life01TerminalState"]
+
+
+class Cache01ScatterDrop(BaseRule):
+    rule_id = "CACHE-01"
+    title = 'serving scatters must pass mode="drop"'
+    rationale = (
+        "Serving .at[...].set/add updates are indexed through block "
+        "tables whose null-write sentinel is one past the pool; "
+        "without mode='drop' XLA clamps the out-of-range index into "
+        "the last live block and corrupts another request's KV.")
+    node_types = (ast.Call,)
+
+    def applies_to(self, ctx: FileContext) -> bool:
+        return "serving/" in ctx.relpath
+
+    def visit(self, node: ast.Call,
+              ctx: FileContext) -> Iterable[Finding]:
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute) and fn.attr in ("set", "add")):
+            return
+        recv = fn.value
+        if not (isinstance(recv, ast.Subscript)
+                and isinstance(recv.value, ast.Attribute)
+                and recv.value.attr == "at"):
+            return
+        for kw in node.keywords:
+            if (kw.arg == "mode" and isinstance(kw.value, ast.Constant)
+                    and kw.value.value == "drop"):
+                return
+        yield self.finding(
+            ctx, node,
+            f'.at[...].{fn.attr}() in a serving path without '
+            f'mode="drop": an out-of-range index (the null-write '
+            f'sentinel, a stale table entry) clamps into a live block '
+            f'instead of dropping')
+
+
+class Host01NoJax(BaseRule):
+    rule_id = "HOST-01"
+    title = "host-only serving modules must not import jax"
+    rationale = (
+        "scheduler.py / prefix_cache.py / faults.py are pure-policy "
+        "host modules: importing jax there couples scheduling policy "
+        "to a device runtime, slows every tool that imports them, and "
+        "invites accidental device allocation inside policy code.")
+    node_types = (ast.Import, ast.ImportFrom)
+
+    HOST_ONLY = ("serving/scheduler.py", "serving/prefix_cache.py",
+                 "serving/faults.py")
+
+    def applies_to(self, ctx: FileContext) -> bool:
+        return ctx.relpath.endswith(self.HOST_ONLY)
+
+    def visit(self, node: ast.AST,
+              ctx: FileContext) -> Iterable[Finding]:
+        if isinstance(node, ast.Import):
+            mods = [a.name for a in node.names]
+        else:
+            mods = [node.module or ""]
+        for mod in mods:
+            if mod == "jax" or mod.startswith("jax."):
+                yield self.finding(
+                    ctx, node,
+                    f"host-only module imports '{mod}': scheduler/"
+                    f"prefix-cache/fault policy must stay device-free "
+                    f"(numpy is fine; jax belongs in engine/cache)")
+
+
+class Life01TerminalState(BaseRule):
+    rule_id = "LIFE-01"
+    title = "terminal Request states only via Scheduler.evict_terminal"
+    rationale = (
+        "Assigning FINISHED/TIMED_OUT/CANCELLED/REJECTED/FAILED "
+        "outside the sanctioned lifecycle exits skips the scrub->"
+        "release path: pages leak or keep stale bytes, and per-cause "
+        "terminal accounting silently undercounts.")
+    node_types = (ast.Assign,)
+
+    TERMINAL_NAMES = frozenset(
+        {"FINISHED", "TIMED_OUT", "CANCELLED", "REJECTED", "FAILED"})
+    TERMINAL_STRS = frozenset(
+        {"finished", "timed_out", "cancelled", "rejected", "failed"})
+    ALLOWED_FNS = frozenset({"evict_terminal"})
+
+    def visit(self, node: ast.Assign,
+              ctx: FileContext) -> Iterable[Finding]:
+        value = node.value
+        if isinstance(value, ast.Name) and value.id in self.TERMINAL_NAMES:
+            state = value.id
+        elif (isinstance(value, ast.Constant)
+              and value.value in self.TERMINAL_STRS):
+            state = repr(value.value)
+        else:
+            return
+        if not any(isinstance(t, ast.Attribute) and t.attr == "state"
+                   for t in node.targets):
+            return
+        if self.ALLOWED_FNS.intersection(ctx.enclosing_functions(node)):
+            return
+        yield self.finding(
+            ctx, node,
+            f"terminal state {state} assigned outside "
+            f"Scheduler.evict_terminal: terminal transitions must go "
+            f"through the scrub->release eviction path (or carry an "
+            f"explicit waiver naming why this exit is sanctioned)")

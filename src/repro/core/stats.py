@@ -1,0 +1,33 @@
+"""Shared host-side statistics helpers.
+
+One home for the percentile the serving stack reports everywhere —
+``Engine.stats()``'s latency SLO percentiles and the telemetry metrics
+registry's histogram snapshots previously each carried a private copy
+(engine._pct / telemetry._pctl), which is exactly the drift the
+invariant linter exists to prevent: two percentile definitions can
+disagree on edge cases and silently skew a benchmark comparison.
+tests/test_analysis.py pins that both call sites import THIS function.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import numpy as np
+
+__all__ = ["percentile"]
+
+
+def percentile(samples: Iterable[Optional[float]], p: float) -> float:
+    """Percentile that is safe on empty and singleton samples.
+
+    ``None`` entries are dropped (a request with fewer than two output
+    tokens has ``tpot() is None``); an empty window (right after
+    ``reset_stats``, or mid-burst before any request finishes) reports
+    0.0 instead of raising; a single sample reports itself for every
+    percentile."""
+    kept = [s for s in samples if s is not None]
+    if not kept:
+        return 0.0
+    if len(kept) == 1:
+        return float(kept[0])
+    return float(np.percentile(kept, p))

@@ -385,12 +385,14 @@ def truncate_slots(state: Dict[str, jax.Array], block_ids,
                          dtype=jnp.int32)
         for key in state:
             fill = 1.0 if key.endswith("_scale") else 0.0
+            # repro: allow[CACHE-01] host-validated allocator-owned ids; a bad scrub index must fail loudly, drop would mask it
             out[key] = out[key].at[:, bnd, off].set(
                 jnp.asarray(fill, out[key].dtype))
     if first_whole < len(ids):
         whole = jnp.asarray(ids[first_whole:])
         for key in state:
             fill = 1.0 if key.endswith("_scale") else 0.0
+            # repro: allow[CACHE-01] host-validated allocator-owned ids; a bad scrub index must fail loudly, drop would mask it
             out[key] = out[key].at[:, whole].set(
                 jnp.asarray(fill, out[key].dtype))
     return out
@@ -405,6 +407,7 @@ def scrub_blocks(state: Dict[str, jax.Array],
     out = dict(state)
     for key in state:
         fill = 1.0 if key.endswith("_scale") else 0.0
+        # repro: allow[CACHE-01] host-validated allocator-owned ids; a bad scrub index must fail loudly, drop would mask it
         out[key] = state[key].at[:, ids].set(
             jnp.asarray(fill, state[key].dtype))
     return out
@@ -417,6 +420,7 @@ def copy_block(state: Dict[str, jax.Array], src: int, dst: int
     cache-registered block first duplicates it into a private one."""
     out = dict(state)
     for key in state:
+        # repro: allow[CACHE-01] src/dst are host ints the allocator just handed out; a bad CoW target must fail loudly, not drop
         out[key] = state[key].at[:, dst].set(state[key][:, src])
     return out
 

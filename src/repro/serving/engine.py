@@ -151,6 +151,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.config import ArchConfig
+# the one shared percentile definition (empty-window- and None-safe):
+# stats() SLO percentiles and telemetry histogram snapshots must never
+# disagree on edge cases (see core/stats.py; pinned by tests)
+from repro.core.stats import percentile as _pct
 from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models.lm import LM
@@ -191,19 +195,6 @@ def _next_pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
-
-
-def _pct(samples, p: float) -> float:
-    """Percentile that is safe on empty and singleton samples: an empty
-    window (e.g. right after ``reset_stats``, or when no request has two
-    output tokens yet so every tpot() is None) reports 0.0 instead of
-    raising, and a single sample reports itself for every percentile."""
-    samples = [s for s in samples if s is not None]
-    if not samples:
-        return 0.0
-    if len(samples) == 1:
-        return float(samples[0])
-    return float(np.percentile(samples, p))
 
 
 class Engine:
@@ -463,6 +454,7 @@ class Engine:
         if not self._ssm_states:
             return
         self._ssm_states = jax.tree_util.tree_map(
+            # repro: allow[CACHE-01] slot is a host int in [0, max_batch); no null-write sentinel on the slot axis
             lambda a: a.at[:, slot].set(0), self._ssm_states)
 
     def _restore_ssm_slot(self, req: Request) -> None:
@@ -477,6 +469,7 @@ class Engine:
             self._zero_ssm_slot(req.slot)
             return
         self._ssm_states = jax.tree_util.tree_map(
+            # repro: allow[CACHE-01] req.slot is a host int the scheduler just assigned; no sentinel on the slot axis
             lambda full, snap: full.at[:, req.slot].set(snap),
             self._ssm_states, node.ssm)
 
@@ -679,6 +672,7 @@ class Engine:
                 c = cache[f"pos{pos}"]
                 st = self._ssm_states[f"pos{pos}"]
                 self._ssm_states[f"pos{pos}"] = jax.tree_util.tree_map(
+                    # repro: allow[CACHE-01] r.slot is a host int the scheduler just assigned; no sentinel on the slot axis
                     lambda full, new: full.at[:, r.slot].set(new[:, g]),
                     st, c)
         next_tok = np.asarray(jnp.argmax(logits, axis=-1))
@@ -1364,6 +1358,7 @@ class Engine:
                         new, old),
                     nc, st)
                 self._ssm_states[f"pos{pos}"] = jax.tree_util.tree_map(
+                    # repro: allow[CACHE-01] per is the host-side period loop index; inactive slots were select-masked above
                     lambda a, n: a.at[per].set(n), full, nc)
             if self.model.fkinds[pos] == "moe":
                 x, _ = B.moe_apply(x, pp["ffn"], cfg, None, capacity_mult=4.0)

@@ -216,6 +216,7 @@ class Scheduler:
         behind it.
         """
         def reject(reason: str, msg: str):
+            # repro: allow[LIFE-01] rejection happens at the admission boundary: no slot, no blocks, nothing to scrub or release
             req.state = REJECTED
             raise Rejected(reason, f"request {req.rid}: {msg}")
 
@@ -356,6 +357,7 @@ class Scheduler:
 
     def finish(self, req: Request, now: float) -> None:
         req.finish_time = now
+        # repro: allow[LIFE-01] finish IS the sanctioned success exit (evict_terminal refuses FINISHED); it releases blocks below
         req.state = FINISHED
         self.alloc.release(req.blocks)
         req.blocks = []

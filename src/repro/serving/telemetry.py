@@ -58,9 +58,11 @@ import time
 from collections import Counter, deque
 from typing import Any, Dict, List, Optional, Tuple
 
-import numpy as np
-
 from repro.core.perfscope import Timer
+# shared with Engine.stats(): both report percentiles through ONE
+# definition (core/stats.py) so histogram snapshots and SLO stats can
+# never drift on empty/singleton edge cases (pinned by tests)
+from repro.core.stats import percentile as _pctl
 
 __all__ = ["Telemetry", "MetricsRegistry", "SCHEMA_VERSION"]
 
@@ -117,14 +119,6 @@ class _PhaseCtx:
             cur["phases"][self.name] += dt
         self.rec.append(dt)
         return False
-
-
-def _pctl(samples: List[float], p: float) -> float:
-    if not samples:
-        return 0.0
-    if len(samples) == 1:
-        return float(samples[0])
-    return float(np.percentile(samples, p))
 
 
 class MetricsRegistry:

@@ -1,0 +1,19 @@
+# Bad twin for JIT-01: host syncs inside a jit-traced step body.
+# Parsed by the linter only — never imported or executed.
+import jax.numpy as jnp
+import numpy as np
+
+
+class Engine:
+    def _fused_step_impl(self, params, kv_state, tokens, lengths):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        loss = float(tokens.sum())            # JIT-01: float() on traced
+        probe = np.asarray(lengths)           # JIT-01: host materialize
+        print("step", probe)                  # JIT-01: print in trace
+        kv_state["k"].block_until_ready()     # JIT-01: explicit fence
+        return loss, int(x.argmax().item())   # JIT-01: .item()
+
+    def _make_stack_body(self, *, positions, attn_read, ssm_step):
+        def body(x, xs):
+            return x + float(xs.mean()), None  # JIT-01 in nested body
+        return body

@@ -1,0 +1,16 @@
+# Bad twin for JIT-02: jitting over the donated state pytrees without
+# donate_argnums copies the whole cache every step.
+import jax
+
+
+class Engine:
+    def __init__(self):
+        self._fused_step = jax.jit(self._fused_step_impl)      # JIT-02
+        self._chunk_step = jax.jit(self._chunk_step_impl,
+                                   static_argnums=(3,))        # JIT-02
+
+    def _fused_step_impl(self, params, kv_state, ssm_states, tokens):
+        return params, kv_state, ssm_states, tokens
+
+    def _chunk_step_impl(self, params, kv_state, ssm_states, tokens):
+        return params, kv_state, ssm_states, tokens

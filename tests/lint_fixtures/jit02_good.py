@@ -1,0 +1,23 @@
+# Good twin for JIT-02: state pytrees donated; jit over stateless
+# functions needs no donation.
+import jax
+
+
+class Engine:
+    def __init__(self):
+        self._fused_step = jax.jit(self._fused_step_impl,
+                                   donate_argnums=(1, 2))
+        self._chunk_step = jax.jit(self._chunk_step_impl,
+                                   donate_argnames=("kv_state",
+                                                    "ssm_states"))
+        self._prefill_fwd = jax.jit(self._prefill_fwd_impl)
+
+    def _fused_step_impl(self, params, kv_state, ssm_states, tokens):
+        return params, kv_state, ssm_states, tokens
+
+    def _chunk_step_impl(self, params, kv_state, ssm_states, tokens):
+        return params, kv_state, ssm_states, tokens
+
+    def _prefill_fwd_impl(self, params, toks):
+        # no donated state pytree in the signature: donation optional
+        return params, toks

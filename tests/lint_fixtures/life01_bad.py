@@ -1,0 +1,14 @@
+# Bad twin for LIFE-01: terminal Request states assigned outside
+# Scheduler.evict_terminal — skips the scrub->release eviction path.
+FINISHED = "finished"
+TIMED_OUT = "timed_out"
+
+
+class Engine:
+    def sweep_deadlines(self, req, now):
+        if req.deadline_s and now - req.arrival >= req.deadline_s:
+            req.state = TIMED_OUT            # LIFE-01: bypasses eviction
+            self.running[req.slot] = None    # ...and leaks its blocks
+
+    def finish_inline(self, req):
+        req.state = "finished"               # LIFE-01: string form too

@@ -1,0 +1,28 @@
+# Good twin for LIFE-01: terminal transitions route through
+# Scheduler.evict_terminal; non-terminal assignments are unrestricted.
+FINISHED = "finished"
+RUNNING = "running"
+WAITING = "waiting"
+TERMINAL_STATES = frozenset({FINISHED, "timed_out"})
+
+
+class Scheduler:
+    def evict_terminal(self, req, state, now):
+        if state not in TERMINAL_STATES:
+            raise ValueError(state)
+        self.alloc.release(req.blocks)
+        req.blocks = []
+        if state == FINISHED:
+            req.state = FINISHED             # allowed: inside the path
+        else:
+            req.state = state
+        req.finish_time = now
+
+
+class Engine:
+    def sweep_deadlines(self, req, now):
+        if req.deadline_s and now - req.arrival >= req.deadline_s:
+            self.sched.evict_terminal(req, "timed_out", now)
+
+    def resume(self, req):
+        req.state = RUNNING                  # non-terminal: fine

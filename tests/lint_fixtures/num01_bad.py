@@ -1,0 +1,17 @@
+# Bad twin for NUM-01: division by a constant inside quant/encode paths
+# (the PR 5 one-ulp trap: XLA folds x / CONST into a reciprocal multiply
+# fusion-dependently, splitting scale bits across compilations).
+import jax.numpy as jnp
+import numpy as np
+
+
+def quant_encode(x):
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0        # NUM-01
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _o8_encode(flat):
+    s = jnp.max(jnp.abs(flat), axis=-1) / np.float32(127.0)   # NUM-01
+    return flat / s[:, None], s

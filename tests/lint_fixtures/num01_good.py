@@ -1,0 +1,17 @@
+# Good twin for NUM-01: reciprocal-multiply scales (the const/const
+# reciprocal itself folds on the host and is fine), division by arrays,
+# and constant division OUTSIDE quant/encode paths.
+import jax.numpy as jnp
+import numpy as np
+
+
+def quant_encode(x):
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) * np.float32(1.0 / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def roofline_intensity(flops, bytes_moved):
+    # not a quant/encode path: plain constant division is fine here
+    return flops / bytes_moved / 2.0

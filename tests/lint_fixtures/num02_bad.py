@@ -1,0 +1,13 @@
+# Bad twin for NUM-02: a value chain rounded to bf16 twice with no f32
+# upcast in between (the accumulate-once violation).
+import jax.numpy as jnp
+
+
+def dense_chain(x, w1, w2, residual):
+    out = ((x @ w1).astype(jnp.bfloat16) @ w2
+           + residual).astype(jnp.bfloat16)              # NUM-02
+    return out
+
+
+def method_chain(x):
+    return x.astype(jnp.bfloat16).reshape(-1).astype("bfloat16")  # NUM-02

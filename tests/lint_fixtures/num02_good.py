@@ -1,0 +1,20 @@
+# Good twin for NUM-02: accumulate in f32, round once at the end; an
+# explicit f32 upcast between low casts re-legitimizes the chain, and
+# casts through opaque function calls are not guessed at.
+import jax.numpy as jnp
+
+
+def dense_chain(x, w1, w2, residual):
+    h = (x @ w1).astype(jnp.float32)
+    out = (h @ w2 + residual).astype(jnp.bfloat16)       # rounded ONCE
+    return out
+
+
+def upcast_between(x, y):
+    a = x.astype(jnp.bfloat16)
+    return (a.astype(jnp.float32) + y).astype(jnp.bfloat16)
+
+
+def through_call(attn_read, q, kv):
+    # attn_read may accumulate in f32 internally; not flagged
+    return attn_read(q.astype(jnp.bfloat16), kv).astype(jnp.bfloat16)

@@ -1,0 +1,21 @@
+# Bad twin for PAL-01: pallas_call sites that skip or hardcode the
+# backend interpret decision.
+import functools
+
+from jax.experimental import pallas as pl
+
+
+def rmsnorm(x, w, eps, kernel):
+    out = pl.pallas_call(                                # PAL-01: missing
+        functools.partial(kernel, eps=eps),
+        grid=(x.shape[0],),
+    )(x, w)
+    return out
+
+
+def qmm(x, w_q, scale, kernel):
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        interpret=True,                                  # PAL-01: hardcoded
+    )(x, w_q, scale)

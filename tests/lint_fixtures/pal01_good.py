@@ -1,0 +1,17 @@
+# Good twin for PAL-01: interpret= resolved through the shared backend
+# dispatch helper (directly, or via an entry-point-resolved variable).
+import functools
+
+from jax.experimental import pallas as pl
+
+from repro.kernels._interpret import resolve_interpret as _default_interpret
+
+
+def rmsnorm(x, w, eps, kernel, interpret=None):
+    interpret = _default_interpret(interpret)
+    out = pl.pallas_call(
+        functools.partial(kernel, eps=eps),
+        grid=(x.shape[0],),
+        interpret=interpret,
+    )(x, w)
+    return out

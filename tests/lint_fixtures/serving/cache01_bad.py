@@ -1,0 +1,11 @@
+# Bad twin for CACHE-01 (path mirrors serving/ so the scope gate sees a
+# serving module): scatters through block-table indices without
+# mode="drop" — the null-write sentinel clamps into the last live block.
+import jax.numpy as jnp
+
+
+def write_token(state, enc, block_ids, offsets):
+    out = dict(state)
+    out["k"] = state["k"].at[block_ids, offsets].set(enc["k"])  # CACHE-01
+    out["v"] = state["v"].at[block_ids, offsets].add(enc["v"])  # CACHE-01
+    return out

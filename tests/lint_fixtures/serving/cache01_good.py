@@ -1,0 +1,12 @@
+# Good twin for CACHE-01: every serving scatter drops out-of-range
+# indices, so the null-write sentinel (block id == n_blocks) is inert.
+import jax.numpy as jnp
+
+
+def write_token(state, enc, block_ids, offsets):
+    out = dict(state)
+    out["k"] = state["k"].at[block_ids, offsets].set(enc["k"],
+                                                     mode="drop")
+    out["v"] = state["v"].at[block_ids, offsets].add(enc["v"],
+                                                     mode="drop")
+    return out

@@ -1,0 +1,15 @@
+# Waiver-machinery fixture: three LIFE-01 violations —
+#   line A: suppressed by a trailing waiver with a reason,
+#   line B: suppressed by a standalone waiver on the line above,
+#   line C: waiver WITHOUT a justification -> must NOT suppress.
+FINISHED = "finished"
+CANCELLED = "cancelled"
+FAILED = "failed"
+
+
+class Engine:
+    def exits(self, req):
+        req.state = FINISHED  # repro: allow[LIFE-01] fixture: trailing waiver form
+        # repro: allow[LIFE-01] fixture: standalone waiver form
+        req.state = CANCELLED
+        req.state = FAILED  # repro: allow[LIFE-01]

@@ -1,0 +1,261 @@
+"""Tests for repro.analysis — the repo-specific invariant linter.
+
+Three layers:
+
+  * per-rule fixture pairs: every shipped rule fires on its seeded bad
+    twin (at the expected count) and stays silent on the good twin;
+  * engine machinery: waivers (trailing / standalone / reason-less),
+    baseline matching + staleness, fixture-dir skipping, CLI exit codes;
+  * the mutation meta-test the issue demands: re-introduce two known
+    historical bugs (divide-by-127 in cache.quant_encode, a dropped
+    mode="drop" scatter) into a copy of the REAL serving/cache.py and
+    assert the pass flags exactly those regressions — proof the rules
+    bind to the real code, not only to hand-built fixtures;
+
+plus the dedup regression test for the shared percentile helper.
+"""
+import json
+import re
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import ALL_RULES, rules_by_id, run_check
+from repro.analysis.core import parse_waivers
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "lint_fixtures"
+SRC = REPO / "src"
+
+
+def check(*paths, baseline=None):
+    return run_check(ALL_RULES, [str(p) for p in paths], root=REPO,
+                     baseline=baseline)
+
+
+def rule_ids(report):
+    return [f.rule_id for f in report.active]
+
+
+# ---------------------------------------------------------------------------
+# Rule catalogue sanity
+# ---------------------------------------------------------------------------
+
+EXPECTED_RULES = {"JIT-01", "JIT-02", "NUM-01", "NUM-02", "PAL-01",
+                  "CACHE-01", "HOST-01", "LIFE-01"}
+
+
+def test_registry_ships_the_documented_rules():
+    assert set(rules_by_id()) == EXPECTED_RULES
+    for r in ALL_RULES:
+        assert r.title and r.rationale and r.node_types
+
+
+# ---------------------------------------------------------------------------
+# Paired good/bad fixtures, one pair per rule
+# ---------------------------------------------------------------------------
+
+PAIRS = [
+    # (rule id, bad fixture, expected count, good fixture)
+    ("JIT-01", "jit01_bad.py", 6, "jit01_good.py"),
+    ("JIT-02", "jit02_bad.py", 2, "jit02_good.py"),
+    ("NUM-01", "num01_bad.py", 2, "num01_good.py"),
+    ("NUM-02", "num02_bad.py", 2, "num02_good.py"),
+    ("PAL-01", "pal01_bad.py", 2, "pal01_good.py"),
+    ("CACHE-01", "serving/cache01_bad.py", 2, "serving/cache01_good.py"),
+    ("HOST-01", "host01_bad/serving/scheduler.pytxt", 3,
+     "host01_good/serving/scheduler.pytxt"),
+    ("LIFE-01", "life01_bad.py", 2, "life01_good.py"),
+]
+
+
+@pytest.mark.parametrize("rule_id,bad,n,good", PAIRS,
+                         ids=[p[0] for p in PAIRS])
+def test_rule_fires_on_bad_twin_and_not_on_good(rule_id, bad, n, good):
+    bad_report = check(FIXTURES / bad)
+    assert rule_ids(bad_report) == [rule_id] * n, \
+        f"bad twin: {[f.format() for f in bad_report.active]}"
+    good_report = check(FIXTURES / good)
+    assert good_report.active == [], \
+        f"good twin: {[f.format() for f in good_report.active]}"
+    # findings carry a clickable location and a fingerprintable line
+    for f in bad_report.active:
+        assert f.line > 0 and f.line_text
+        assert re.match(r"\S+:\d+: [A-Z]+-\d+ ", f.format())
+
+
+def test_fixture_dirs_are_skipped_by_directory_walks():
+    # `check tests` must stay green even though lint_fixtures/ is full of
+    # deliberately-bad code: directory walks skip it, explicit file
+    # paths (the tests above) still lint it.
+    report = check(REPO / "tests")
+    assert report.active == [], [f.format() for f in report.active]
+    assert not any("lint_fixtures" in f.path
+                   for f in report.active + report.baselined)
+
+
+# ---------------------------------------------------------------------------
+# Waivers
+# ---------------------------------------------------------------------------
+
+
+def test_waiver_forms_and_mandatory_justification():
+    report = check(FIXTURES / "waivers.py")
+    # trailing + standalone suppress; the reason-less one does not
+    assert len(report.waived) == 2
+    assert [f.rule_id for f, _ in report.waived] == ["LIFE-01", "LIFE-01"]
+    assert len(report.active) == 1
+    assert "FAILED" in report.active[0].message
+
+
+def test_waiver_parser_targets():
+    lines = [
+        "x = 1  # repro: allow[R-1] trailing",
+        "# repro: allow[R-2] standalone",
+        "# repro: allow[R-3] stacked",
+        "y = 2",
+        "# repro: allow[R-4]",   # reason-less
+        "z = 3",
+    ]
+    ws = {w.rule_id: w for w in parse_waivers(lines)}
+    assert ws["R-1"].target == 1
+    assert ws["R-2"].target == 4 and ws["R-3"].target == 4
+    assert not ws["R-4"].valid
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_suppresses_by_line_text_and_reports_stale():
+    bad = FIXTURES / "num01_bad.py"
+    report = check(bad)
+    entries = [{"rule": f.rule_id, "file": f.path,
+                "line_text": f.line_text, "note": "grandfathered"}
+               for f in report.active]
+    stale = {"rule": "NUM-01", "file": report.active[0].path,
+             "line_text": "this line no longer exists", "note": ""}
+    report2 = check(bad, baseline=entries + [stale])
+    assert report2.active == []
+    assert len(report2.baselined) == len(entries)
+    assert report2.stale_baseline == [stale]
+
+
+def test_committed_baseline_entries_all_carry_notes():
+    data = json.loads((REPO / "analysis-baseline.json").read_text())
+    assert data["version"] == 1
+    assert data["findings"], "baseline exists to grandfather findings"
+    for e in data["findings"]:
+        assert e["note"].strip(), f"baseline entry without a note: {e}"
+
+
+# ---------------------------------------------------------------------------
+# The full-repo contract + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_full_repo_lint_is_green_via_cli():
+    """`python -m repro.analysis check src tests benchmarks` exits 0 —
+    the acceptance-criteria run, exactly as CI invokes it."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "check",
+         "src", "tests", "benchmarks"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 active findings" in proc.stdout
+
+
+def test_cli_exits_nonzero_on_findings():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "check", "--no-baseline",
+         str(FIXTURES / "life01_bad.py")],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 1
+    assert "LIFE-01" in proc.stdout
+
+
+def test_cli_rules_catalogue():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "rules"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0
+    for rid in EXPECTED_RULES:
+        assert rid in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Mutation meta-test: the linter must catch the HISTORICAL bugs when they
+# are re-introduced into the real source, not just hand-built fixtures.
+# ---------------------------------------------------------------------------
+
+
+def _mutate(src_text: str, old: str, new: str) -> str:
+    assert old in src_text, f"mutation anchor vanished: {old!r}"
+    return src_text.replace(old, new, 1)
+
+
+def test_mutation_meta_reintroduced_historical_bugs_are_flagged(tmp_path):
+    cache_src = (SRC / "repro" / "serving" / "cache.py").read_text()
+    # Bug 1 (PR 5): quant scale computed as a divide-by-127 — the one-ulp
+    # eager-vs-jit scale skew that split greedy tokens.
+    mutated = _mutate(
+        cache_src,
+        "scale = jnp.maximum(amax, 1e-6) * np.float32(1.0 / 127.0)",
+        "scale = jnp.maximum(amax, 1e-6) / 127.0")
+    # Bug 2 (PR 1 class): drop the null-write protection from the
+    # write_prefill scatter — inactive/padded writes clamp into live KV.
+    mutated = _mutate(
+        mutated,
+        'out["k"] = state["k"].at[:, ids].set(kq.astype(state["k"].dtype),\n'
+        '                                         mode="drop")',
+        'out["k"] = state["k"].at[:, ids].set(kq.astype(state["k"].dtype))')
+    # mirror the real path so serving-scoped rules apply to the copy
+    target = tmp_path / "serving" / "cache.py"
+    target.parent.mkdir()
+    target.write_text(mutated)
+
+    report = run_check(ALL_RULES, [str(target)], root=tmp_path)
+    got = sorted(rule_ids(report))
+    assert got == ["CACHE-01", "NUM-01"], \
+        [f.format() for f in report.active]
+
+    # and the unmutated copy is clean: the two findings above are the
+    # mutations, not pre-existing noise in cache.py
+    clean = tmp_path / "serving" / "cache_clean.py"
+    clean.write_text(cache_src)
+    assert run_check(ALL_RULES, [str(clean)], root=tmp_path).active == []
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the percentile helper is defined ONCE and shared
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_helper_is_shared_not_duplicated():
+    from repro.core import stats
+    from repro.serving import engine, telemetry
+
+    assert engine._pct is stats.percentile
+    assert telemetry._pctl is stats.percentile
+    # and neither module re-defines a private percentile anymore
+    for mod in ("engine", "telemetry"):
+        text = (SRC / "repro" / "serving" / f"{mod}.py").read_text()
+        assert "np.percentile" not in text, \
+            f"{mod}.py grew a private percentile again"
+
+
+def test_percentile_edge_cases():
+    from repro.core.stats import percentile
+
+    assert percentile([], 99) == 0.0
+    assert percentile([None, None], 50) == 0.0
+    assert percentile([7.0], 99) == 7.0
+    assert percentile([None, 7.0], 1) == 7.0
+    assert percentile([1.0, 2.0, 3.0], 50) == 2.0

@@ -1,0 +1,43 @@
+"""Direct unit coverage for kernels/_interpret.py — the single backend
+dispatch point PAL-01 (repro.analysis) forces every pallas_call through.
+
+The contract: compiled kernels on TPU (``default_interpret() -> False``),
+interpret mode everywhere else; ``resolve_interpret`` honors an explicit
+caller override in both directions and only consults the backend for
+``None``. These tests pin the dispatch by monkeypatching
+``jax.default_backend`` so they run identically on any host.
+"""
+import jax
+import pytest
+
+from repro.kernels._interpret import default_interpret, resolve_interpret
+
+
+@pytest.mark.parametrize("backend,expect", [
+    ("tpu", False),     # real hardware: compiled Mosaic, never interpret
+    ("cpu", True),      # CI / laptops: Python-interpreted kernel bodies
+    ("gpu", True),      # no Mosaic target: interpret
+    ("METAL", True),    # unknown/exotic backends fail safe to interpret
+])
+def test_default_interpret_backend_dispatch(monkeypatch, backend, expect):
+    monkeypatch.setattr(jax, "default_backend", lambda: backend)
+    assert default_interpret() is expect
+
+
+@pytest.mark.parametrize("backend", ["tpu", "cpu"])
+def test_resolve_interpret_explicit_override_wins(monkeypatch, backend):
+    monkeypatch.setattr(jax, "default_backend", lambda: backend)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+def test_resolve_interpret_none_consults_backend(monkeypatch):
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert resolve_interpret(None) is False
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert resolve_interpret(None) is True
+
+
+def test_current_host_matches_contract():
+    # whatever this host is, the helper must agree with the real backend
+    assert default_interpret() is (jax.default_backend() != "tpu")
