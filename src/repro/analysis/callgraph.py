@@ -1,0 +1,266 @@
+"""Project-wide call graph over every parsed file of a check run.
+
+The flow rules (``rules/flow.py``) need to answer "which functions can a
+jit-traced step body reach, and with which arguments?" — a question the
+per-file engine structurally cannot. This module builds, once per run
+(memoized in ``ProjectContext.cache``), an index of every function and
+method with a stable qualified name, plus the resolution machinery the
+repo's real call shapes require:
+
+  * plain calls — ``helper(x)`` — resolved against the enclosing
+    function's nested defs, the module's top level, and ``from m import
+    f`` name imports;
+  * ``self.``/``cls.`` method calls resolved against the enclosing
+    class (same file);
+  * module-alias attribute calls — ``from repro.models import blocks as
+    B`` then ``B.ssm_apply(...)`` — resolved through the import table to
+    the target module's top level;
+  * the closure-factory seam — ``body = self._make_stack_body(...)``
+    followed by ``jax.lax.scan(body, ...)`` — resolved by noting which
+    nested def a factory *returns* and binding the assigned name to it.
+
+Deliberate blind spots (documented in docs/static_analysis.md): dynamic
+dispatch through ``getattr``/dicts-of-functions, attribute calls on
+arbitrary objects (``model._embed_in`` where ``model`` is a runtime
+value), decorators that rebind, and star-imports. Resolution returning
+``None`` makes the dataflow layer fall back to a conservative
+taint-propagating approximation rather than silently losing taint.
+
+Stdlib-only, like the rest of the engine.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.core import FileContext, ProjectContext
+from repro.analysis.rules.jit import attr_chain, is_traced_fn_name, param_names
+
+__all__ = ["FunctionNode", "CallGraph", "get_callgraph", "module_name_of"]
+
+
+def module_name_of(relpath: str) -> str:
+    """'src/repro/serving/engine.py' -> 'repro.serving.engine'."""
+    p = relpath
+    if p.endswith(".py"):
+        p = p[:-3]
+    parts = [s for s in p.split("/") if s]
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+@dataclasses.dataclass
+class FunctionNode:
+    """One function/method/nested def, addressable project-wide."""
+
+    qname: str                    # "<relpath>::Class.method" or "::f.<locals>.g"
+    name: str
+    relpath: str
+    ctx: FileContext
+    node: ast.AST                 # FunctionDef | AsyncFunctionDef
+    class_name: Optional[str] = None
+    parent_qname: Optional[str] = None   # enclosing function, if nested
+    params: List[str] = dataclasses.field(default_factory=list)
+    returned_closures: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def is_traced_root(self) -> bool:
+        return is_traced_fn_name(self.name)
+
+
+class _FileIndex:
+    """Per-file name tables: top-level defs, class methods, imports."""
+
+    def __init__(self) -> None:
+        self.top_level: Dict[str, str] = {}            # name -> qname
+        self.classes: Dict[str, Dict[str, str]] = {}   # class -> {method: qname}
+        self.module_aliases: Dict[str, str] = {}       # alias -> module name
+        self.name_imports: Dict[str, Tuple[str, str]] = {}  # alias -> (module, name)
+
+
+class CallGraph:
+    def __init__(self, project: ProjectContext):
+        self.project = project
+        self.functions: Dict[str, FunctionNode] = {}
+        self._files: Dict[str, _FileIndex] = {}
+        self._module_map: Dict[str, str] = {}          # module name -> relpath
+        self._children: Dict[str, Dict[str, str]] = {}  # fn qname -> {name: qname}
+        self._factory_cache: Dict[str, Dict[str, str]] = {}
+        for rel, ctx in project.contexts.items():
+            self._index_file(rel, ctx)
+
+    # ------------------------------------------------------------------
+    # Indexing
+    # ------------------------------------------------------------------
+    def _index_file(self, rel: str, ctx: FileContext) -> None:
+        fi = _FileIndex()
+        self._files[rel] = fi
+        self._module_map[module_name_of(rel)] = rel
+
+        for stmt in ctx.tree.body:
+            if isinstance(stmt, ast.Import):
+                for a in stmt.names:
+                    fi.module_aliases[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(stmt, ast.ImportFrom) and stmt.module and not stmt.level:
+                for a in stmt.names:
+                    if a.name == "*":
+                        continue
+                    # `from repro.models import blocks as B` may name a
+                    # module; `from x import f` names a function/class.
+                    fi.name_imports[a.asname or a.name] = (stmt.module, a.name)
+
+        def walk(body, scope: List[str], class_name: Optional[str],
+                 parent_q: Optional[str]) -> None:
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    dotted = ".".join(scope + [stmt.name]) if scope else stmt.name
+                    q = f"{rel}::{dotted}"
+                    fn = FunctionNode(
+                        qname=q, name=stmt.name, relpath=rel, ctx=ctx,
+                        node=stmt, class_name=class_name,
+                        parent_qname=parent_q, params=param_names(stmt))
+                    self.functions[q] = fn
+                    if parent_q is not None:
+                        self._children.setdefault(parent_q, {})[stmt.name] = q
+                    elif class_name is not None:
+                        fi.classes.setdefault(class_name, {})[stmt.name] = q
+                    else:
+                        fi.top_level[stmt.name] = q
+                    walk(stmt.body, scope + [stmt.name, "<locals>"],
+                         class_name, q)
+                    self._note_returned_closures(fn)
+                elif isinstance(stmt, ast.ClassDef):
+                    walk(stmt.body, scope + [stmt.name], stmt.name, None)
+
+        walk(ctx.tree.body, [], None, None)
+
+    def _note_returned_closures(self, fn: FunctionNode) -> None:
+        """Record nested defs that ``fn`` returns (the factory seam)."""
+        children = self._children.get(fn.qname, {})
+        if not children:
+            return
+        for sub in ast.walk(fn.node):
+            if not isinstance(sub, ast.Return) or sub.value is None:
+                continue
+            # a Return belongs to fn only if fn is its innermost def
+            owner = None
+            for p in fn.ctx.parents(sub):
+                if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    owner = p
+                    break
+            if owner is not fn.node:
+                continue
+            if isinstance(sub.value, ast.Name) and sub.value.id in children:
+                q = children[sub.value.id]
+                if q not in fn.returned_closures:
+                    fn.returned_closures.append(q)
+
+    # ------------------------------------------------------------------
+    # Queries
+    # ------------------------------------------------------------------
+    def traced_roots(self) -> List[FunctionNode]:
+        return [f for f in self.functions.values() if f.is_traced_root]
+
+    def in_traced_scope(self, fn: FunctionNode) -> bool:
+        """True if fn or any enclosing function is a traced root."""
+        cur: Optional[FunctionNode] = fn
+        while cur is not None:
+            if cur.is_traced_root:
+                return True
+            cur = (self.functions.get(cur.parent_qname)
+                   if cur.parent_qname else None)
+        return False
+
+    def scope_chain(self, fn: FunctionNode) -> Iterator[FunctionNode]:
+        cur: Optional[FunctionNode] = fn
+        while cur is not None:
+            yield cur
+            cur = (self.functions.get(cur.parent_qname)
+                   if cur.parent_qname else None)
+
+    def children_of(self, fn: FunctionNode) -> Dict[str, str]:
+        return self._children.get(fn.qname, {})
+
+    def _factory_bindings(self, fn: FunctionNode) -> Dict[str, str]:
+        """name -> qname of the closure a factory call bound to it,
+        e.g. ``body = self._make_stack_body(...)``."""
+        memo = self._factory_cache.get(fn.qname)
+        if memo is not None:
+            return memo
+        out: Dict[str, str] = {}
+        self._factory_cache[fn.qname] = out  # set first: recursion guard
+        for sub in ast.walk(fn.node):
+            if not (isinstance(sub, ast.Assign) and len(sub.targets) == 1
+                    and isinstance(sub.targets[0], ast.Name)
+                    and isinstance(sub.value, ast.Call)):
+                continue
+            callee = self.resolve_call(sub.value, fn, use_factories=False)
+            if callee is not None and callee.returned_closures:
+                out[sub.targets[0].id] = callee.returned_closures[0]
+        return out
+
+    def _module_top_level(self, module: str, name: str
+                          ) -> Optional[FunctionNode]:
+        rel = self._module_map.get(module)
+        if rel is None:
+            return None
+        q = self._files[rel].top_level.get(name)
+        return self.functions.get(q) if q else None
+
+    def resolve_name(self, name: str, caller: FunctionNode,
+                     use_factories: bool = True) -> Optional[FunctionNode]:
+        """Resolve a bare function-valued name visible inside ``caller``:
+        nested defs, factory-bound closures, module top level, imports."""
+        for scope in self.scope_chain(caller):
+            q = self._children.get(scope.qname, {}).get(name)
+            if q:
+                return self.functions.get(q)
+            if use_factories:
+                q = self._factory_bindings(scope).get(name)
+                if q:
+                    return self.functions.get(q)
+        fi = self._files[caller.relpath]
+        q = fi.top_level.get(name)
+        if q:
+            return self.functions.get(q)
+        imp = fi.name_imports.get(name)
+        if imp:
+            return self._module_top_level(imp[0], imp[1])
+        return None
+
+    def resolve_call(self, call: ast.Call, caller: FunctionNode,
+                     use_factories: bool = True) -> Optional[FunctionNode]:
+        func = call.func
+        if isinstance(func, ast.Name):
+            return self.resolve_name(func.id, caller, use_factories)
+        if isinstance(func, ast.Attribute):
+            chain = attr_chain(func)
+            parts = chain.split(".") if chain else []
+            if len(parts) == 2:
+                base, meth = parts
+                if base in ("self", "cls") and caller.class_name:
+                    q = (self._files[caller.relpath].classes
+                         .get(caller.class_name, {}).get(meth))
+                    if q:
+                        return self.functions.get(q)
+                    return None
+                fi = self._files[caller.relpath]
+                mod = fi.module_aliases.get(base)
+                if mod is None:
+                    imp = fi.name_imports.get(base)
+                    # `from repro.models import blocks as B`: the imported
+                    # *name* is itself a module in the project
+                    if imp is not None:
+                        mod = f"{imp[0]}.{imp[1]}"
+                if mod is not None:
+                    return self._module_top_level(mod, meth)
+        return None
+
+
+def get_callgraph(project: ProjectContext) -> CallGraph:
+    """The run's call graph — built once, shared by every flow rule."""
+    return project.memo("callgraph", lambda: CallGraph(project))

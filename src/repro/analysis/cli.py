@@ -1,34 +1,47 @@
 """CLI for the invariant linter.
 
     python -m repro.analysis check src tests benchmarks
-    python -m repro.analysis check --update-baseline src tests benchmarks
+    python -m repro.analysis check --format sarif --output out.sarif src
+    python -m repro.analysis baseline --update src tests benchmarks
     python -m repro.analysis rules
 
 ``check`` exits 0 iff every finding is either inline-waived
 (``# repro: allow[RULE-ID] <why>``) or grandfathered in the committed
 baseline (``analysis-baseline.json`` at the repo root / cwd). Waived and
 baselined findings are still printed in the summary — suppression is
-visible, never silent — and stale baseline entries (the offending line
-changed or disappeared) are reported so the baseline only ever shrinks.
+visible, never silent — and they keep distinct severities in every
+machine-readable format so downstream tooling can tell an error from a
+justified suppression. Stale baseline entries (the offending line
+changed or disappeared) FAIL the run: the baseline is a ratchet and may
+only ever shrink; run ``baseline --update`` to drop them.
+
+``baseline --update`` rewrites the baseline from the current findings
+but refuses to grandfather dataflow-rule findings (JIT-03/04/05,
+LEAK-01): those rules ship at zero debt, so new violations must be
+fixed or inline-waived with a justification, never baselined.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
-from typing import List, Optional
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
-from repro.analysis.core import load_baseline, run_check, save_baseline
+from repro.analysis.core import (Finding, Report, load_baseline, run_check,
+                                 save_baseline)
 from repro.analysis.rules import ALL_RULES
 
 DEFAULT_BASELINE = "analysis-baseline.json"
+FORMATS = ("text", "github", "sarif", "json")
 
 
 def _build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Repo-specific invariant linter (jit/trace, "
-                    "numerics, serving-lifecycle disciplines).")
+                    "numerics, serving-lifecycle disciplines) with "
+                    "interprocedural dataflow rules.")
     sub = p.add_subparsers(dest="command", required=True)
 
     chk = sub.add_parser("check", help="lint files/directories")
@@ -41,11 +54,32 @@ def _build_parser() -> argparse.ArgumentParser:
     chk.add_argument("--no-baseline", action="store_true",
                      help="ignore any baseline: report grandfathered "
                           "findings as active")
-    chk.add_argument("--update-baseline", action="store_true",
-                     help="rewrite the baseline from the current active+"
-                          "baselined findings (keeps existing notes)")
+    chk.add_argument("--format", choices=FORMATS, default="text",
+                     help="output format (default: text; sarif/json emit "
+                          "a document on stdout and the summary on "
+                          "stderr; github emits workflow-command "
+                          "annotations)")
+    chk.add_argument("--output", default=None, metavar="PATH",
+                     help="write the formatted document to PATH instead "
+                          "of stdout")
+    chk.add_argument("--sarif", default=None, metavar="PATH",
+                     help="additionally write a SARIF 2.1.0 report to "
+                          "PATH (independent of --format)")
     chk.add_argument("-q", "--quiet", action="store_true",
                      help="print only active findings and the verdict")
+
+    base = sub.add_parser(
+        "baseline",
+        help="manage the grandfathered-findings baseline (ratchet)")
+    base.add_argument("paths", nargs="+",
+                      help="files or directories to lint when rebuilding")
+    base.add_argument("--baseline", default=None,
+                      help=f"baseline JSON to rewrite (default: "
+                           f"./{DEFAULT_BASELINE})")
+    base.add_argument("--update", action="store_true",
+                      help="rewrite the baseline from current findings "
+                           "(keeps existing notes; refuses dataflow-rule "
+                           "entries — those rules carry zero debt)")
 
     sub.add_parser("rules", help="print the rule catalogue")
     return p
@@ -53,64 +87,263 @@ def _build_parser() -> argparse.ArgumentParser:
 
 def _cmd_rules() -> int:
     for r in ALL_RULES:
-        print(f"{r.rule_id:9s} {r.title}")
+        scope = "project" if r.project_scope else "file"
+        print(f"{r.rule_id:9s} {r.title}  [{scope}-scope]")
         print(f"          {r.rationale}")
     return 0
 
 
+# ---------------------------------------------------------------------------
+# Output formats
+# ---------------------------------------------------------------------------
+
+# (finding, severity, waiver_reason) — severity is one of
+# "active" | "waived" | "baselined"; the distinction survives into every
+# machine-readable format.
+Record = Tuple[Finding, str, Optional[str]]
+
+
+def _records(report: Report) -> List[Record]:
+    recs: List[Record] = []
+    for f in report.parse_errors:
+        recs.append((f, "active", None))
+    for f in report.active:
+        recs.append((f, "active", None))
+    for f, w in report.waived:
+        recs.append((f, "waived", w.reason))
+    for f in report.baselined:
+        recs.append((f, "baselined", None))
+    return recs
+
+
+def _summary_line(report: Report) -> str:
+    n = len(report.active) + len(report.parse_errors)
+    return (f"repro.analysis: {report.files_checked} files, "
+            f"{n} active finding{'s' if n != 1 else ''} "
+            f"({len(report.waived)} waived, {len(report.baselined)} "
+            f"baselined, {len(report.stale_baseline)} stale baseline) "
+            f"in {report.elapsed_s:.2f}s")
+
+
+def _render_text(report: Report, quiet: bool) -> str:
+    lines: List[str] = []
+    for f in report.parse_errors:
+        lines.append(f.format())
+    for f in report.active:
+        lines.append(f.format())
+    if not quiet:
+        for f, w in report.waived:
+            lines.append(f"waived   {f.format()}  [{w.reason}]")
+        for f in report.baselined:
+            lines.append(f"baseline {f.format()}")
+    for e in report.stale_baseline:
+        lines.append(
+            f"stale baseline entry (fixed or moved — run "
+            f"`python -m repro.analysis baseline --update` to drop it): "
+            f"{e.get('rule')} {e.get('file')} {e.get('line_text', '')!r}")
+    lines.append(_summary_line(report))
+    return "\n".join(lines)
+
+
+def _render_github(report: Report, quiet: bool) -> str:
+    """GitHub Actions workflow commands: active findings annotate the PR
+    as errors; suppressions surface as notices so they stay visible."""
+    lines: List[str] = []
+    for f, severity, reason in _records(report):
+        cmd = "error" if severity == "active" else "notice"
+        msg = f"{f.rule_id} {f.message}"
+        if severity == "waived":
+            msg += f" [waived: {reason}]"
+        elif severity == "baselined":
+            msg += " [baselined]"
+        if quiet and severity != "active":
+            continue
+        # workflow-command messages are single-line; %0A is the escape
+        msg = msg.replace("%", "%25").replace("\n", "%0A")
+        lines.append(f"::{cmd} file={f.path},line={f.line},"
+                     f"title={f.rule_id}::{msg}")
+    for e in report.stale_baseline:
+        lines.append(f"::error file={e.get('file')},title=stale-baseline::"
+                     f"stale baseline entry for {e.get('rule')} — run "
+                     f"baseline --update")
+    lines.append(_summary_line(report))
+    return "\n".join(lines)
+
+
+def _rule_index() -> List[Dict[str, Any]]:
+    return [{"id": r.rule_id,
+             "shortDescription": {"text": r.title},
+             "fullDescription": {"text": r.rationale}}
+            for r in ALL_RULES]
+
+
+def _sarif_result(f: Finding, severity: str,
+                  reason: Optional[str]) -> Dict[str, Any]:
+    res: Dict[str, Any] = {
+        "ruleId": f.rule_id,
+        "level": "error" if severity == "active" else "note",
+        "message": {"text": f.message},
+        "locations": [{
+            "physicalLocation": {
+                "artifactLocation": {"uri": f.path},
+                "region": {"startLine": max(f.line, 1)},
+            },
+        }],
+        "properties": {"severity": severity},
+    }
+    if severity == "waived":
+        res["suppressions"] = [{"kind": "inSource",
+                                "justification": reason or ""}]
+    elif severity == "baselined":
+        res["suppressions"] = [{"kind": "external"}]
+    return res
+
+
+def _render_sarif(report: Report) -> str:
+    doc = {
+        "$schema": "https://json.schemastore.org/sarif-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro.analysis",
+                "informationUri":
+                    "https://example.invalid/repro-analysis",
+                "rules": _rule_index(),
+            }},
+            "results": [_sarif_result(f, sev, why)
+                        for f, sev, why in _records(report)],
+            "properties": {
+                "filesChecked": report.files_checked,
+                "elapsedSeconds": round(report.elapsed_s, 3),
+                "staleBaseline": len(report.stale_baseline),
+                "counters": dict(report.counters),
+            },
+        }],
+    }
+    return json.dumps(doc, indent=2) + "\n"
+
+
+def _render_json(report: Report) -> str:
+    findings = []
+    for f, severity, reason in _records(report):
+        e: Dict[str, Any] = {"rule": f.rule_id, "file": f.path,
+                             "line": f.line, "message": f.message,
+                             "line_text": f.line_text,
+                             "severity": severity}
+        if severity == "waived":
+            e["waiver_reason"] = reason or ""
+        findings.append(e)
+    doc = {
+        "version": 1,
+        "summary": {
+            "files_checked": report.files_checked,
+            "active": len(report.active) + len(report.parse_errors),
+            "waived": len(report.waived),
+            "baselined": len(report.baselined),
+            "stale_baseline": len(report.stale_baseline),
+            "elapsed_s": round(report.elapsed_s, 3),
+        },
+        "counters": dict(report.counters),
+        "findings": findings,
+        "stale_baseline": list(report.stale_baseline),
+    }
+    return json.dumps(doc, indent=2) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# Subcommands
+# ---------------------------------------------------------------------------
+
+
+def _load_baseline_arg(args: argparse.Namespace
+                       ) -> Tuple[Optional[Path], Optional[list], int]:
+    """Resolve (path, entries, error_code); error_code 0 means fine."""
+    if getattr(args, "no_baseline", False):
+        return None, None, 0
+    cand = Path(args.baseline) if args.baseline else Path(DEFAULT_BASELINE)
+    if cand.exists():
+        return cand, load_baseline(cand), 0
+    if args.baseline:
+        print(f"error: baseline {cand} not found", file=sys.stderr)
+        return None, None, 2
+    return None, None, 0
+
+
 def _cmd_check(args: argparse.Namespace) -> int:
-    baseline_path: Optional[Path] = None
-    baseline = None
-    if not args.no_baseline:
-        cand = Path(args.baseline) if args.baseline else Path(
-            DEFAULT_BASELINE)
-        if cand.exists():
-            baseline_path = cand
-            baseline = load_baseline(cand)
-        elif args.baseline:
-            print(f"error: baseline {cand} not found", file=sys.stderr)
-            return 2
+    _, baseline, err = _load_baseline_arg(args)
+    if err:
+        return err
 
     report = run_check(ALL_RULES, args.paths, baseline=baseline)
 
-    for f in report.parse_errors:
-        print(f.format())
-    for f in report.active:
-        print(f.format())
+    if args.format == "text":
+        body = _render_text(report, args.quiet)
+    elif args.format == "github":
+        body = _render_github(report, args.quiet)
+    elif args.format == "sarif":
+        body = _render_sarif(report)
+    else:
+        body = _render_json(report)
 
-    if args.update_baseline:
-        path = baseline_path or Path(args.baseline or DEFAULT_BASELINE)
-        notes = {}
-        for e in baseline or []:
-            notes[(e.get("rule", ""), e.get("file", ""),
-                   e.get("line_text", ""))] = e.get("note", "")
-        keep = report.active + report.baselined
-        save_baseline(path, keep, notes)
-        print(f"baseline: wrote {len(keep)} entr"
-              f"{'y' if len(keep) == 1 else 'ies'} to {path}")
-        return 0
+    document_format = args.format in ("sarif", "json")
+    if args.output:
+        Path(args.output).write_text(
+            body if body.endswith("\n") else body + "\n")
+    else:
+        sys.stdout.write(body if body.endswith("\n") else body + "\n")
+    if document_format or args.output:
+        # keep the human verdict visible without corrupting the document
+        print(_summary_line(report), file=sys.stderr)
 
-    if not args.quiet:
-        for f, w in report.waived:
-            print(f"waived   {f.format()}  [{w.reason}]")
-        for f in report.baselined:
-            print(f"baseline {f.format()}")
-        for e in report.stale_baseline:
-            print(f"stale baseline entry (fixed or moved — remove it): "
-                  f"{e.get('rule')} {e.get('file')} "
-                  f"{e.get('line_text', '')!r}")
+    if args.sarif:
+        Path(args.sarif).write_text(_render_sarif(report))
+
     n = len(report.active) + len(report.parse_errors)
-    print(f"repro.analysis: {report.files_checked} files, "
-          f"{n} active finding{'s' if n != 1 else ''} "
-          f"({len(report.waived)} waived, {len(report.baselined)} "
-          f"baselined, {len(report.stale_baseline)} stale baseline)")
-    return 1 if n else 0
+    # stale baseline entries fail the run: the ratchet only shrinks
+    return 1 if n or report.stale_baseline else 0
+
+
+def _cmd_baseline(args: argparse.Namespace) -> int:
+    if not args.update:
+        print("error: `baseline` requires --update (the only supported "
+              "operation — the baseline is read implicitly by `check`)",
+              file=sys.stderr)
+        return 2
+
+    path = Path(args.baseline) if args.baseline else Path(DEFAULT_BASELINE)
+    old = load_baseline(path) if path.exists() else []
+    report = run_check(ALL_RULES, args.paths, baseline=old or None)
+
+    zero_debt = {r.rule_id for r in ALL_RULES if not r.allow_baseline}
+    keep: List[Finding] = []
+    refused: List[Finding] = []
+    for f in report.active + report.baselined:
+        (refused if f.rule_id in zero_debt else keep).append(f)
+
+    notes = {}
+    for e in old:
+        notes[(e.get("rule", ""), e.get("file", ""),
+               e.get("line_text", ""))] = e.get("note", "")
+    save_baseline(path, keep, notes)
+    print(f"baseline: wrote {len(keep)} entr"
+          f"{'y' if len(keep) == 1 else 'ies'} to {path}")
+    if refused:
+        print(f"baseline: REFUSED {len(refused)} dataflow-rule finding"
+              f"{'s' if len(refused) != 1 else ''} — these rules carry "
+              f"zero debt; fix the code or add an inline waiver with a "
+              f"justification:", file=sys.stderr)
+        for f in refused:
+            print(f"  {f.format()}", file=sys.stderr)
+        return 1
+    return 0
 
 
 def main(argv: Optional[List[str]] = None) -> int:
     args = _build_parser().parse_args(argv)
     if args.command == "rules":
         return _cmd_rules()
+    if args.command == "baseline":
+        return _cmd_baseline(args)
     return _cmd_check(args)
 
 

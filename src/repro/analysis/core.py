@@ -38,12 +38,13 @@ import ast
 import dataclasses
 import json
 import re
+import time
 from pathlib import Path
 from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
                     Tuple, Type)
 
 __all__ = [
-    "Finding", "Waiver", "FileContext", "Rule", "BaseRule",
+    "Finding", "Waiver", "FileContext", "ProjectContext", "Rule", "BaseRule",
     "parse_waivers", "collect_files", "run_check", "Report",
     "load_baseline", "save_baseline",
 ]
@@ -160,24 +161,65 @@ class FileContext:
                 if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef))]
 
 
+class ProjectContext:
+    """Cross-file state for interprocedural rules.
+
+    Built once per ``run_check`` after every file has parsed: rules that
+    declare ``project_scope`` receive it in ``project_visit`` and share
+    whole-program memos (call graph, taint summaries) through ``cache``,
+    so the expensive structures are computed once no matter how many
+    rules consume them. ``counters`` records how often each memo was
+    actually *built* — a regression test pins them at 1."""
+
+    def __init__(self, contexts: Dict[str, FileContext],
+                 root: Optional[Path] = None):
+        self.contexts = contexts
+        self.root = root
+        self.cache: Dict[str, Any] = {}
+        self.counters: Dict[str, int] = {}
+
+    def bump(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def memo(self, key: str, build) -> Any:
+        """Build-once accessor: ``build()`` runs the first time ``key``
+        is requested and bumps the ``<key>_builds`` counter."""
+        if key not in self.cache:
+            self.bump(f"{key}_builds")
+            self.cache[key] = build()
+        return self.cache[key]
+
+
 class Rule:
     """Protocol every rule implements (see :class:`BaseRule`).
 
     ``node_types``: AST classes the engine should dispatch to ``visit``.
     ``applies_to(ctx)``: file-scope gate, checked once per file.
     ``visit(node, ctx)``: yields :class:`Finding` objects.
+    ``project_scope``: rules that need the whole program (call graph,
+    taint) set this and implement ``project_visit`` instead of / in
+    addition to the per-node hooks.
+    ``allow_baseline``: flow rules ship at zero debt — their findings
+    must be fixed or waived, so the engine refuses to match them against
+    baseline entries (any such entry goes stale and fails the ratchet).
     """
 
     rule_id: str = ""
     title: str = ""
     rationale: str = ""
     node_types: Tuple[Type[ast.AST], ...] = ()
+    project_scope: bool = False
+    allow_baseline: bool = True
 
     def applies_to(self, ctx: FileContext) -> bool:  # pragma: no cover
         return True
 
     def visit(self, node: ast.AST,
               ctx: FileContext) -> Iterable[Finding]:  # pragma: no cover
+        return ()
+
+    def project_visit(self, project: "ProjectContext"
+                      ) -> Iterable[Finding]:  # pragma: no cover
         return ()
 
 
@@ -273,6 +315,8 @@ class Report:
         default_factory=list)
     parse_errors: List[Finding] = dataclasses.field(default_factory=list)
     files_checked: int = 0
+    elapsed_s: float = 0.0
+    counters: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -283,6 +327,7 @@ def run_check(rules: Sequence[Rule], paths: Sequence[str], *,
               root: Optional[Path] = None,
               baseline: Optional[Sequence[Dict[str, str]]] = None
               ) -> Report:
+    t0 = time.perf_counter()
     report = Report()
     raw: List[Finding] = []
     contexts: Dict[str, FileContext] = {}
@@ -310,6 +355,16 @@ def run_check(rules: Sequence[Rule], paths: Sequence[str], *,
             for r in dispatch.get(type(node), ()):
                 raw.extend(r.visit(node, ctx))
 
+    # Interprocedural pass: all files are parsed, so project rules see
+    # the whole program at once and share memos through project.cache.
+    project = ProjectContext(contexts, root=root)
+    for r in rules:
+        if getattr(r, "project_scope", False):
+            raw.extend(r.project_visit(project))
+    report.counters = dict(project.counters)
+
+    no_baseline_rules = {r.rule_id for r in rules
+                         if not getattr(r, "allow_baseline", True)}
     base_left: List[Dict[str, str]] = list(baseline or [])
     for f in sorted(raw, key=lambda f: (f.path, f.line, f.rule_id)):
         w = contexts[f.path].waiver_for(f.rule_id, f.line)
@@ -318,15 +373,17 @@ def run_check(rules: Sequence[Rule], paths: Sequence[str], *,
             report.waived.append((f, w))
             continue
         matched = None
-        for e in base_left:
-            if (e.get("rule") == f.rule_id and e.get("file") == f.path
-                    and e.get("line_text") == f.line_text):
-                matched = e
-                break
+        if f.rule_id not in no_baseline_rules:
+            for e in base_left:
+                if (e.get("rule") == f.rule_id and e.get("file") == f.path
+                        and e.get("line_text") == f.line_text):
+                    matched = e
+                    break
         if matched is not None:
             base_left.remove(matched)
             report.baselined.append(f)
             continue
         report.active.append(f)
     report.stale_baseline = base_left
+    report.elapsed_s = time.perf_counter() - t0
     return report

@@ -1,0 +1,596 @@
+"""Taint dataflow over traced values, on top of the call graph.
+
+What the flow rules need to know is *value-sensitive*: a ``float(...)``
+three calls below ``_fused_step_impl`` is only a host sync if the value
+it converts derives from a traced argument; ``if kv_state:`` on the
+*pytree dict itself* is host-safe emptiness, while ``if kv_state["k"]``
+is a TracerBoolConversionError. This module computes that, once per
+run, in two layers:
+
+**Taint lattice.** ``none < container < array``. The jitted step
+signatures seed the roots: ``params``/``kv_state``/``ssm_states`` enter
+at *container* level (they are dicts of arrays — their direct
+truthiness is host-side emptiness, fine under jit), every other step
+parameter (tokens, lengths, tables, masks, injected faults) enters at
+*array*. Any derivation — subscript, attribute (except static
+``shape``/``ndim``/``dtype``/``size``), arithmetic, comparison, method
+call — lands at *array*: ``kv_state["k"]`` is a tracer even though
+``kv_state`` is a dict. Danger predicates: a *sync* op (``.item()``,
+``float()``, ``np.asarray`` …) is flagged at any taint level; a *bool
+context* (``if``/``while``/``assert``/``and``/``or``/``not``) is
+flagged only at *array* level.
+
+**Relational summaries.** Every function gets ONE symbolic summary,
+memoized by qualified name: its effects (sync/branch sites) with
+*conditions* in terms of its own parameter indices — ``(k, "any")``
+fires if argument ``k`` is tainted at all, ``(k, "array")`` only if it
+arrives at array level — plus the taint of its return value as
+``(param, derived)`` atoms. Call sites map callee conditions through
+their actual arguments, so the helper is analyzed once no matter how
+many call sites or roots reach it. Traced roots are then evaluated
+concretely against the seed levels; effects that fire carry the
+call-chain (``via``) for the finding message.
+
+Blind spots (documented in docs/static_analysis.md): unresolved calls
+(dynamic dispatch, ``getattr``) conservatively taint their result but
+contribute no effects; recursion cycles get one empty-summary
+iteration; a closure returned through the factory seam is summarized
+over its own parameters only, so effects conditioned purely on
+*captured* factory locals surface when the factory itself is analyzed
+as a root, not at the ``lax.scan`` site.
+
+Stdlib-only, single parse: walkers reuse the engine's parsed trees.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import (CallGraph, FunctionNode,
+                                      get_callgraph)
+from repro.analysis.core import ProjectContext
+from repro.analysis.rules.jit import (CONVERSIONS, STATIC_ATTRS, SYNC_ATTRS,
+                                      SYNC_CALLS, attr_chain,
+                                      is_traced_fn_name, param_names)
+
+__all__ = [
+    "Effect", "FiredEffect", "Summary", "Dataflow", "get_dataflow",
+    "CONTAINER_PARAMS", "LEVEL_NONE", "LEVEL_CONTAINER", "LEVEL_ARRAY",
+]
+
+#: step-signature pytree-of-arrays parameters: tainted, but their own
+#: truthiness is host-side dict emptiness (container level)
+CONTAINER_PARAMS = frozenset({"params", "kv_state", "ssm_states"})
+
+LEVEL_NONE, LEVEL_CONTAINER, LEVEL_ARRAY = 0, 1, 2
+
+#: builtins whose result is host data regardless of argument taint
+UNTAINT_CALLS = frozenset({
+    "len", "isinstance", "hasattr", "type", "repr", "str", "callable",
+    "id", "issubclass", "format",
+})
+
+Atom = Tuple[int, bool]          # (param index, derived?)
+Cond = Tuple[int, str]           # (param index, "any" | "array")
+
+
+@dataclasses.dataclass(frozen=True)
+class Effect:
+    """One sync/branch site, relational to the summarized function's
+    parameters. ``conditions`` has OR semantics (any one holding fires);
+    ``None`` means unconditional. ``via`` is the call chain *below* the
+    summarized function down to the site's owner."""
+
+    kind: str                    # "sync" | "branch"
+    op: str                      # ".item()", "float()", "branch", ...
+    path: str
+    line: int
+    col: int
+    line_text: str
+    owner: str                   # innermost def lexically holding the site
+    owner_traced: bool           # site sits inside a traced def (JIT-01 land)
+    conditions: Optional[FrozenSet[Cond]]
+    via: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class FiredEffect:
+    """An effect that fired under a traced root's concrete seed levels."""
+
+    effect: Effect
+    root: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Summary:
+    effects: Tuple[Effect, ...]
+    returns: FrozenSet[Atom]
+
+
+_EMPTY_SUMMARY = Summary((), frozenset())
+
+
+class Dataflow:
+    """Per-run taint engine: one symbolic summary per function, one
+    concrete evaluation per traced root, both memoized."""
+
+    def __init__(self, graph: CallGraph, project: ProjectContext):
+        self.graph = graph
+        self.project = project
+        self._summaries: Dict[str, Summary] = {}
+        self._in_progress: Set[str] = set()
+        self._roots: Dict[str, List[FiredEffect]] = {}
+        self.summary_counts: Dict[str, int] = {}
+
+    def summary_of(self, fn: FunctionNode) -> Summary:
+        got = self._summaries.get(fn.qname)
+        if got is not None:
+            return got
+        if fn.qname in self._in_progress:
+            # recursion: one empty-summary iteration (documented blind spot)
+            self.project.bump("summary_cycles")
+            return _EMPTY_SUMMARY
+        self._in_progress.add(fn.qname)
+        try:
+            self.project.bump("taint_summaries")
+            self.summary_counts[fn.qname] = (
+                self.summary_counts.get(fn.qname, 0) + 1)
+            w = _Walker(self, fn, "sym")
+            w.run()
+            s = Summary(tuple(w.effects), frozenset(w.returns))
+        finally:
+            self._in_progress.discard(fn.qname)
+        self._summaries[fn.qname] = s
+        return s
+
+    def analyze_root(self, root: FunctionNode) -> List[FiredEffect]:
+        got = self._roots.get(root.qname)
+        if got is None:
+            self.project.bump("root_analyses")
+            w = _Walker(self, root, "root")
+            w.run()
+            got = self._roots[root.qname] = w.effects
+        return got
+
+
+def get_dataflow(project: ProjectContext) -> Dataflow:
+    """The run's taint engine — built once, shared by every flow rule."""
+    return project.memo(
+        "dataflow", lambda: Dataflow(get_callgraph(project), project))
+
+
+class _Walker:
+    """One pass over one function subtree.
+
+    ``sym`` mode produces the relational :class:`Summary`; ``root`` mode
+    evaluates concretely against the traced-seed levels and produces
+    :class:`FiredEffect` objects. Assignments are solved to a fixpoint
+    (path-insensitive: both branches of an ``if`` contribute), then a
+    single scan collects effects.
+    """
+
+    def __init__(self, df: Dataflow, fn: FunctionNode, mode: str):
+        self.df = df
+        self.graph = df.graph
+        self.fn = fn
+        self.mode = mode
+        self.ctx = fn.ctx
+        self.sym = mode == "sym"
+        self.env: Dict[str, object] = {}
+        self.effects: List = []
+        self.returns: Set[Atom] = set()
+        self._sites: Set[Tuple[int, int, str]] = set()
+
+    def run(self) -> None:
+        self._seed()
+        for _ in range(10):
+            if not self._pass():
+                break
+        self._scan()
+
+    # ------------------------------------------------------------------
+    # Domain primitives (symbolic: frozenset of atoms; root: int level)
+    # ------------------------------------------------------------------
+    def _bottom(self):
+        return frozenset() if self.sym else LEVEL_NONE
+
+    def _join(self, a, b):
+        return (a | b) if self.sym else max(a, b)
+
+    def _derive(self, v):
+        if self.sym:
+            return frozenset((i, True) for (i, _) in v)
+        return LEVEL_ARRAY if v >= LEVEL_CONTAINER else LEVEL_NONE
+
+    def _seed(self) -> None:
+        if self.sym:
+            for i, p in enumerate(self.fn.params):
+                self.env[p] = frozenset({(i, False)})
+            return
+        for p in self.fn.params:
+            self.env[p] = (LEVEL_CONTAINER if p in CONTAINER_PARAMS
+                           else LEVEL_ARRAY)
+        # nested scan bodies / lambdas take traced carries and slices;
+        # seed leniently at container so dict-slice truthiness stays quiet
+        for sub in ast.walk(self.fn.node):
+            if sub is self.fn.node:
+                continue
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                for p in param_names(sub):
+                    self.env[p] = self._join(
+                        self.env.get(p, LEVEL_NONE), LEVEL_CONTAINER)
+
+    # ------------------------------------------------------------------
+    # Assignment fixpoint
+    # ------------------------------------------------------------------
+    def _pass(self) -> bool:
+        changed = False
+        for node in ast.walk(self.fn.node):
+            if isinstance(node, ast.Assign):
+                v = self._eval(node.value)
+                for t in node.targets:
+                    changed |= self._assign(t, node.value, v)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                changed |= self._assign(node.target, node.value,
+                                        self._eval(node.value))
+            elif isinstance(node, ast.AugAssign):
+                if isinstance(node.target, ast.Name):
+                    v = self._derive(self._join(
+                        self._eval(node.value),
+                        self.env.get(node.target.id, self._bottom())))
+                    changed |= self._bind(node.target.id, v)
+            elif isinstance(node, ast.NamedExpr):
+                if isinstance(node.target, ast.Name):
+                    changed |= self._bind(node.target.id,
+                                          self._eval(node.value))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                changed |= self._assign(node.target, None,
+                                        self._derive(self._eval(node.iter)))
+            elif isinstance(node, ast.comprehension):
+                changed |= self._assign(node.target, None,
+                                        self._derive(self._eval(node.iter)))
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    if item.optional_vars is not None:
+                        changed |= self._assign(
+                            item.optional_vars, None,
+                            self._derive(self._eval(item.context_expr)))
+        return changed
+
+    def _assign(self, target: ast.AST, value_expr: Optional[ast.AST],
+                v) -> bool:
+        if isinstance(target, ast.Name):
+            return self._bind(target.id, v)
+        if isinstance(target, ast.Starred):
+            return self._assign(target.value, None, self._derive(v))
+        if isinstance(target, (ast.Tuple, ast.List)):
+            if (value_expr is not None
+                    and isinstance(value_expr, (ast.Tuple, ast.List))
+                    and len(value_expr.elts) == len(target.elts)
+                    and not any(isinstance(e, ast.Starred)
+                                for e in target.elts)):
+                ch = False
+                for t, e in zip(target.elts, value_expr.elts):
+                    ch |= self._assign(t, e, self._eval(e))
+                return ch
+            dv = self._derive(v)
+            ch = False
+            for t in target.elts:
+                ch |= self._assign(t, None, dv)
+            return ch
+        return False  # Attribute/Subscript stores: no tracked cell
+
+    def _bind(self, name: str, v) -> bool:
+        # The state-pytree names are load-bearing repo convention (JIT-02
+        # keys on them too): a name called kv_state always holds the
+        # pytree, so rebinding it (kv_state = tree_map(...)) keeps
+        # container level — its truthiness stays host-safe emptiness.
+        if name in CONTAINER_PARAMS:
+            if self.sym:
+                v = frozenset((i, False) for (i, _) in v)
+            else:
+                v = min(v, LEVEL_CONTAINER)
+        old = self.env.get(name, self._bottom())
+        new = self._join(old, v)
+        if new != old:
+            self.env[name] = new
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    # Expression evaluation (pure: no effect recording)
+    # ------------------------------------------------------------------
+    def _eval(self, node: Optional[ast.AST]):
+        b = self._bottom()
+        if node is None or isinstance(node, (ast.Constant, ast.JoinedStr,
+                                             ast.Lambda)):
+            return b
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, b)
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return b  # static metadata read, never a device value
+            return self._derive(self._eval(node.value))
+        if isinstance(node, ast.Subscript):
+            return self._join(self._derive(self._eval(node.value)),
+                              self._derive(self._eval(node.slice)))
+        if isinstance(node, ast.BinOp):
+            return self._derive(self._join(self._eval(node.left),
+                                           self._eval(node.right)))
+        if isinstance(node, ast.UnaryOp):
+            return self._derive(self._eval(node.operand))
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return b  # identity tests never materialize the tracer
+            v = self._eval(node.left)
+            for c in node.comparators:
+                v = self._join(v, self._eval(c))
+            return self._derive(v)
+        if isinstance(node, ast.BoolOp):
+            v = b
+            for e in node.values:
+                v = self._join(v, self._eval(e))
+            return v
+        if isinstance(node, ast.IfExp):
+            return self._join(self._eval(node.body), self._eval(node.orelse))
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            v = b
+            for e in node.elts:
+                v = self._join(v, self._eval(e))
+            return v
+        if isinstance(node, ast.Dict):
+            v = b
+            for e in list(node.keys) + list(node.values):
+                if e is not None:
+                    v = self._join(v, self._eval(e))
+            return v
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self._derive(self._eval(node.elt))
+        if isinstance(node, ast.DictComp):
+            return self._derive(self._join(self._eval(node.key),
+                                           self._eval(node.value)))
+        if isinstance(node, (ast.Starred, ast.NamedExpr)):
+            return self._eval(node.value)
+        if isinstance(node, ast.Await):
+            return self._eval(node.value)
+        if isinstance(node, ast.Call):
+            return self._eval_call(node)
+        if isinstance(node, ast.Slice):
+            v = b
+            for e in (node.lower, node.upper, node.step):
+                if e is not None:
+                    v = self._join(v, self._eval(e))
+            return v
+        v = b  # conservative default: join child expressions
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                v = self._join(v, self._eval(child))
+        return v
+
+    def _eval_call(self, node: ast.Call):
+        b = self._bottom()
+        fn = node.func
+        chain = attr_chain(fn)
+        parts = tuple(chain.split(".")) if chain else ()
+        # host-materializing calls: the result lives on the host
+        if isinstance(fn, ast.Attribute) and fn.attr in SYNC_ATTRS:
+            return b
+        if parts in SYNC_CALLS:
+            return b
+        if isinstance(fn, ast.Name) and (fn.id in CONVERSIONS
+                                         or fn.id in UNTAINT_CALLS):
+            return b
+        callee = self.graph.resolve_call(node, self.fn)
+        if callee is not None:
+            s = self.df.summary_of(callee)
+            v = b
+            for (j, jd) in s.returns:
+                av = self._arg_value(node, callee, j)
+                v = self._join(v, self._derive(av) if jd else av)
+            return v
+        # unresolved: taint flows through receiver and arguments
+        v = b
+        if isinstance(fn, ast.Attribute):
+            v = self._join(v, self._eval(fn.value))
+        for a in node.args:
+            v = self._join(v, self._eval(a))
+        for kw in node.keywords:
+            v = self._join(v, self._eval(kw.value))
+        return self._derive(v)
+
+    def _arg_value(self, call: ast.Call, callee: FunctionNode, j: int,
+                   arg_offset: int = 0):
+        if j >= len(callee.params):
+            return self._bottom()
+        name = callee.params[j]
+        v = None
+        pos = j + arg_offset
+        if pos < len(call.args):
+            a = call.args[pos]
+            v = (self._bottom() if isinstance(a, ast.Starred)
+                 else self._eval(a))
+        else:
+            for kw in call.keywords:
+                if kw.arg == name:
+                    v = self._eval(kw.value)
+                    break
+        if v is None:
+            return self._bottom()
+        # a callee parameter NAMED kv_state/ssm_states/params declares
+        # pytree semantics for that slot (same convention as _bind): the
+        # caller may hand in a scan-derived tree the lattice sees as
+        # array, but inside the callee its truthiness is dict emptiness
+        if name in CONTAINER_PARAMS:
+            if self.sym:
+                v = frozenset((i, False) for (i, _) in v)
+            else:
+                v = min(v, LEVEL_CONTAINER)
+        return v
+
+    # ------------------------------------------------------------------
+    # Effect collection
+    # ------------------------------------------------------------------
+    def _scan(self) -> None:
+        for node in ast.walk(self.fn.node):
+            if isinstance(node, ast.Call):
+                self._scan_call(node)
+            elif isinstance(node, (ast.If, ast.While, ast.Assert)):
+                self._bool_leaf(node.test)
+            elif isinstance(node, ast.IfExp):
+                self._bool_leaf(node.test)
+            elif isinstance(node, ast.BoolOp):
+                for v in node.values:
+                    self._bool_leaf(v)
+            elif (isinstance(node, ast.UnaryOp)
+                  and isinstance(node.op, ast.Not)):
+                self._bool_leaf(node.operand)
+            elif isinstance(node, ast.comprehension):
+                for cond in node.ifs:
+                    self._bool_leaf(cond)
+            elif (self.sym and isinstance(node, ast.Return)
+                  and node.value is not None):
+                if self._owner_def(node) is self.fn.node:
+                    v = self._eval(node.value)
+                    self.returns |= v
+
+    def _bool_leaf(self, expr: ast.AST) -> None:
+        # BoolOp/Not operands are themselves visited by the walk; flag
+        # only the leaves so `a and b` reports each operand once
+        if isinstance(expr, (ast.BoolOp, ast.Constant)):
+            return
+        if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.Not):
+            return
+        key = (expr.lineno, expr.col_offset, "branch")
+        if key in self._sites:
+            return
+        if self.sym:
+            atoms = self._eval(expr)
+            conds = frozenset((i, "any" if d else "array")
+                              for (i, d) in atoms)
+            if conds:
+                self._sites.add(key)
+                self._record("branch", "branch", expr, conds)
+        else:
+            if self._eval(expr) == LEVEL_ARRAY:
+                self._sites.add(key)
+                self._record("branch", "branch", expr, None)
+
+    def _scan_call(self, node: ast.Call) -> None:
+        fn = node.func
+        chain = attr_chain(fn)
+        parts = tuple(chain.split(".")) if chain else ()
+        if isinstance(fn, ast.Attribute) and fn.attr in SYNC_ATTRS:
+            self._sync_effect(node, f".{fn.attr}()", self._eval(fn.value))
+            return
+        if parts in SYNC_CALLS:
+            v = self._bottom()
+            for a in node.args:
+                v = self._join(v, self._eval(a))
+            self._sync_effect(node, f"{chain}()", v)
+            return
+        if isinstance(fn, ast.Name) and fn.id == "print":
+            v = self._bottom()
+            for a in node.args:
+                v = self._join(v, self._eval(a))
+            self._sync_effect(node, "print()", v)
+            return
+        if isinstance(fn, ast.Name) and fn.id in CONVERSIONS and node.args:
+            self._sync_effect(node, f"{fn.id}()", self._eval(node.args[0]))
+            return
+        callee = self.graph.resolve_call(node, self.fn)
+        if callee is not None:
+            self._map_callee(node, callee)
+            return
+        # the factory/scan seam: jax.lax.scan(body, carry, xs) where
+        # `body` is a nested def or a factory-returned closure
+        if (parts and parts[-1] == "scan" and node.args
+                and isinstance(node.args[0], ast.Name)):
+            target = self.graph.resolve_name(node.args[0].id, self.fn)
+            if target is not None:
+                self._map_callee(node, target, arg_offset=1)
+
+    def _sync_effect(self, node: ast.Call, op: str, v) -> None:
+        key = (node.lineno, node.col_offset, "sync")
+        if key in self._sites:
+            return
+        if self.sym:
+            conds = frozenset((i, "any") for (i, _) in v)
+            if conds:
+                self._sites.add(key)
+                self._record("sync", op, node, conds)
+        else:
+            if v >= LEVEL_CONTAINER:
+                self._sites.add(key)
+                self._record("sync", op, node, None)
+
+    def _map_callee(self, call: ast.Call, callee: FunctionNode,
+                    arg_offset: int = 0) -> None:
+        s = self.df.summary_of(callee)
+        if not s.effects:
+            return
+        argv: Dict[int, object] = {}
+
+        def av(j: int):
+            if j not in argv:
+                argv[j] = self._arg_value(call, callee, j, arg_offset)
+            return argv[j]
+
+        for e in s.effects:
+            if self.sym:
+                if e.conditions is None:
+                    conds: Optional[FrozenSet[Cond]] = None
+                else:
+                    mapped: Set[Cond] = set()
+                    for (j, req) in e.conditions:
+                        for (i, d) in av(j):
+                            mapped.add((i, "any")
+                                       if (req == "any" or d)
+                                       else (i, "array"))
+                    if not mapped:
+                        continue
+                    conds = frozenset(mapped)
+                self.effects.append(dataclasses.replace(
+                    e, conditions=conds, via=(callee.name,) + e.via))
+            else:
+                fire = e.conditions is None
+                if not fire:
+                    for (j, req) in e.conditions:
+                        need = (LEVEL_ARRAY if req == "array"
+                                else LEVEL_CONTAINER)
+                        if av(j) >= need:
+                            fire = True
+                            break
+                if fire:
+                    self.effects.append(FiredEffect(
+                        dataclasses.replace(
+                            e, via=(callee.name,) + e.via),
+                        self.fn.name))
+
+    # ------------------------------------------------------------------
+    def _record(self, kind: str, op: str, node: ast.AST,
+                conditions: Optional[FrozenSet[Cond]]) -> None:
+        line = getattr(node, "lineno", 1)
+        owner, owner_traced = self._owner_info(node)
+        e = Effect(kind=kind, op=op, path=self.ctx.relpath, line=line,
+                   col=getattr(node, "col_offset", 0),
+                   line_text=self.ctx.line_text(line), owner=owner,
+                   owner_traced=owner_traced, conditions=conditions)
+        if self.sym:
+            self.effects.append(e)
+        else:
+            self.effects.append(FiredEffect(e, self.fn.name))
+
+    def _owner_def(self, node: ast.AST) -> Optional[ast.AST]:
+        for p in self.ctx.parents(node):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return p
+        return None
+
+    def _owner_info(self, node: ast.AST) -> Tuple[str, bool]:
+        names = [p.name for p in self.ctx.parents(node)
+                 if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        owner = names[0] if names else self.fn.name
+        traced = any(is_traced_fn_name(n) for n in names or [self.fn.name])
+        return owner, traced

@@ -9,6 +9,9 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.analysis.core import Rule
+from repro.analysis.rules.flow import (Jit03HelperSync, Jit04TracedBranch,
+                                       Jit05StaleCapture,
+                                       Leak01AllocPairing)
 from repro.analysis.rules.jit import Jit01HostSync, Jit02Donation
 from repro.analysis.rules.numerics import Num01ConstDivide, Num02DoubleLowCast
 from repro.analysis.rules.pallas import Pal01InterpretRouting
@@ -20,12 +23,16 @@ __all__ = ["ALL_RULES", "rules_by_id"]
 ALL_RULES: List[Rule] = [
     Jit01HostSync(),
     Jit02Donation(),
+    Jit03HelperSync(),
+    Jit04TracedBranch(),
+    Jit05StaleCapture(),
     Num01ConstDivide(),
     Num02DoubleLowCast(),
     Pal01InterpretRouting(),
     Cache01ScatterDrop(),
     Host01NoJax(),
     Life01TerminalState(),
+    Leak01AllocPairing(),
 ]
 
 

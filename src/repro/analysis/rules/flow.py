@@ -1,0 +1,508 @@
+"""Interprocedural flow rules: JIT-03/04/05 and LEAK-01.
+
+These are the rules the per-function engine structurally cannot
+express: they consume the project call graph (``analysis/callgraph``)
+and the taint engine (``analysis/dataflow``) built once per run and
+shared through ``ProjectContext.cache``. All four ship at zero debt
+(``allow_baseline = False``): their findings must be fixed or carry a
+written waiver — the baseline ratchet refuses to grandfather them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import (CallGraph, FunctionNode,
+                                      get_callgraph)
+from repro.analysis.core import (BaseRule, FileContext, Finding,
+                                 ProjectContext)
+from repro.analysis.dataflow import get_dataflow
+from repro.analysis.rules.jit import attr_chain
+
+__all__ = ["Jit03HelperSync", "Jit04TracedBranch", "Jit05StaleCapture",
+           "Leak01AllocPairing"]
+
+
+def _sorted_roots(graph: CallGraph) -> List[FunctionNode]:
+    return sorted(graph.traced_roots(), key=lambda f: f.qname)
+
+
+class Jit03HelperSync(BaseRule):
+    rule_id = "JIT-03"
+    title = "no host syncs anywhere in the traced call graph"
+    rationale = (
+        "A .item()/float()/np.asarray/block_until_ready applied to a "
+        "traced value in ANY function transitively reachable from a "
+        "jit-traced step body is the same per-step host round trip "
+        "JIT-01 bans — hiding it behind a helper call must not hide it "
+        "from the linter. Taint-conditional: float(self.block_size) in "
+        "a shared helper stays legal.")
+    project_scope = True
+    allow_baseline = False
+
+    def project_visit(self, project: ProjectContext) -> Iterator[Finding]:
+        graph = get_callgraph(project)
+        df = get_dataflow(project)
+        seen: Set[Tuple[str, int, str]] = set()
+        for root in _sorted_roots(graph):
+            for fe in df.analyze_root(root):
+                e = fe.effect
+                # sites lexically inside a traced def are JIT-01's domain
+                if e.kind != "sync" or e.owner_traced:
+                    continue
+                key = (e.path, e.line, e.op)
+                if key in seen:
+                    continue
+                seen.add(key)
+                chain = " -> ".join([root.name, *e.via])
+                yield Finding(
+                    self.rule_id, e.path, e.line,
+                    f"host sync '{e.op}' on a traced value in "
+                    f"'{e.owner}', reached from jit-traced "
+                    f"'{root.name}' via {chain}: one dispatch per step "
+                    f"means no host round trips anywhere in the traced "
+                    f"call graph, not just the step body JIT-01 sees",
+                    e.line_text)
+
+
+class Jit04TracedBranch(BaseRule):
+    rule_id = "JIT-04"
+    title = "no python control flow on traced values in traced regions"
+    rationale = (
+        "if/while/assert/and/or/not on a traced array inside a jit-"
+        "traced region (or any helper it reaches) raises "
+        "TracerBoolConversionError at best and silently retraces per "
+        "distinct value at worst. Dict-emptiness tests on the state "
+        "pytrees themselves (if kv_state:) are host-safe and not "
+        "flagged; use jnp.where/lax.cond/lax.select for data-dependent "
+        "control flow.")
+    project_scope = True
+    allow_baseline = False
+
+    def project_visit(self, project: ProjectContext) -> Iterator[Finding]:
+        graph = get_callgraph(project)
+        df = get_dataflow(project)
+        seen: Set[Tuple[str, int, int]] = set()
+        for root in _sorted_roots(graph):
+            for fe in df.analyze_root(root):
+                e = fe.effect
+                if e.kind != "branch":
+                    continue
+                key = (e.path, e.line, e.col)
+                if key in seen:
+                    continue
+                seen.add(key)
+                if e.via:
+                    chain = " -> ".join([root.name, *e.via])
+                    msg = (f"python branch on a traced value in "
+                           f"'{e.owner}', reached from jit-traced "
+                           f"'{root.name}' via {chain}: "
+                           f"TracerBoolConversionError or a silent "
+                           f"per-value retrace; hoist the decision or "
+                           f"use jnp.where/lax.cond")
+                else:
+                    msg = (f"python branch on a traced value inside "
+                           f"jit-traced '{root.name}': "
+                           f"TracerBoolConversionError or a silent "
+                           f"per-value retrace; use jnp.where/lax.cond "
+                           f"(static shape/config branches are fine "
+                           f"and not flagged)")
+                yield Finding(self.rule_id, e.path, e.line, msg,
+                              e.line_text)
+
+
+# ---------------------------------------------------------------------------
+# JIT-05: traced closures capturing mutable host state
+# ---------------------------------------------------------------------------
+
+_MUTATORS = frozenset({"append", "extend", "insert", "update", "setdefault",
+                       "pop", "popitem", "clear", "remove", "discard",
+                       "add"})
+
+
+def _is_mutable_literal(expr: ast.AST) -> bool:
+    """A plain []/{}, set()/list()/dict() initializer — the shapes that
+    read as 'accumulator'. Comprehensions and arbitrary calls (Counter,
+    tuple builds) are deliberately excluded: built-once tables are the
+    normal trace-time constant pattern."""
+    if isinstance(expr, (ast.List, ast.Dict, ast.Set)):
+        return True
+    return (isinstance(expr, ast.Call) and isinstance(expr.func, ast.Name)
+            and expr.func.id in ("list", "dict", "set")
+            and not expr.args and not expr.keywords)
+
+
+def _inside(node: ast.AST, container: ast.AST, ctx: FileContext) -> bool:
+    if node is container:
+        return True
+    return any(p is container for p in ctx.parents(node))
+
+
+def _in_store_target(node: ast.AST, ctx: FileContext) -> bool:
+    """True when the Load sits inside the target chain of a store, e.g.
+    the `coeffs` in `coeffs[0] = x` or `self.t[k] += 1`."""
+    cur = node
+    for p in ctx.parents(node):
+        if isinstance(p, (ast.Subscript, ast.Attribute)) and isinstance(
+                p.ctx, (ast.Store, ast.Del)):
+            return True
+        if isinstance(p, ast.stmt):
+            if isinstance(p, (ast.Assign, ast.AugAssign)):
+                targets = (p.targets if isinstance(p, ast.Assign)
+                           else [p.target])
+                return any(t is cur or _inside(cur, t, ctx)
+                           for t in targets)
+            return False
+        cur = p
+    return False
+
+
+def _mutations(scope: ast.AST, match, ctx: FileContext) -> List[ast.AST]:
+    out: List[ast.AST] = []
+    for node in ast.walk(scope):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _MUTATORS
+                and match(node.func.value)):
+            out.append(node)
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if isinstance(t, ast.Subscript) and match(t.value):
+                    out.append(node)
+                elif isinstance(node, ast.AugAssign) and match(t):
+                    out.append(node)
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) and match(t.value):
+                    out.append(node)
+    return out
+
+
+def _reads(scope: ast.AST, match, ctx: FileContext) -> List[ast.AST]:
+    out: List[ast.AST] = []
+    for node in ast.walk(scope):
+        if not match(node):
+            continue
+        if not isinstance(getattr(node, "ctx", None), ast.Load):
+            continue
+        if _in_store_target(node, ctx):
+            continue
+        out.append(node)
+    return sorted(out, key=lambda n: (n.lineno, n.col_offset))
+
+
+def _name_matcher(name: str):
+    return lambda n: isinstance(n, ast.Name) and n.id == name
+
+
+def _self_attr_matcher(attr: str):
+    return lambda n: (isinstance(n, ast.Attribute) and n.attr == attr
+                      and isinstance(n.value, ast.Name)
+                      and n.value.id == "self")
+
+
+def _local_names(fn_node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for sub in ast.walk(fn_node):
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Store):
+            out.add(sub.id)
+        elif isinstance(sub, ast.arg):
+            out.add(sub.arg)
+        elif isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and sub is not fn_node:
+            out.add(sub.name)
+    return out
+
+
+class Jit05StaleCapture(BaseRule):
+    rule_id = "JIT-05"
+    title = "no mutable host state captured by jit-traced code"
+    rationale = (
+        "A traced function that closes over a host list/dict (or reads "
+        "a mutable self attribute) bakes the value in at trace time: "
+        "mutations after the first dispatch silently never reach the "
+        "compiled step — the stale-capture class. Pass the value as a "
+        "traced argument or make the capture immutable.")
+    project_scope = True
+    allow_baseline = False
+
+    def project_visit(self, project: ProjectContext) -> Iterator[Finding]:
+        graph = get_callgraph(project)
+        yield from self._closure_findings(graph)
+        yield from self._attr_findings(graph)
+
+    # -- case A: `xs = []` in a factory, read by the closure, mutated
+    # after the closure is defined --------------------------------------
+    def _closure_findings(self, graph: CallGraph) -> Iterator[Finding]:
+        for q in sorted(graph.functions):
+            fn = graph.functions[q]
+            if not graph.in_traced_scope(fn) or fn.parent_qname is None:
+                continue
+            ctx = fn.ctx
+            locals_ = _local_names(fn.node)
+            for encl in list(graph.scope_chain(fn))[1:]:
+                for stmt in ast.walk(encl.node):
+                    if not (isinstance(stmt, ast.Assign)
+                            and len(stmt.targets) == 1
+                            and isinstance(stmt.targets[0], ast.Name)
+                            and _is_mutable_literal(stmt.value)):
+                        continue
+                    owner = self._owner_def(stmt, ctx)
+                    if owner is not encl.node:
+                        continue
+                    name = stmt.targets[0].id
+                    if name in locals_:
+                        continue  # shadowed: the closure has its own
+                    reads = _reads(fn.node, _name_matcher(name), ctx)
+                    if not reads:
+                        continue
+                    muts = [m for m in _mutations(
+                                encl.node, _name_matcher(name), ctx)
+                            if not _inside(m, fn.node, ctx)
+                            and m.lineno > fn.node.lineno]
+                    if not muts:
+                        continue
+                    r = reads[0]
+                    yield Finding(
+                        self.rule_id, ctx.relpath, r.lineno,
+                        f"traced closure '{fn.name}' captures host-"
+                        f"mutable '{name}' (built at line {stmt.lineno} "
+                        f"in '{encl.name}', mutated after the closure "
+                        f"is defined at line {muts[0].lineno}): the "
+                        f"value is frozen at trace time, later host "
+                        f"mutations never reach the compiled step",
+                        ctx.line_text(r.lineno))
+
+    @staticmethod
+    def _owner_def(node: ast.AST, ctx: FileContext) -> Optional[ast.AST]:
+        for p in ctx.parents(node):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return p
+        return None
+
+    # -- case B: `self.xs = []` in __init__, mutated in one method,
+    # read inside a traced method ---------------------------------------
+    def _attr_findings(self, graph: CallGraph) -> Iterator[Finding]:
+        classes: Dict[Tuple[str, str], List[FunctionNode]] = {}
+        for fn in graph.functions.values():
+            if fn.class_name and fn.parent_qname is None:
+                classes.setdefault((fn.relpath, fn.class_name),
+                                   []).append(fn)
+        for (rel, cname) in sorted(classes):
+            methods = classes[(rel, cname)]
+            init = next((m for m in methods if m.name == "__init__"), None)
+            if init is None:
+                continue
+            attrs: Dict[str, ast.Assign] = {}
+            for stmt in ast.walk(init.node):
+                if (isinstance(stmt, ast.Assign)
+                        and len(stmt.targets) == 1
+                        and isinstance(stmt.targets[0], ast.Attribute)
+                        and isinstance(stmt.targets[0].value, ast.Name)
+                        and stmt.targets[0].value.id == "self"
+                        and _is_mutable_literal(stmt.value)):
+                    attrs[stmt.targets[0].attr] = stmt
+            if not attrs:
+                continue
+            traced = [m for m in methods if graph.in_traced_scope(m)]
+            if not traced:
+                continue
+            for attr in sorted(attrs):
+                match = _self_attr_matcher(attr)
+                mutators = [(m, mu) for m in methods
+                            if m.name != "__init__"
+                            and not graph.in_traced_scope(m)
+                            for mu in _mutations(m.node, match, m.ctx)]
+                if not mutators:
+                    continue
+                for r_fn in sorted(traced, key=lambda f: f.qname):
+                    reads = _reads(r_fn.node, match, r_fn.ctx)
+                    if not reads:
+                        continue
+                    r = reads[0]
+                    yield Finding(
+                        self.rule_id, rel, r.lineno,
+                        f"jit-traced '{r_fn.name}' reads "
+                        f"'self.{attr}' — a mutable container built "
+                        f"in __init__ and mutated in "
+                        f"'{mutators[0][0].name}': the value is "
+                        f"frozen at trace time, later host mutations "
+                        f"never reach the compiled step; pass it as "
+                        f"a traced argument or make it immutable",
+                        r_fn.ctx.line_text(r.lineno))
+
+
+# ---------------------------------------------------------------------------
+# LEAK-01: alloc/share without release or ownership transfer
+# ---------------------------------------------------------------------------
+
+_TRANSFER_ATTRS = frozenset({"append", "extend", "insert", "add", "update"})
+
+
+class Leak01AllocPairing(BaseRule):
+    rule_id = "LEAK-01"
+    title = "allocator blocks must be released or ownership-transferred"
+    rationale = (
+        "BlockAllocator.alloc/share hands out refcounted blocks; a "
+        "result that reaches no release(), no request block list, and "
+        "no caller (via return) leaks pool capacity until restart — "
+        "the static twin of the chaos suite's block-conservation "
+        "invariant. Path-insensitive by design: one consuming path "
+        "anywhere in the function satisfies the rule.")
+    node_types = (ast.FunctionDef, ast.AsyncFunctionDef)
+    allow_baseline = False
+
+    def applies_to(self, ctx: FileContext) -> bool:
+        return "serving/" in ctx.relpath
+
+    def visit(self, node: ast.AST, ctx: FileContext) -> Iterable[Finding]:
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            if self._owner_def(call, ctx) is not node:
+                continue
+            chain = attr_chain(call.func)
+            parts = chain.split(".") if chain else []
+            if len(parts) < 2 or parts[-1] not in ("alloc", "share"):
+                continue
+            if parts[-2] not in ("alloc", "allocator", "_alloc"):
+                continue
+            if parts[-1] == "share":
+                yield from self._check_share(call, node, ctx, chain)
+            else:
+                yield from self._check_alloc(call, node, ctx, chain)
+
+    @staticmethod
+    def _owner_def(node: ast.AST, ctx: FileContext) -> Optional[ast.AST]:
+        for p in ctx.parents(node):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return p
+        return None
+
+    def _check_alloc(self, call: ast.Call, fn: ast.AST, ctx: FileContext,
+                     chain: str) -> Iterator[Finding]:
+        consumed, names = self._direct_consumption(call, ctx)
+        if consumed:
+            return
+        if names is None:
+            yield self.finding(
+                ctx, call,
+                f"'{chain}(...)' result is discarded: the allocated "
+                f"blocks leak the moment they are handed out — release "
+                f"them, store them on a request, or return them")
+            return
+        for name in names:
+            if not self._name_consumed(name, call, fn, ctx):
+                yield self.finding(
+                    ctx, call,
+                    f"'{chain}(...)' result '{name}' is neither "
+                    f"released nor ownership-transferred on any path "
+                    f"through '{fn.name}': allocated blocks must end "
+                    f"in release(), a request's block list, or a "
+                    f"return to an owning caller")
+
+    def _check_share(self, call: ast.Call, fn: ast.AST, ctx: FileContext,
+                     chain: str) -> Iterator[Finding]:
+        # share() co-owns its ARGUMENT (+1 refcount); the obligation is
+        # on the shared blocks, not on the (None) return value
+        if not call.args or not isinstance(call.args[0], ast.Name):
+            return  # sharing an attribute/expression: owned elsewhere
+        name = call.args[0].id
+        if not self._name_consumed(name, call, fn, ctx):
+            yield self.finding(
+                ctx, call,
+                f"'{chain}({name})' takes co-ownership (+1 refcount) "
+                f"of '{name}' but '{fn.name}' never releases or "
+                f"ownership-transfers it: the extra reference leaks "
+                f"pool capacity")
+
+    def _direct_consumption(self, call: ast.Call, ctx: FileContext
+                            ) -> Tuple[bool, Optional[List[str]]]:
+        """(consumed, bound_names): consumed when the call itself feeds
+        a transfer/release/return; bound_names when an Assign binds the
+        result to plain names that must be checked; (False, None) when
+        the result is discarded."""
+        cur: ast.AST = call
+        for p in ctx.parents(call):
+            if isinstance(p, ast.Call) and p is not call:
+                tail = attr_chain(p.func).split(".")[-1:]
+                if tail and (tail[0] in _TRANSFER_ATTRS
+                             or tail[0] == "release"):
+                    return True, None
+            if isinstance(p, (ast.Return, ast.Yield, ast.YieldFrom)):
+                return True, None
+            if isinstance(p, ast.stmt):
+                if isinstance(p, ast.Assign):
+                    names: List[str] = []
+                    container = False
+                    for t in p.targets:
+                        names_t, cont_t = self._flatten_target(t)
+                        names.extend(names_t)
+                        container |= cont_t
+                    if container:
+                        return True, None
+                    if names:
+                        return False, names
+                    return True, None  # exotic target: stay quiet
+                if isinstance(p, (ast.AnnAssign, ast.NamedExpr)):
+                    t = p.target
+                    if isinstance(t, ast.Name):
+                        return False, [t.id]
+                    return True, None
+                if isinstance(p, ast.Expr):
+                    return False, None  # bare statement: result dropped
+                return True, None  # embedded in other statements: quiet
+            cur = p
+        return True, None
+
+    @staticmethod
+    def _flatten_target(t: ast.AST) -> Tuple[List[str], bool]:
+        """Names bound by an assign target + whether any part stores
+        into a container (attribute/subscript = ownership transfer)."""
+        if isinstance(t, ast.Name):
+            return [t.id], False
+        if isinstance(t, (ast.Attribute, ast.Subscript)):
+            return [], True
+        if isinstance(t, ast.Starred):
+            return Leak01AllocPairing._flatten_target(t.value)
+        if isinstance(t, (ast.Tuple, ast.List)):
+            names: List[str] = []
+            cont = False
+            for e in t.elts:
+                n, c = Leak01AllocPairing._flatten_target(e)
+                names.extend(n)
+                cont |= c
+            return names, cont
+        return [], False
+
+    def _name_consumed(self, name: str, source: ast.Call, fn: ast.AST,
+                       ctx: FileContext) -> bool:
+        for occ in ast.walk(fn):
+            if not (isinstance(occ, ast.Name) and occ.id == name
+                    and isinstance(occ.ctx, ast.Load)):
+                continue
+            if _inside(occ, source, ctx):
+                continue  # the allocating call itself
+            for p in ctx.parents(occ):
+                if isinstance(p, ast.Call):
+                    tail = attr_chain(p.func).split(".")[-1:]
+                    if tail and tail[0] == "release":
+                        return True
+                    if (tail and tail[0] in _TRANSFER_ATTRS
+                            and isinstance(p.func, ast.Attribute)):
+                        return True
+                if isinstance(p, (ast.Return, ast.Yield, ast.YieldFrom)):
+                    return True
+                if isinstance(p, (ast.Assign, ast.AugAssign)):
+                    targets = (p.targets if isinstance(p, ast.Assign)
+                               else [p.target])
+                    if any(isinstance(t, (ast.Attribute, ast.Subscript,
+                                          ast.Name))
+                           for t in targets) and not _inside(
+                               occ, targets[0], ctx):
+                        return True
+                if isinstance(p, ast.stmt):
+                    break
+        return False

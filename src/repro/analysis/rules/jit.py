@@ -22,7 +22,14 @@ from typing import Iterable, List, Set
 
 from repro.analysis.core import BaseRule, FileContext, Finding
 
-__all__ = ["Jit01HostSync", "Jit02Donation"]
+__all__ = [
+    "Jit01HostSync", "Jit02Donation",
+    # Shared vocabulary: the interprocedural layer (analysis/callgraph.py,
+    # analysis/dataflow.py, rules/flow.py) imports these so JIT-01 and the
+    # flow rules can never drift apart on what counts as traced or a sync.
+    "TRACED_FN_PATTERNS", "SYNC_ATTRS", "SYNC_CALLS", "CONVERSIONS",
+    "is_traced_fn_name", "param_names", "attr_chain",
+]
 
 #: Function names whose bodies are traced by jax.jit (engine step impls
 #: and the shared scan body factory). fnmatch patterns.
@@ -34,6 +41,9 @@ _SYNC_ATTRS = {"item", "block_until_ready"}
 _SYNC_CALLS = {("np", "asarray"), ("numpy", "asarray"),
                ("onp", "asarray"), ("jax", "device_get")}
 _CONVERSIONS = {"float", "int", "bool"}
+
+#: attribute reads that are static metadata, never a device sync
+STATIC_ATTRS = ("shape", "ndim", "dtype", "size")
 
 
 def _is_traced_fn_name(name: str) -> bool:
@@ -61,6 +71,15 @@ def _attr_chain(node: ast.AST) -> str:
         parts.append(node.id)
         return ".".join(reversed(parts))
     return ""
+
+
+# public aliases for the interprocedural layer
+is_traced_fn_name = _is_traced_fn_name
+param_names = _param_names
+attr_chain = _attr_chain
+SYNC_ATTRS = _SYNC_ATTRS
+SYNC_CALLS = _SYNC_CALLS
+CONVERSIONS = _CONVERSIONS
 
 
 class Jit01HostSync(BaseRule):

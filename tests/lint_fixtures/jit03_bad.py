@@ -1,0 +1,29 @@
+"""BAD twin for JIT-03: host syncs hidden behind helpers that are
+transitively reachable from a jit-traced step body. JIT-01 cannot see
+any of these (no sync is lexically inside the traced def) — that is the
+point of the interprocedural layer. Expected: 3 findings (one per sync
+site), and zero JIT-01 findings."""
+import numpy as np
+
+
+def _leaf_sync(x):
+    return x.item()                      # JIT-03: root -> _mid -> here
+
+
+def _mid(x):
+    return _leaf_sync(x) + 1
+
+
+def _to_host(mask):
+    return np.asarray(mask)              # JIT-03: root -> here
+
+
+class Engine:
+    def _scale_of(self, v):
+        return float(v)                  # JIT-03: root -> self-method
+
+    def _decode_step_impl(self, params, kv_state, tokens):
+        a = _mid(tokens)
+        b = _to_host(params["mask"])
+        c = self._scale_of(kv_state["k"])
+        return a, b, c

@@ -1,0 +1,32 @@
+"""GOOD twin for JIT-03: the same helper shapes, but every sync either
+reads static metadata, stays on device, or converts an untainted host
+value — the taint conditions must keep all of them quiet."""
+import jax.numpy as jnp
+
+
+def _leaf_shape(x):
+    return int(x.shape[0])               # static metadata, never a sync
+
+
+def _mid(x):
+    return _leaf_shape(x)
+
+
+def _to_device(mask):
+    return jnp.asarray(mask)             # jnp: stays on device
+
+
+def _host_float(n):
+    return float(n)                      # syncs only if its arg is traced
+
+
+class Engine:
+    def _scale_of(self, v):
+        return v * 0.5                   # pure device math
+
+    def _decode_step_impl(self, params, kv_state, tokens):
+        a = _mid(tokens)
+        b = _to_device(params["mask"])
+        c = self._scale_of(kv_state["k"])
+        d = _host_float(self.block_size)  # untainted arg: legal
+        return a, b, c, d

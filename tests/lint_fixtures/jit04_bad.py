@@ -1,0 +1,24 @@
+"""BAD twin for JIT-04: Python control flow on traced values inside a
+jit-traced region — directly in the step body and behind a helper call.
+Expected: 5 findings (if / while / assert / helper-if / short-circuit
+operand)."""
+import jax.numpy as jnp
+
+
+def _pick(x):
+    if x > 0:                            # JIT-04: reached via root call
+        return x
+    return -x
+
+
+class Engine:
+    def _fused_step_impl(self, params, kv_state, tokens, active):
+        mask = jnp.greater(tokens, 0)
+        if mask.any():                   # JIT-04: if on traced value
+            tokens = tokens + 1
+        while active.sum() > 0:          # JIT-04: while on traced value
+            active = active - 1
+        assert tokens.max() >= 0         # JIT-04: assert on traced value
+        y = _pick(params["w"])
+        flag = self.debug and mask.all()  # JIT-04: short-circuit operand
+        return tokens, y, flag

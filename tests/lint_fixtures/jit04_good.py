@@ -1,0 +1,31 @@
+"""GOOD twin for JIT-04: every branch shape the rule must NOT flag —
+config/host branches, `is None`, static shape metadata, dict-emptiness
+truthiness of the state pytrees (container level), helper branches on
+untainted arguments, and data-dependent selection via jnp.where."""
+import jax.numpy as jnp
+
+
+def _clamp(n):
+    if n > 0:                            # untainted at every call site
+        return n
+    return 0
+
+
+class Engine:
+    def _kv_view(self, kv_state):
+        if not kv_state:                 # pytree dict emptiness: host-safe
+            return {}
+        return {k: v * 1 for k, v in kv_state.items()}
+
+    def _fused_step_impl(self, params, kv_state, tokens, inj):
+        if self.cfg.arch == "hybrid":    # host config branch
+            tokens = tokens * 1
+        if inj is None:                  # identity test, not a tracer bool
+            inj = 0
+        if tokens.shape[0] > 8:          # static shape metadata
+            tokens = tokens[:8]
+        kv = self._kv_view(kv_state)
+        n = _clamp(self.block_size)      # helper branch on host int
+        w = jnp.where(tokens > 0, tokens, n)   # traced select, no branch
+        assert tokens.ndim == 2          # static metadata assert
+        return kv, w

@@ -1,0 +1,22 @@
+"""BAD twin for JIT-05: jit-traced code capturing mutable host state.
+Case A: a factory local list read by the traced closure and mutated
+AFTER the closure is defined. Case B: a mutable self attribute built in
+__init__, mutated by a host-side method, read inside the traced scope.
+Expected: 2 findings (both reads sit on the same line)."""
+
+
+class Engine:
+    def __init__(self):
+        self.debug_rows = []             # mutable attr, mutated in _poll
+
+    def _poll(self):
+        self.debug_rows.append("tick")
+
+    def _make_stack_body(self, scales):
+        coeffs = []
+
+        def body(x, xs):
+            return x * coeffs[0] + self.debug_rows[0], xs
+
+        coeffs.append(1.0)               # mutated after body is defined
+        return body

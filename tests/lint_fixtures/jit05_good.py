@@ -1,0 +1,16 @@
+"""GOOD twin for JIT-05: the legal capture shapes — a comprehension-
+built table (constructed once, never mutated after the closure exists)
+and an immutable-by-usage attribute (never mutated outside __init__)."""
+
+
+class Engine:
+    def __init__(self):
+        self.scale_table = [1.0, 2.0]    # literal, but never mutated
+
+    def _make_stack_body(self, scales):
+        coeffs = [s + 0.0 for s in scales]   # built once, pre-closure
+
+        def body(x, xs):
+            return x * coeffs[0] + self.scale_table[0], xs
+
+        return body

@@ -1,0 +1,20 @@
+"""BAD twin for LEAK-01 (serving/-scoped): allocator results that reach
+no release, no container, and no caller. Expected: 3 findings."""
+
+
+class Scheduler:
+    def __init__(self, alloc):
+        self.alloc = alloc
+
+    def grow(self, req, need):
+        fresh = self.alloc.alloc(need)   # LEAK-01: bound, never consumed
+        if len(fresh) < need:
+            return False
+        return True
+
+    def warm(self):
+        self.alloc.alloc(1)              # LEAK-01: result discarded
+
+    def adopt(self, req, cached):
+        self.alloc.share(cached)         # LEAK-01: +1 ref, never owned
+        req.ready = True

@@ -1,0 +1,30 @@
+"""GOOD twin for LEAK-01: every sanctioned consumption shape — release,
+ownership transfer into a request's block list (extend / subscript /
+attribute assign), direct-argument nesting, and return-to-caller."""
+
+
+class Scheduler:
+    def __init__(self, alloc):
+        self.alloc = alloc
+
+    def grow(self, req, need):
+        fresh = self.alloc.alloc(need)
+        req.blocks.extend(fresh)         # transferred: request owns them
+
+    def shrink(self, req):
+        self.alloc.release(req.blocks)
+
+    def cow(self, req, bidx):
+        [fresh] = self.alloc.alloc(1)
+        req.blocks[bidx] = fresh         # transferred: subscript store
+
+    def adopt(self, req, cached):
+        self.alloc.share(cached)
+        fresh = self.alloc.alloc(2)
+        req.blocks = list(cached) + fresh    # both transferred
+
+    def probe(self, req):
+        return self.alloc.alloc(1)       # returned: the caller owns
+
+    def direct(self, req):
+        req.blocks.extend(self.alloc.alloc(3))   # consumed in place

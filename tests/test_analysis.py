@@ -44,14 +44,18 @@ def rule_ids(report):
 # Rule catalogue sanity
 # ---------------------------------------------------------------------------
 
-EXPECTED_RULES = {"JIT-01", "JIT-02", "NUM-01", "NUM-02", "PAL-01",
-                  "CACHE-01", "HOST-01", "LIFE-01"}
+EXPECTED_RULES = {"JIT-01", "JIT-02", "JIT-03", "JIT-04", "JIT-05",
+                  "NUM-01", "NUM-02", "PAL-01",
+                  "CACHE-01", "HOST-01", "LIFE-01", "LEAK-01"}
 
 
 def test_registry_ships_the_documented_rules():
     assert set(rules_by_id()) == EXPECTED_RULES
     for r in ALL_RULES:
-        assert r.title and r.rationale and r.node_types
+        assert r.title and r.rationale
+        # per-node rules declare node_types; project-scope (dataflow)
+        # rules run from project_visit instead
+        assert r.node_types or r.project_scope
 
 
 # ---------------------------------------------------------------------------
@@ -62,6 +66,10 @@ PAIRS = [
     # (rule id, bad fixture, expected count, good fixture)
     ("JIT-01", "jit01_bad.py", 6, "jit01_good.py"),
     ("JIT-02", "jit02_bad.py", 2, "jit02_good.py"),
+    ("JIT-03", "jit03_bad.py", 3, "jit03_good.py"),
+    ("JIT-04", "jit04_bad.py", 5, "jit04_good.py"),
+    ("JIT-05", "jit05_bad.py", 2, "jit05_good.py"),
+    ("LEAK-01", "serving/leak01_bad.py", 3, "serving/leak01_good.py"),
     ("NUM-01", "num01_bad.py", 2, "num01_good.py"),
     ("NUM-02", "num02_bad.py", 2, "num02_good.py"),
     ("PAL-01", "pal01_bad.py", 2, "pal01_good.py"),
